@@ -1,0 +1,51 @@
+"""Shared benchmark machinery.
+
+Every benchmark mirrors one paper table/figure (DESIGN.md §8) and prints
+``name,us_per_call,derived`` CSV rows. Benchmarks run on a small in-process
+mesh (8 fake devices via subprocess guard) or single device — they measure
+the WSMC machinery itself (planning cost, prediction accuracy), not TPU
+wall-clock, which the roofline covers.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import sys
+import time
+from typing import Callable, List, Tuple
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def timed(name: str, fn: Callable, *args, repeat: int = 1, derived: str = "",
+          **kw):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    us = (time.perf_counter() - t0) / repeat * 1e6
+    ROWS.append((name, us, derived))
+    return out
+
+
+def emit(name: str, us: float, derived: str = ""):
+    ROWS.append((name, us, derived))
+
+
+def flush():
+    for name, us, derived in ROWS:
+        print(f"{name},{us:.1f},{derived}")
+    ROWS.clear()
+
+
+def small_mesh(shape=(4, 2), axes=("data", "model")):
+    from repro.launch.mesh import make_mesh
+    return make_mesh(shape, axes)
+
+
+def ensure_devices(n: int = 8):
+    """Benchmarks that need a mesh re-exec themselves with fake devices."""
+    import jax
+    if len(jax.devices()) >= n:
+        return True
+    return False

@@ -1,0 +1,57 @@
+"""Paper Fig. 2 — memory capacity requirement vs input size (4 workloads ×
+input ladder): measured static peak vs WSMC prediction (paper-factor and
+fitted modes). Also validates the predictor's remat scalers.
+
+Run inside an 8-device process (benchmarks.run handles that).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, flush
+
+ARCHS = ["h2o-danube-1.8b", "mixtral-8x7b", "xlstm-1.3b", "gemma3-12b"]
+SEQS = [64, 128, 256, 512]
+
+
+def main():
+    import jax
+    from repro.configs import get_config
+    from repro.configs.base import ShapeConfig, TRAIN
+    from repro.core import profiler as PF
+    from repro.core.classifier import classify_profiles
+    from repro.core.predictor import MemoryPlan, predict
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((4, 2), ("data", "model"))
+    plan = MemoryPlan()
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        profiles = []
+        for seq in SEQS:
+            shape = ShapeConfig(f"t{seq}", TRAIN, seq, 8)
+            t0 = time.perf_counter()
+            p = PF.profile_point(cfg, shape, mesh, plan)
+            us = (time.perf_counter() - t0) * 1e6
+            profiles.append(p)
+            emit(f"fig2.measure.{arch}.seq{seq}", us,
+                 f"peak_bytes={p.peak_bytes:.0f};temp={p.transient_bytes:.0f}"
+                 f";alpha={p.alpha:.2f}")
+        # fit on the first 3 points, predict the 4th (paper's online phase)
+        cls = classify_profiles(profiles[:3])
+        target = ShapeConfig("t", TRAIN, SEQS[-1], 8)
+        for mode in ("paper", "fitted"):
+            pred = predict(cfg, target, plan, cls, dict(mesh.shape),
+                           mode=mode)
+            actual = profiles[-1].peak_bytes
+            err = (pred.resident_bytes + pred.transient_bytes) / max(
+                profiles[-1].argument_bytes + profiles[-1].transient_bytes, 1)
+            emit(f"fig2.predict.{arch}.{mode}", 0.0,
+                 f"category={cls.category.value};pred_capacity="
+                 f"{pred.capacity_bytes:.0f};measured_peak={actual:.0f};"
+                 f"pred_over_measured={err:.2f}")
+    flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Paper Fig. 3 — memory requirement across workloads at the same input
+size: all 10 archs (reduced), matched token budget, measured per-device
+peak + classification. Paper Fig. 6 (shuffle/transient bytes across
+workloads) falls out of the same sweep and is emitted alongside.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, flush
+
+
+def main():
+    from repro.configs import ARCH_IDS, get_config
+    from repro.configs.base import ShapeConfig, TRAIN
+    from repro.core import profiler as PF
+    from repro.core.classifier import classify_profiles
+    from repro.core.predictor import MemoryPlan
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((4, 2), ("data", "model"))
+    plan = MemoryPlan()
+    shape = ShapeConfig("t", TRAIN, 256, 8)   # same input size for all
+    for arch in ARCH_IDS:
+        cfg = get_config(arch).reduced()
+        t0 = time.perf_counter()
+        ladder = PF.profile_ladder(cfg, shape, mesh, plan, n_points=3,
+                                   base_seq=64)
+        us = (time.perf_counter() - t0) * 1e6
+        p = ladder[-1]
+        cls = classify_profiles(ladder)
+        emit(f"fig3.peak.{arch}", us,
+             f"peak_bytes={p.peak_bytes:.0f};category={cls.category.value};"
+             f"alpha={cls.alpha:.2f};inc={cls.inc:.2f}")
+        emit(f"fig6.transient.{arch}", 0.0,
+             f"temp_bytes={p.transient_bytes:.0f};"
+             f"input_bytes={p.input_bytes:.0f};"
+             f"stage_temp={p.stage_transient_bytes:.0f}")
+    flush()
+
+
+if __name__ == "__main__":
+    main()

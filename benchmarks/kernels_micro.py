@@ -1,0 +1,77 @@
+"""Kernel microbenchmarks: blocked-jnp backends vs naive reference on CPU
+(wall time + allclose), plus interpret-mode validation cost. On TPU these
+rows become the pallas-vs-XLA comparison."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, flush
+
+
+def main():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs.base import BlockSpec
+    from repro.kernels import ops
+    from repro.models import attention as A
+
+    key = jax.random.PRNGKey(0)
+    b, s, K, G, hd = 2, 1024, 4, 2, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, K, G, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, K, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, K, hd), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    for name, blk in [("causal", BlockSpec()),
+                      ("window256", BlockSpec(window=256)),
+                      ("chunk256", BlockSpec(chunk=256))]:
+        st = A.AttnSettings(backend="blocked", q_block=256, kv_block=256)
+        f = jax.jit(lambda q, k, v, blk=blk, st=st:
+                    A._seq_attention(q, k, v, pos, pos, blk, st))
+        out = f(q, k, v)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = f(q, k, v)
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        fn = jax.jit(lambda q, k, v, blk=blk:
+                     A._naive(q, k, v, pos, pos, blk))
+        ref = fn(q, k, v)
+        err = float(jnp.abs(out - ref).max())
+        emit(f"kernels.attn_blocked.{name}", us, f"max_err={err:.1e};s={s}")
+
+    # mLSTM chunked vs sequential ref
+    h, dk, dv = 2, 32, 32
+    ks = jax.random.split(key, 5)
+    q2 = jax.random.normal(ks[0], (b, s, h, dk)) * 0.5
+    k2 = jax.random.normal(ks[1], (b, s, h, dk)) * 0.5
+    v2 = jax.random.normal(ks[2], (b, s, h, dv))
+    ig = jax.random.normal(ks[3], (b, s, h))
+    fg = jax.random.normal(ks[4], (b, s, h)) + 2.0
+    fb = jax.jit(lambda *a: ops.mlstm_scan(*a, chunk=128,
+                                           backend="blocked")[0])
+    out = fb(q2, k2, v2, ig, fg)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = fb(q2, k2, v2, ig, fg)
+    jax.block_until_ready(out)
+    us = (time.perf_counter() - t0) * 1e6
+    fr = jax.jit(lambda *a: ops.mlstm_scan(*a, backend="ref")[0])
+    refo = fr(q2, k2, v2, ig, fg)
+    jax.block_until_ready(refo)
+    t0 = time.perf_counter()
+    refo = fr(q2, k2, v2, ig, fg)
+    jax.block_until_ready(refo)
+    us_ref = (time.perf_counter() - t0) * 1e6
+    err = float(jnp.abs(out - refo).max())
+    emit("kernels.mlstm_chunked", us,
+         f"max_err={err:.1e};sequential_ref_us={us_ref:.0f};"
+         f"speedup={us_ref/max(us,1):.1f}x")
+    flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure (DESIGN.md §8).
+
+Prints ``name,us_per_call,derived`` CSV. Mesh-dependent benchmarks run in
+subprocesses with 8 fake CPU devices so this process keeps the default
+single device (dry-run rule).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+MESH_BENCHES = [
+    "benchmarks.fig2_mem_vs_input",
+    "benchmarks.fig3_mem_across_workloads",
+    "benchmarks.table4_planned_configs",
+    "benchmarks.fig7_fig8_policies",
+]
+LOCAL_BENCHES = [
+    "benchmarks.kernels_micro",
+]
+
+
+def _run_subprocess(module: str) -> int:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root,
+         env.get("PYTHONPATH", "")]).rstrip(os.pathsep)
+    proc = subprocess.run([sys.executable, "-m", module], env=env,
+                          capture_output=True, text=True, timeout=3000)
+    sys.stdout.write(proc.stdout)
+    if proc.returncode != 0:
+        sys.stderr.write(proc.stderr[-4000:])
+        print(f"{module},0.0,FAILED")
+    return proc.returncode
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for module in MESH_BENCHES:
+        failures += _run_subprocess(module) != 0
+    for module in LOCAL_BENCHES:
+        import importlib
+        importlib.import_module(module).main()
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

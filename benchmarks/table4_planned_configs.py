@@ -1,0 +1,42 @@
+"""Paper Table IV — WSMC-guided memory capacity configurations: per
+workload × 3 input sizes, the planned knobs + predicted capacity
+(the paper's Memory Configuration column).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, flush
+
+
+def main():
+    from repro.configs import ARCH_IDS, get_config
+    from repro.configs.base import ShapeConfig, TRAIN
+    from repro.core import planner as PL
+    from repro.core import profiler as PF
+    from repro.core.classifier import classify_profiles
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((4, 2), ("data", "model"))
+    for arch in ARCH_IDS:
+        cfg = get_config(arch).reduced()
+        base = ShapeConfig("t", TRAIN, 256, 8)
+        t0 = time.perf_counter()
+        cls = classify_profiles(
+            PF.profile_ladder(cfg, base, mesh, n_points=3, base_seq=64))
+        profile_us = (time.perf_counter() - t0) * 1e6
+        for seq in (128, 256, 512):
+            shape = ShapeConfig(f"t{seq}", TRAIN, seq, 8)
+            t0 = time.perf_counter()
+            dec = PL.wsmc_plan(cfg, shape, cls, dict(mesh.shape))
+            us = (time.perf_counter() - t0) * 1e6
+            emit(f"table4.{arch}.seq{seq}", us,
+                 f"category={cls.category.value};remat={dec.plan.remat};"
+                 f"micro={dec.plan.microbatches};opt={dec.plan.optimizer};"
+                 f"capacity_mb={dec.prediction.capacity_bytes/2**20:.1f}")
+        emit(f"table4.{arch}.profile_cost", profile_us, "online_phase_ladder")
+    flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: WSMC-JAX — workload-specific memory capacity planning for a
+multi-pod JAX LM framework (reproduction of Liang et al., 2017)."""
+
+__version__ = "1.0.0"

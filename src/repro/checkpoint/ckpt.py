@@ -1,0 +1,142 @@
+"""Sharded, atomic, async checkpointing with cross-mesh resharding restore.
+
+Layout:  <dir>/step_<n>/manifest.json + arrays.npz   (tmp dir + rename commit)
+
+- save(): device_get happens synchronously (consistent snapshot), serialization
+  runs on a background thread (async=True) so the train loop overlaps I/O.
+- restore(): returns numpy or device arrays; when a mesh + spec tree is given,
+  leaves are jax.device_put with their NamedSharding — restoring onto a
+  *different* mesh than the one that saved is the elastic-restart path
+  (tested: 8 -> 4 devices).
+- Fault tolerance: latest_step() skips uncommitted (tmp) dirs; a corrupt or
+  partial save never shadows the previous good step.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_SEP = "//"
+
+# npz has no bfloat16: store a uint16 view and the true dtype in the manifest.
+_VIEW_DTYPES = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
+
+
+def _to_storable(arr: np.ndarray):
+    name = str(arr.dtype)
+    if name in _VIEW_DTYPES:
+        return arr.view(_VIEW_DTYPES[name][1]), name
+    return arr, name
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str):
+    if dtype_name in _VIEW_DTYPES:
+        return arr.view(_VIEW_DTYPES[dtype_name][0])
+    return arr
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree, extra: Optional[dict] = None,
+         async_: bool = False) -> threading.Thread | None:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    raw = {k: np.asarray(jax.device_get(v)) for k, v in _flatten(tree).items()}
+    flat = {}
+    dtypes = {}
+    for k, v in raw.items():
+        flat[k], dtypes[k] = _to_storable(v)
+    meta = {
+        "step": step,
+        "extra": extra or {},
+        "leaves": {k: {"shape": list(raw[k].shape), "dtype": dtypes[k]}
+                   for k in raw},
+    }
+
+    def _write():
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"),
+                 **{k: v for k, v in flat.items()})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)  # atomic commit
+
+    if async_:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return t
+    _write()
+    return None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "manifest.json")):
+                steps.append(int(name[len("step_"):]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, target_tree, step: Optional[int] = None,
+            mesh=None, spec_tree=None):
+    """Restore into the structure of `target_tree` (abstract or concrete).
+
+    With (mesh, spec_tree): leaves are placed sharded — works across mesh
+    sizes (elastic resharding).
+    Returns (tree, manifest dict).
+    """
+    from jax.sharding import NamedSharding
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = np.load(os.path.join(d, "arrays.npz"))
+
+    flat_target = _flatten(target_tree)
+    flat_specs = _flatten(spec_tree) if spec_tree is not None else {}
+    out = {}
+    for key, ref in flat_target.items():
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = _from_storable(arrays[key],
+                             manifest["leaves"][key]["dtype"])
+        if tuple(arr.shape) != tuple(ref.shape):
+            raise ValueError(f"{key}: ckpt shape {arr.shape} != {ref.shape}")
+        arr = arr.astype(ref.dtype)
+        if mesh is not None and key in flat_specs:
+            out[key] = jax.device_put(arr,
+                                      NamedSharding(mesh, flat_specs[key]))
+        else:
+            out[key] = jax.numpy.asarray(arr)
+
+    # unflatten by rebuilding along target structure
+    paths, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    keys = [_SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                      for p in path) for path, _ in paths]
+    leaves = [out[k] for k in keys]
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest

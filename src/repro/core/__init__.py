@@ -1,0 +1,16 @@
+"""WSMC — the paper's contribution: workload-specific memory capacity
+configuration via expansion-ratio profiling, classification, closed-form
+capacity prediction, and knob planning (Liang, Chang, Su 2017; DESIGN.md §2).
+"""
+from repro.core.classifier import (  # noqa: F401
+    Category, Classification, FACTOR_SHUF, classify, classify_profiles,
+)
+from repro.core.expansion import (  # noqa: F401
+    MemoryProfile, expansion_ratio, increasing_rate, mean_expansion_ratio,
+)
+from repro.core.planner import (  # noqa: F401
+    PlanDecision, candidate_plans, default_plan, oracle_plan, wsmc_plan,
+)
+from repro.core.predictor import (  # noqa: F401
+    CapacityPrediction, MemoryPlan, min_devices, predict,
+)

@@ -1,0 +1,123 @@
+"""Capacity planner — the online phase's decision step: turn a capacity
+prediction into the workload's memory configuration (paper §III-E).
+
+Three policies, mirroring the paper's evaluation (§IV):
+  default_plan — the static conservative configuration every workload gets
+                 without WSMC: full remat, deep microbatching, factored
+                 optimizer, full-HBM capacity request. Always fits; slowest.
+                 (The analogue of Spark's static 2 GB executor default.)
+  wsmc_plan    — walk the knob lattice fastest-first, pick the first plan
+                 whose *predicted* capacity fits the HBM budget.
+  oracle_plan  — the paper's manually-found "proper configuration":
+                 exhaustive search where each candidate is verified by a
+                 real .lower().compile() + memory_analysis().
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+from repro import hw as HW
+from repro.configs.base import DECODE, PREFILL, TRAIN, ModelConfig, ShapeConfig
+from repro.core.classifier import Classification
+from repro.core.predictor import CapacityPrediction, MemoryPlan, predict
+
+REMATS = ("none", "dots", "full")
+OPTIMIZERS = ("adamw_f32", "adamw_bf16", "adafactor")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanDecision:
+    plan: MemoryPlan
+    prediction: CapacityPrediction
+    policy: str
+    considered: int
+
+
+def _kv_default(cfg: ModelConfig, model_size: int = 16) -> str:
+    """KV-head sharding only when heads divide the model axis; otherwise the
+    ring cache shards its sequence dim (padding/replication would multiply
+    the decode-resident cache — see musicgen kv=24 in EXPERIMENTS §Perf)."""
+    return "heads" if cfg.n_kv_heads % model_size == 0 else "seq"
+
+
+def candidate_plans(cfg: ModelConfig, shape: ShapeConfig,
+                    model_size: int = 16) -> List[MemoryPlan]:
+    """The knob lattice, ordered fastest-first by step_time_penalty."""
+    kv = _kv_default(cfg, model_size)
+    if shape.kind != TRAIN:
+        return [MemoryPlan(remat="none", microbatches=1,
+                           optimizer="adamw_f32", kv_shard=kv)]
+    micros = [m for m in (1, 2, 4, 8, 16, 32, 64)
+              if shape.global_batch % m == 0]
+    cands = [MemoryPlan(remat=r, microbatches=m, optimizer=o, kv_shard=kv)
+             for r in REMATS for m in micros for o in OPTIMIZERS]
+    return sorted(cands, key=lambda p: p.step_time_penalty())
+
+
+def default_plan(cfg: ModelConfig, shape: ShapeConfig,
+                 model_size: int = 16) -> MemoryPlan:
+    kv = _kv_default(cfg, model_size)
+    if shape.kind != TRAIN:
+        return MemoryPlan(remat="none", microbatches=1,
+                          optimizer="adamw_f32", kv_shard=kv)
+    micros = [m for m in (32, 16, 8, 4, 2, 1) if shape.global_batch % m == 0]
+    return MemoryPlan(remat="full", microbatches=micros[0],
+                      optimizer="adafactor", kv_shard=kv)
+
+
+def wsmc_plan(cfg: ModelConfig, shape: ShapeConfig, cls: Classification,
+              mesh_shape: dict, mode: str = "paper",
+              hw: HW.HardwareSpec = HW.TPU_V5E,
+              factors: Optional[dict] = None) -> PlanDecision:
+    """Paper §III-E: predict per candidate, take the fastest that fits.
+    `factors` is the offline-calibrated Table III (profiler.calibrated_factors)."""
+    dp = mesh_shape.get("pod", 1) * mesh_shape.get("data", 1)
+    model_size = mesh_shape.get("model", 16)
+
+    def _divisible(p):
+        per_micro = shape.global_batch // p.microbatches
+        if shape.kind == TRAIN:
+            # strict: a per-micro batch below dp replicates compute/memory
+            return per_micro % dp == 0
+        # serving: bs=1 long-context cells replicate the batch axis benignly
+        return per_micro % dp == 0 or per_micro < dp
+
+    all_cands = candidate_plans(cfg, shape, model_size)
+    cands = [p for p in all_cands if _divisible(p)] or all_cands[-1:]
+    for i, plan in enumerate(cands):
+        pred = predict(cfg, shape, plan, cls, mesh_shape, mode, hw, factors)
+        if pred.fits:
+            return PlanDecision(plan=plan, prediction=pred, policy="wsmc",
+                                considered=i + 1)
+    # nothing fits: return the safest with its (over-budget) prediction
+    plan = cands[-1]
+    return PlanDecision(plan=plan,
+                        prediction=predict(cfg, shape, plan, cls, mesh_shape,
+                                           mode, hw, factors),
+                        policy="wsmc_overflow", considered=len(cands))
+
+
+def oracle_plan(cfg: ModelConfig, shape: ShapeConfig,
+                measure: Callable[[MemoryPlan], float],
+                hw: HW.HardwareSpec = HW.TPU_V5E,
+                max_candidates: Optional[int] = None) -> Tuple[MemoryPlan,
+                                                               float, int]:
+    """The 'proper configuration': compile-verify candidates fastest-first
+    until one's measured peak fits. `measure(plan)` returns peak bytes/device
+    (a real compile — expensive; this is exactly the cost WSMC avoids).
+    Returns (plan, measured_peak, n_compiles)."""
+    cands = candidate_plans(cfg, shape)
+    if max_candidates:
+        cands = cands[:max_candidates]
+    budget = hw.hbm_bytes / HW.CAPACITY_HEADROOM - hw.reserved_bytes
+    n = 0
+    best = None
+    for plan in cands:
+        n += 1
+        peak = measure(plan)
+        if peak <= budget:
+            return plan, peak, n
+        if best is None or peak < best[1]:
+            best = (plan, peak)
+    return best[0], best[1], n

@@ -1,0 +1,43 @@
+"""TPU v5e hardware constants used by the roofline model and the WSMC planner.
+
+The container runs on CPU; TPU v5e is the *target* platform. All capacity
+planning and roofline terms are expressed against these constants.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops_bf16: float      # FLOP/s per chip
+    hbm_bytes: int              # HBM capacity per chip
+    hbm_bw: float               # bytes/s per chip
+    ici_link_bw: float          # bytes/s per ICI link (one direction)
+    ici_links_per_chip: int     # links on the 2-D torus
+    vmem_bytes: int             # VMEM per core (Pallas tiling budget)
+    # Runtime reserve: XLA runtime + infeed/outfeed scratch. Plays the role of
+    # the paper's "Reserved Memory" (RM, 300MB in Spark's default).
+    reserved_bytes: int = 300 * 1024 * 1024
+
+
+TPU_V5E = HardwareSpec(
+    name="tpu_v5e",
+    peak_flops_bf16=197e12,
+    hbm_bytes=16 * 1024**3,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    ici_links_per_chip=4,
+    vmem_bytes=128 * 1024 * 1024,
+)
+
+# The paper's Eq. 11 headroom factor: capacity = spark_mem * 4/3 + RM.
+# We keep 4/3 as the HBM fragmentation / runtime-scratch margin.
+CAPACITY_HEADROOM = 4.0 / 3.0
+
+
+def capacity_from_requirement(resident_bytes: float, transient_bytes: float,
+                              hw: HardwareSpec = TPU_V5E) -> float:
+    """Paper Eq. 11: Mem_cap = Mem_spark * 4/3 + RM, per device."""
+    return (resident_bytes + transient_bytes) * CAPACITY_HEADROOM + hw.reserved_bytes

@@ -1,0 +1,2 @@
+# Pallas TPU kernels: flash_attention, decode_attention, mlstm_scan —
+# each with a jit-wrapped dispatcher (ops.py) and a pure-jnp oracle (ref.py).

@@ -1,0 +1,101 @@
+"""Pallas TPU decode attention: one query token per sequence against a
+blocked ring-buffer KV cache, running log-sum-exp merge across KV blocks.
+
+The same (m, l, acc) merge algebra is reused by the sequence-parallel decode
+path (parallel/sp.py) to combine per-shard partial attentions — this kernel
+is the single-device version of that schedule.
+
+Grid: (batch, kv_blocks) — kv blocks iterate sequentially (innermost), the
+softmax state lives in VMEM scratch. All heads are processed per grid cell
+(q is tiny: [K, G, hd]).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _SCRATCH = lambda shape: pltpu.VMEM(shape, jnp.float32)
+except Exception:  # pragma: no cover
+    _SCRATCH = lambda shape: pl.MemorySpace.ANY(shape, jnp.float32)
+
+NEG_INF = -1e30
+
+
+def _kernel(pos_ref, cpos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *,
+            scale: float, window: Optional[int], chunk: Optional[int],
+            nl: int):
+    li = pl.program_id(1)
+
+    @pl.when(li == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale         # [K, G, hd]
+    k = k_ref[0].astype(jnp.float32)                 # [Lb, K, hd]
+    v = v_ref[0].astype(jnp.float32)
+    pos = pos_ref[0, 0]                              # scalar
+    cpos = cpos_ref[0, :]                            # [Lb]
+    s = jnp.einsum("kgh,lkh->kgl", q, k)             # [K, G, Lb]
+    mask = (cpos <= pos) & (cpos >= 0)
+    if window is not None:
+        mask &= cpos > pos - window
+    if chunk is not None:
+        mask &= (cpos // chunk) == (pos // chunk)
+    s = jnp.where(mask[None, None, :], s, NEG_INF)
+    m_prev = m_ref[...]                              # [K, G]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.where(mask[None, None, :], jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+        "kgl,lkh->kgh", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(li == nl - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[..., None]).astype(o_ref.dtype)
+
+
+def decode_attention_fwd(q, k_cache, v_cache, cache_pos, positions, *,
+                         window: Optional[int] = None,
+                         chunk: Optional[int] = None,
+                         kv_block: int = 512, interpret: bool = False):
+    """q [b,K,G,hd]; caches [b,L,K,hd]; cache_pos [b,L]; positions [b]."""
+    b, K, G, hd = q.shape
+    L = k_cache.shape[1]
+    kv_block = min(kv_block, L)
+    assert L % kv_block == 0, (L, kv_block)
+    nl = L // kv_block
+    scale = 1.0 / np.sqrt(hd)
+    kernel = functools.partial(_kernel, scale=scale, window=window,
+                               chunk=chunk, nl=nl)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nl),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, li: (bi, 0)),
+            pl.BlockSpec((1, kv_block), lambda bi, li: (bi, li)),
+            pl.BlockSpec((1, K, G, hd), lambda bi, li: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, kv_block, K, hd), lambda bi, li: (bi, li, 0, 0)),
+            pl.BlockSpec((1, kv_block, K, hd), lambda bi, li: (bi, li, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, K, G, hd), lambda bi, li: (bi, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, K, G, hd), q.dtype),
+        scratch_shapes=[
+            _SCRATCH((K, G)),
+            _SCRATCH((K, G)),
+            _SCRATCH((K, G, hd)),
+        ],
+        interpret=interpret,
+    )(positions.reshape(b, 1), cache_pos, q, k_cache, v_cache)

@@ -1,0 +1,141 @@
+"""Pallas TPU flash-attention (forward): blocked online-softmax with causal /
+sliding-window / chunked-local masks and GQA head mapping.
+
+TPU adaptation (DESIGN.md §6): the grid's innermost dim iterates KV blocks
+*sequentially* on TPU, so the running (m, l, acc) state lives in VMEM scratch
+across grid steps — no HBM round-trips for the softmax state. Block shapes
+are MXU-aligned (multiples of 128 where dims allow). Fully-masked KV blocks
+are skipped via pl.when on the block-level causal/window bounds.
+
+Contiguous positions are assumed (qpos/kpos ascending); the mask refs still
+make padding (-1) exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+try:  # pltpu provides typed VMEM scratch; interpret mode works on CPU
+    from jax.experimental.pallas import tpu as pltpu
+    _SCRATCH = lambda shape: pltpu.VMEM(shape, jnp.float32)
+except Exception:  # pragma: no cover
+    _SCRATCH = lambda shape: pl.MemorySpace.ANY(shape, jnp.float32)
+
+NEG_INF = -1e30
+
+
+def _kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+            m_ref, l_ref, acc_ref, *,
+            scale: float, window: Optional[int], chunk: Optional[int],
+            q_block: int, kv_block: int, nk: int):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Block-level skip bounds (contiguous positions): block is live unless
+    # entirely above the diagonal or entirely outside the window/chunk.
+    q_lo = qi * q_block
+    q_hi = q_lo + q_block - 1
+    k_lo = ki * kv_block
+    live = k_lo <= q_hi
+    reach = window if window is not None else (chunk if chunk is not None else None)
+    if reach is not None:
+        k_hi = k_lo + kv_block - 1
+        live &= k_hi >= q_lo - reach
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32) * scale    # [qb, hd]
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # [kb, hd]
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        qp = qpos_ref[0, :]                                   # [qb]
+        kp = kpos_ref[0, :]                                   # [kb]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        mask = (kp[None, :] <= qp[:, None]) & (kp[None, :] >= 0)
+        if window is not None:
+            mask &= kp[None, :] > qp[:, None] - window
+        if chunk is not None:
+            mask &= (kp[None, :] // chunk) == (qp[:, None] // chunk)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, :, 0, :] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+        ).astype(o_ref.dtype)
+        # row log-sum-exp (saved for the backward kernels)
+        lse_ref[0, :, 0] = m_ref[...] + jnp.log(
+            jnp.maximum(l_ref[...], 1e-30))
+
+
+def flash_attention_fwd(q, k, v, qpos, kpos, *,
+                        window: Optional[int] = None,
+                        chunk: Optional[int] = None,
+                        q_block: int = 512, kv_block: int = 512,
+                        interpret: bool = False, return_lse: bool = False):
+    """q [b,s,H,hd]; k/v [b,s,K,hd]; qpos/kpos [b,s] -> out [b,s,H,hd]
+    (+ lse [b,s,H] when return_lse — consumed by flash_attention_bwd)."""
+    b, s, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    q_block = min(q_block, s)
+    kv_block = min(kv_block, s)
+    assert s % q_block == 0 and s % kv_block == 0, (s, q_block, kv_block)
+    nq, nk = s // q_block, s // kv_block
+    grid = (b, H, nq, nk)
+    scale = 1.0 / np.sqrt(hd)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, window=window, chunk=chunk,
+        q_block=q_block, kv_block=kv_block, nk=nk)
+
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block), lambda bi, hi, qi, ki: (bi, qi)),
+            pl.BlockSpec((1, kv_block), lambda bi, hi, qi, ki: (bi, ki)),
+            pl.BlockSpec((1, q_block, 1, hd),
+                         lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, kv_block, 1, hd),
+                         lambda bi, hi, qi, ki: (bi, ki, hi // G, 0)),
+            pl.BlockSpec((1, kv_block, 1, hd),
+                         lambda bi, hi, qi, ki: (bi, ki, hi // G, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_block, 1, hd),
+                         lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, q_block, 1),
+                         lambda bi, hi, qi, ki: (bi, qi, hi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, H, hd), q.dtype),
+            jax.ShapeDtypeStruct((b, s, H), jnp.float32),
+        ],
+        scratch_shapes=[
+            _SCRATCH((q_block,)),       # m
+            _SCRATCH((q_block,)),       # l
+            _SCRATCH((q_block, hd)),    # acc
+        ],
+        interpret=interpret,
+    )(qpos, kpos, q, k, v)
+    return (out, lse) if return_lse else out

@@ -1,0 +1,131 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: small-shape, no tiling, f32 math.
+Kernel tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Attention (forward) oracle — GQA, causal + window + chunk masks
+# ---------------------------------------------------------------------------
+
+def _mask(qpos, kpos, window: Optional[int], chunk: Optional[int]):
+    q = qpos[..., :, None].astype(jnp.int32)
+    k = kpos[..., None, :].astype(jnp.int32)
+    m = (k <= q) & (k >= 0)
+    if window is not None:
+        m &= k > q - window
+    if chunk is not None:
+        m &= (k // chunk) == (q // chunk)
+    return m
+
+
+def flash_attention_ref(q, k, v, qpos, kpos,
+                        window: Optional[int] = None,
+                        chunk: Optional[int] = None):
+    """q [b,s,K,G,hd]; k/v [b,s,K,hd]; qpos/kpos [b,s] -> [b,s,K,G,hd]."""
+    hd = q.shape[-1]
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    msk = _mask(qpos, kpos, window, chunk)
+    s = jnp.where(msk[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_pos, positions,
+                         window: Optional[int] = None,
+                         chunk: Optional[int] = None):
+    """q [b,K,G,hd]; caches [b,L,K,hd]; cache_pos [b,L]; positions [b]."""
+    hd = q.shape[-1]
+    scale = 1.0 / np.sqrt(hd)
+    s = jnp.einsum("bkgh,blkh->bkgl", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    msk = _mask(positions[:, None], cache_pos, window, chunk)[:, 0]  # [b, L]
+    s = jnp.where(msk[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgl,blkh->bkgh", p, v_cache.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM oracle — per-step stabilized recurrence (xLSTM Eq. 19-27 form)
+# ---------------------------------------------------------------------------
+
+def mlstm_ref(q, k, v, i_gate, f_gate, initial_state=None):
+    """Sequential stabilized mLSTM.
+
+    q, k [b, s, h, dk]; v [b, s, h, dv]; i_gate/f_gate [b, s, h] (pre-act).
+    Returns (out [b, s, h, dv], state (C [b,h,dk,dv], n [b,h,dk], m [b,h])).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    f32 = jnp.float32
+    if initial_state is None:
+        C0 = jnp.zeros((b, h, dk, dv), f32)
+        n0 = jnp.zeros((b, h, dk), f32)
+        m0 = jnp.full((b, h), -jnp.inf, f32)
+    else:
+        C0, n0, m0 = initial_state
+    scale = 1.0 / np.sqrt(dk)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs          # [b,h,dk],[b,h,dk],[b,h,dv],[b,h]
+        logf = jax.nn.log_sigmoid(ft.astype(f32))
+        m_new = jnp.maximum(logf + m, it.astype(f32))
+        fp = jnp.exp(logf + m - m_new)
+        ip = jnp.exp(it.astype(f32) - m_new)
+        C = fp[..., None, None] * C + ip[..., None, None] * (
+            kt.astype(f32)[..., :, None] * vt.astype(f32)[..., None, :])
+        n = fp[..., None] * n + ip[..., None] * kt.astype(f32)
+        qs = qt.astype(f32) * scale
+        num = jnp.einsum("bhk,bhkv->bhv", qs, C)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qs, n)),
+                          jnp.exp(-m_new))
+        out = num / den[..., None]
+        return (C, n, m_new), out
+
+    xs = (jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0),
+          jnp.moveaxis(v, 1, 0), jnp.moveaxis(i_gate, 1, 0),
+          jnp.moveaxis(f_gate, 1, 0))
+    (C, n, m), outs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return jnp.moveaxis(outs, 0, 1).astype(v.dtype), (C, n, m)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU oracle — sequential gated diagonal recurrence
+# ---------------------------------------------------------------------------
+
+def rglru_ref(x, r_gate, i_gate, a_param, initial_h=None, c: float = 8.0):
+    """x [b, s, w]; r_gate/i_gate [b, s, w] (pre-sigmoid); a_param [w]."""
+    f32 = jnp.float32
+    b, s, w = x.shape
+    h0 = jnp.zeros((b, w), f32) if initial_h is None else initial_h
+    log_a_base = -c * jax.nn.softplus(a_param.astype(f32))   # [w] < 0
+
+    def step(h, xs):
+        xt, rt, it = xs
+        r = jax.nn.sigmoid(rt.astype(f32))
+        log_a = log_a_base * r
+        a = jnp.exp(log_a)
+        gated = jax.nn.sigmoid(it.astype(f32)) * xt.astype(f32)
+        beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+        h = a * h + beta * gated
+        return h, h
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(r_gate, 1, 0),
+          jnp.moveaxis(i_gate, 1, 0))
+    h_last, hs = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), h_last

@@ -1,0 +1,145 @@
+"""Shared AOT build/lower/compile facility.
+
+Everything that needs a compiled step without allocating real tensors goes
+through here: the multi-pod dry-run, the WSMC online profiler (small-shape
+ladder), the oracle planner ("proper configuration" search), and the
+roofline analysis. Mirrors the paper's workflow: the workload is *described*
+(ShapeDtypeStructs + shardings), never executed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (DECODE, PREFILL, TRAIN, ModelConfig,
+                                ShapeConfig, input_specs)
+from repro.models import model as M
+from repro.optim import optimizers as opt
+from repro.parallel import sharding as S
+from repro.parallel.axes import axis_rules
+from repro.runtime.train_step import TrainStepConfig, make_train_step
+from repro.runtime.serve_step import make_decode_step, make_prefill_step
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(M.init_params, cfg=cfg), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(ocfg: opt.OptimizerConfig, params_abs):
+    return jax.eval_shape(functools.partial(opt.init_state, ocfg), params_abs)
+
+
+@dataclasses.dataclass
+class Bundle:
+    """Everything needed to lower one workload cell."""
+    fn: Any
+    args: Tuple[Any, ...]
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    mesh: Any
+    strategy: S.Strategy
+    cfg: ModelConfig
+    shape: ShapeConfig
+
+    def lower(self):
+        with self.mesh:
+            with axis_rules(self.strategy.rules(), mesh=self.mesh):
+                jitted = jax.jit(self.fn,
+                                 in_shardings=self.in_shardings,
+                                 out_shardings=self.out_shardings,
+                                 donate_argnums=self.donate_argnums)
+                return jitted.lower(*self.args)
+
+    def compile(self, lowered=None):
+        lowered = lowered if lowered is not None else self.lower()
+        return lowered.compile()
+
+
+def _named(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
+          strategy: Optional[S.Strategy] = None,
+          tcfg: Optional[TrainStepConfig] = None,
+          settings: Optional[M.ModelSettings] = None) -> Bundle:
+    strategy = strategy or S.default_strategy(cfg, mesh)
+    params_abs = abstract_params(cfg)
+    pspecs = S.param_specs(cfg, params_abs, strategy, mesh)
+    p_sh = _named(mesh, pspecs)
+    batch_abs = input_specs(cfg, shape)
+    b_sh = _named(mesh, S.input_specs_sharding(batch_abs, strategy, mesh))
+    scalar = NamedSharding(mesh, P())
+
+    if shape.kind == TRAIN:
+        tcfg = tcfg or TrainStepConfig()
+        if settings is not None:
+            tcfg = dataclasses.replace(tcfg, settings=settings)
+        opt_abs = abstract_opt_state(tcfg.optimizer, params_abs)
+        o_sh = _named(mesh, opt.state_specs(tcfg.optimizer, pspecs))
+        step_fn = make_train_step(cfg, tcfg)
+        step_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        return Bundle(
+            fn=step_fn,
+            args=(params_abs, opt_abs, batch_abs, step_abs),
+            in_shardings=(p_sh, o_sh, b_sh, scalar),
+            out_shardings=(p_sh, o_sh, scalar),
+            donate_argnums=(0, 1),
+            mesh=mesh, strategy=strategy, cfg=cfg, shape=shape)
+
+    settings = settings or M.ModelSettings()
+    if shape.kind == PREFILL:
+        fn = make_prefill_step(cfg, settings)
+        cache_abs = M.init_cache(cfg, shape.global_batch, shape.context,
+                                 abstract=True)
+        c_sh = _named(mesh, S.cache_specs(cfg, cache_abs, strategy, mesh))
+        logits_sh = NamedSharding(
+            mesh, S.input_specs_sharding(
+                {"tokens": batch_abs["tokens"]}, strategy, mesh)["tokens"])
+        args = [params_abs, batch_abs["tokens"]]
+        in_sh = [p_sh, b_sh["tokens"]]
+        if "prefix_embeds" in batch_abs:
+            def step(params, tokens, prefix_embeds, _fn=fn):
+                return _fn(params, tokens, shape.context,
+                           prefix_embeds=prefix_embeds)
+            args.append(batch_abs["prefix_embeds"])
+            in_sh.append(b_sh["prefix_embeds"])
+        else:
+            step = functools.partial(fn, context=shape.context)
+        return Bundle(
+            fn=step, args=tuple(args), in_shardings=tuple(in_sh),
+            out_shardings=(logits_sh, c_sh),
+            donate_argnums=(),
+            mesh=mesh, strategy=strategy, cfg=cfg, shape=shape)
+
+    if shape.kind == DECODE:
+        fn = make_decode_step(cfg, settings)
+        cache_abs = M.init_cache(cfg, shape.global_batch, shape.context,
+                                 abstract=True)
+        c_sh = _named(mesh, S.cache_specs(cfg, cache_abs, strategy, mesh))
+        logits_sh = NamedSharding(
+            mesh, S.input_specs_sharding(
+                {"tokens": batch_abs["tokens"]}, strategy, mesh)["tokens"])
+
+        def step(params, tokens, positions, cache, _fn=fn):
+            return _fn(params, tokens, positions, cache,
+                       context=shape.context)
+
+        return Bundle(
+            fn=step,
+            args=(params_abs, batch_abs["tokens"], batch_abs["positions"],
+                  cache_abs),
+            in_shardings=(p_sh, b_sh["tokens"], b_sh["positions"], c_sh),
+            out_shardings=(logits_sh, c_sh),
+            donate_argnums=(3,),
+            mesh=mesh, strategy=strategy, cfg=cfg, shape=shape)
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,177 @@
+import os
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Perf hillclimbing harness (§Perf): lower one (arch × shape) cell under
+named optimization variants and report the three roofline terms + deltas.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --arch h2o-danube-1.8b \
+      --shape train_4k --variants baseline,onehot_embed,remat_dots [--memory]
+
+Each variant is a (plan, settings, strategy) override bundle — the exact
+knobs the WSMC planner owns, plus beyond-paper levers (one-hot embedding,
+EP, DP-replicated weights, attention block sizes).
+"""
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict, Optional
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.core.predictor import MemoryPlan
+from repro.core import profiler as PF
+from repro.launch import compile as LC
+from repro.launch.dryrun import depth_variant
+from repro.launch.mesh import make_production_mesh
+from repro.models.attention import AttnSettings
+from repro.models.model import ModelSettings
+from repro.parallel import sharding as S
+from repro.roofline import analysis as RA
+
+
+@dataclasses.dataclass
+class Variant:
+    name: str
+    plan: Dict = dataclasses.field(default_factory=dict)
+    settings: Dict = dataclasses.field(default_factory=dict)
+    attn: Dict = dataclasses.field(default_factory=dict)
+    strategy: Dict = dataclasses.field(default_factory=dict)
+
+
+VARIANTS = {
+    "baseline": Variant("baseline"),
+    # --- beyond-paper levers ---
+    "onehot_embed": Variant("onehot_embed",
+                            settings=dict(embed_onehot=True)),
+    "attn_replicated": Variant("attn_replicated",
+                               attn=dict(repeat_kv=False)),
+    "repeat_kv": Variant("repeat_kv", attn=dict(repeat_kv=True)),
+    "gather_w": Variant("gather_w", attn=dict(gather_weights=True)),
+    "gather_w+onehot": Variant("gather_w+onehot",
+                               attn=dict(gather_weights=True),
+                               settings=dict(embed_onehot=True)),
+    "remat_dots": Variant("remat_dots", plan=dict(remat="dots")),
+    "remat_full": Variant("remat_full", plan=dict(remat="full")),
+    "no_fsdp": Variant("no_fsdp", strategy=dict(fsdp=False)),
+    "ep": Variant("ep", strategy=dict(ep=True)),
+    "kv_heads": Variant("kv_heads", plan=dict(kv_shard="heads"),
+                        strategy=dict(kv_shard="heads")),
+    "kv_seq": Variant("kv_seq", plan=dict(kv_shard="seq"),
+                      strategy=dict(kv_shard="seq")),
+    "qb_1024": Variant("qb_1024", attn=dict(q_block=1024, kv_block=1024)),
+    "qb_256": Variant("qb_256", attn=dict(q_block=256, kv_block=256)),
+    "micro_4": Variant("micro_4", plan=dict(microbatches=4)),
+    "moe_group_512": Variant("moe_group_512", settings=dict(moe_group=512)),
+    "moe_group_1024": Variant("moe_group_1024",
+                              settings=dict(moe_group=1024)),
+    "ep+group512": Variant("ep+group512", strategy=dict(ep=True),
+                           settings=dict(moe_group=512)),
+    "ep+g512+onehot": Variant("ep+g512+onehot", strategy=dict(ep=True),
+                              settings=dict(moe_group=512,
+                                            embed_onehot=True)),
+    "ep+g512+oh+gw": Variant("ep+g512+oh+gw", strategy=dict(ep=True),
+                             attn=dict(gather_weights=True),
+                             settings=dict(moe_group=512,
+                                           embed_onehot=True)),
+    "ep+g512+oh+qb1k": Variant("ep+g512+oh+qb1k", strategy=dict(ep=True),
+                               attn=dict(q_block=1024, kv_block=1024),
+                               settings=dict(moe_group=512,
+                                             embed_onehot=True)),
+    "onehot+dots": Variant("onehot+dots", plan=dict(remat="dots"),
+                           settings=dict(embed_onehot=True)),
+    "onehot+nofsdp": Variant("onehot+nofsdp",
+                             settings=dict(embed_onehot=True),
+                             strategy=dict(fsdp=False)),
+}
+
+
+def run_variant(cfg, shape, mesh, base_plan: MemoryPlan, var: Variant,
+                measure_memory: bool = False):
+    plan = dataclasses.replace(base_plan, **var.plan)
+    rplan = dataclasses.replace(plan, microbatches=1)
+    strategy = dataclasses.replace(
+        PF.strategy_for(cfg, rplan, mesh), **var.strategy)
+    attn = AttnSettings(**{**dataclasses.asdict(AttnSettings()), **var.attn})
+    costs = []
+    t0 = time.time()
+    for n_units in (1, 2):
+        dcfg = depth_variant(cfg, n_units)
+        st = ModelSettings(scan_layers=False, attn=attn, **var.settings)
+        bundle = LC.build(dcfg, shape, mesh, strategy=strategy,
+                          tcfg=PF._tcfg_for(rplan, settings=st), settings=st)
+        costs.append(RA.component_cost(bundle.compile()))
+    total = RA.extrapolate(costs[0], costs[1], cfg.repeats)
+    total = RA.apply_corrections(
+        total, RA.scan_corrections(cfg, shape, mesh.devices.size,
+                                   q_block=attn.q_block))
+    rep = RA.report(cfg, shape, "single", mesh.devices.size, total,
+                    remat=rplan.remat)
+    out = rep.to_dict()
+    out["lower_s"] = round(time.time() - t0, 1)
+    if measure_memory:
+        st = ModelSettings(scan_layers=True, attn=attn, **var.settings)
+        bundle = LC.build(cfg, shape, mesh, strategy=strategy,
+                          tcfg=PF._tcfg_for(plan, settings=st), settings=st)
+        ma = bundle.compile().memory_analysis()
+        out["temp_bytes"] = int(ma.temp_size_in_bytes)
+        out["argument_bytes"] = int(ma.argument_size_in_bytes)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--plan", default="",
+                    help="remat,microbatches,optimizer,kv_shard")
+    ap.add_argument("--memory", action="store_true")
+    ap.add_argument("--out", default="artifacts/hillclimb")
+    args = ap.parse_args(argv)
+
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    base_plan = MemoryPlan()
+    if args.plan:
+        r, m, o, kv = args.plan.split(",")
+        base_plan = MemoryPlan(remat=r, microbatches=int(m), optimizer=o,
+                               kv_shard=kv)
+
+    os.makedirs(args.out, exist_ok=True)
+    results = {}
+    base = None
+    for vname in args.variants.split(","):
+        var = VARIANTS[vname]
+        try:
+            r = run_variant(cfg, shape, mesh, base_plan, var, args.memory)
+        except Exception as e:  # noqa: BLE001
+            print(f"{vname:16s} FAILED: {e}", flush=True)
+            continue
+        results[vname] = r
+        if base is None:
+            base = r
+        d = lambda k: (r[k] / base[k] - 1.0) * 100 if base[k] else 0.0
+        extra = (f" temp={r.get('temp_bytes', 0)/2**30:.2f}GiB"
+                 if args.memory and "temp_bytes" in r else "")
+        print(f"{vname:16s} comp={r['t_comp']:.3f}s({d('t_comp'):+.0f}%) "
+              f"mem={r['t_mem']:.3f}s({d('t_mem'):+.0f}%) "
+              f"coll={r['t_coll']:.3f}s({d('t_coll'):+.0f}%) "
+              f"roof={r['t_roofline']:.3f}s "
+              f"bottleneck={r['bottleneck']} "
+              f"mfu_bound={r['mfu_bound']:.3f}{extra}", flush=True)
+    path = os.path.join(args.out, f"{args.arch}__{args.shape}.json")
+    existing = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            existing = json.load(f)
+    existing.update(results)
+    with open(path, "w") as f:
+        json.dump(existing, f, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

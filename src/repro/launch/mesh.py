@@ -1,0 +1,26 @@
+"""Production meshes. Defined as FUNCTIONS so importing this module never
+touches jax device state (the dry-run sets XLA_FLAGS before first init)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh (tests, elastic re-mesh)."""
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def host_mesh_for(n_devices: int, model_parallel: int = 1):
+    """Elastic helper: best-effort (data, model) mesh over surviving devices."""
+    model = max(1, model_parallel)
+    while n_devices % model:
+        model -= 1
+    return make_mesh((n_devices // model, model), ("data", "model"))

@@ -1,0 +1,84 @@
+"""Serving driver: batched prefill + decode with WSMC-planned cache layout.
+
+Example (CPU, reduced config):
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --reduced \
+      --prompt-len 32 --gen 16 --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import DECODE, PREFILL, ShapeConfig
+from repro.core import planner as PL
+from repro.core import profiler as PF
+from repro.launch.mesh import host_mesh_for
+from repro.models import init_params
+from repro.parallel import sharding as S
+from repro.parallel.axes import axis_rules
+from repro.runtime.serve_step import make_decode_step, make_prefill_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    context = args.prompt_len + args.gen
+    mesh = host_mesh_for(len(jax.devices()), args.model_parallel)
+
+    shape = ShapeConfig("serve_cli", DECODE, context, args.batch)
+    cls = PF.classify_workload(cfg, shape, mesh, n_points=2, base_seq=64)
+    decision = PL.wsmc_plan(cfg, shape, cls, dict(mesh.shape))
+    print(f"WSMC: {cls.category.value} -> kv_shard={decision.plan.kv_shard} "
+          f"capacity={decision.prediction.capacity_bytes/2**20:.0f} MiB")
+    strategy = PF.strategy_for(cfg, decision.plan, mesh)
+
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
+                                (args.batch, args.prompt_len), 2,
+                                cfg.vocab_size)
+
+    prefill = jax.jit(make_prefill_step(cfg), static_argnames=("context",))
+    decode = jax.jit(make_decode_step(cfg), static_argnames=("context",),
+                     donate_argnums=(3,))
+
+    with mesh, axis_rules(strategy.rules(), mesh=mesh):
+        t0 = time.time()
+        logits, cache = prefill(params, prompt, context=context)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        t_prefill = time.time() - t0
+        out = [tok]
+        t0 = time.time()
+        for t in range(args.gen - 1):
+            pos = jnp.full((args.batch,), args.prompt_len + t, jnp.int32)
+            logits, cache = decode(params, tok[:, None], pos, cache,
+                                   context=context)
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            out.append(tok)
+        gen = np.asarray(jnp.stack(out, axis=1))
+        t_decode = time.time() - t0
+
+    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill:.2f}s; "
+          f"decode: {args.gen - 1} steps in {t_decode:.2f}s "
+          f"({t_decode / max(args.gen - 1, 1) * 1e3:.1f} ms/tok/batch)")
+    print("generated tokens (first row):", gen[0].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,151 @@
+"""End-to-end training driver.
+
+WSMC is in the loop: unless knobs are forced, the driver profiles the
+workload on a small-shape ladder, classifies it, and applies the planned
+memory configuration before the first real step (paper §III-E online phase).
+
+Examples:
+  # tiny CPU run (reduced config), 50 steps:
+  PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
+      --reduced --seq 128 --batch 8 --steps 50
+
+  # ~100M model, a few hundred steps (examples/train_100m.py wraps this):
+  PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
+      --reduced-100m --seq 512 --batch 8 --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeConfig, TRAIN
+from repro.core import planner as PL
+from repro.core import profiler as PF
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.launch.mesh import host_mesh_for
+from repro.models import init_params
+from repro.models.model import ModelSettings
+from repro.optim import optimizers as opt
+from repro.parallel import sharding as S
+from repro.parallel.axes import axis_rules
+from repro.runtime import fault as F
+from repro.runtime.train_step import TrainStepConfig, make_train_step
+
+
+def reduced_100m(cfg):
+    """~100M-parameter variant of an arch family (examples deliverable)."""
+    return dataclasses.replace(
+        cfg.reduced(), name=cfg.name + "-100m",
+        d_model=512, head_dim=64, n_heads=8,
+        n_kv_heads=min(8, max(1, cfg.n_kv_heads)),
+        d_ff=0 if cfg.d_ff == 0 else 2048, vocab_size=32000,
+        lru_width=None if cfg.lru_width is None else 512)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--reduced-100m", action="store_true")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-interval", type=int, default=100)
+    ap.add_argument("--remat", default="")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--optimizer", default="")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced_100m:
+        cfg = reduced_100m(cfg)
+    elif args.reduced:
+        cfg = cfg.reduced()
+    shape = ShapeConfig("train_cli", TRAIN, args.seq, args.batch)
+
+    mesh = host_mesh_for(len(jax.devices()), args.model_parallel)
+    strategy = S.default_strategy(cfg, mesh)
+
+    # ---- WSMC online phase (unless fully forced) ------------------------
+    if args.remat and args.microbatches and args.optimizer:
+        plan = PL.MemoryPlan(remat=args.remat,
+                             microbatches=args.microbatches,
+                             optimizer=args.optimizer)
+        print(f"plan (forced): {plan}")
+    else:
+        cls = PF.classify_workload(cfg, shape, mesh, n_points=2,
+                                   base_seq=min(64, args.seq))
+        decision = PL.wsmc_plan(cfg, shape, cls, dict(mesh.shape))
+        plan = decision.plan
+        if args.remat:
+            plan = dataclasses.replace(plan, remat=args.remat)
+        if args.microbatches:
+            plan = dataclasses.replace(plan, microbatches=args.microbatches)
+        if args.optimizer:
+            plan = dataclasses.replace(plan, optimizer=args.optimizer)
+        print(f"WSMC: {cls.category.value} (alpha={cls.alpha:.2f}, "
+              f"inc={cls.inc:.2f}) -> plan {plan} "
+              f"capacity={decision.prediction.capacity_bytes/2**20:.0f} MiB")
+
+    tcfg = TrainStepConfig(
+        remat=plan.remat, microbatches=plan.microbatches,
+        optimizer=opt.OptimizerConfig(kind=plan.optimizer, lr=args.lr),
+        warmup_steps=max(args.steps // 10, 1), total_steps=args.steps)
+
+    params = init_params(jax.random.PRNGKey(args.seed), cfg)
+    opt_state = opt.init_state(tcfg.optimizer, params)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params:,} mesh={dict(mesh.shape)}")
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.seq,
+                                    global_batch=args.batch,
+                                    seed=args.seed))
+
+    ckpt_mgr = (F.CheckpointManager(args.ckpt_dir, args.ckpt_interval)
+                if args.ckpt_dir else None)
+    start_step = 0
+    if ckpt_mgr and ckpt_mgr.latest_step() is not None:
+        tree = {"params": params, "opt": opt_state}
+        tree, manifest = ckpt_mgr.restore(tree)
+        params, opt_state = tree["params"], tree["opt"]
+        start_step = manifest["extra"].get("step", manifest["step"])
+        print(f"resumed from step {start_step}")
+
+    guard = F.PreemptionGuard(install=True)
+    watchdog = F.Watchdog()
+
+    def on_metrics(step, m):
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss={m['loss']:.4f} "
+                  f"gnorm={m['grad_norm']:.2f} lr={m['lr']:.2e}", flush=True)
+
+    with mesh, axis_rules(strategy.rules(), mesh=mesh):
+        t0 = time.time()
+        params, opt_state, last, hist = F.run_train_loop(
+            train_step=step_fn, params=params, opt_state=opt_state,
+            pipeline=pipe, n_steps=args.steps, ckpt_mgr=ckpt_mgr,
+            watchdog=watchdog, guard=guard, start_step=start_step,
+            on_metrics=on_metrics)
+        dt = time.time() - t0
+    if hist:
+        print(f"done: {last - start_step} steps in {dt:.1f}s "
+              f"({dt / max(last - start_step, 1):.2f}s/step), "
+              f"final loss {hist[-1]['loss']:.4f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

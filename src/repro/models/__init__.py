@@ -1,0 +1,4 @@
+from repro.models.model import (  # noqa: F401
+    ModelSettings, apply, block_apply, block_cache_init, init_cache,
+    init_params,
+)

@@ -1,0 +1,346 @@
+"""GQA attention with global / sliding-window / chunked-local modes.
+
+Backends:
+  naive   — full [s, s] score materialization (oracle; smoke shapes only).
+  blocked — memory-efficient XLA-level tiling (the dry-run/default backend):
+            * global causal: q-block × kv-block online-softmax scans
+            * sliding window: exact per-q-block KV slices (linear memory)
+            * chunked-local: chunks folded into batch, causal within chunk
+  pallas  — kernels.ops.flash_attention (TPU target; interpret-mode on CPU).
+
+Decode uses a unified ring-buffer KV cache: slot = position % cache_len with
+absolute positions stored alongside for mask reconstruction — one layout
+covers global, sliding-window and chunked layers (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.models import layers
+from repro.parallel.axes import gather_fsdp, shard
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSettings:
+    backend: str = "blocked"     # naive | blocked | pallas
+    q_block: int = 512
+    kv_block: int = 1024
+    # GQA head sharding for sequence paths: when kv_heads doesn't divide the
+    # model axis but n_heads does, repeat K/V up to H heads so attention
+    # shards by q-head instead of replicating across the axis (EXPERIMENTS
+    # §Perf iteration 1: removes per-layer [b,s,d] all-gathers). None = auto.
+    repeat_kv: Optional[bool] = None
+    # ZeRO-3 gather-on-use: all-gather FSDP-sharded weights at each use
+    # instead of psum-ing activation partials (§Perf iteration 2).
+    gather_weights: bool = False
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "norm": layers.rmsnorm_init(d, dt),
+        "wq": layers.dense_init(kq, d, cfg.n_heads * hd, dt),
+        "wk": layers.dense_init(kk, d, cfg.n_kv_heads * hd, dt),
+        "wv": layers.dense_init(kv, d, cfg.n_kv_heads * hd, dt),
+        "wo": layers.dense_init(ko, cfg.n_heads * hd, d, dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+def _mask(qpos, kpos, blk: BlockSpec):
+    """qpos [..., sq], kpos [..., skv] -> bool [..., sq, skv]."""
+    q = qpos[..., :, None].astype(jnp.int32)
+    k = kpos[..., None, :].astype(jnp.int32)
+    m = (k <= q) & (k >= 0)
+    if blk.window is not None:
+        m &= k > q - blk.window
+    if blk.chunk is not None:
+        m &= (k // blk.chunk) == (q // blk.chunk)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Sequence attention backends
+# ---------------------------------------------------------------------------
+
+def _sdpa(q, k, v, mask):
+    """q [b,sq,K,G,hd], k/v [b,skv,K,hd], mask [b,sq,skv] -> [b,sq,K,G,hd]."""
+    hd = q.shape[-1]
+    scale = 1.0 / np.sqrt(hd)
+    s = layers.einsum_f32("bqkgh,bskh->bkgqs", q, k) * scale
+    s = jnp.where(mask[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = layers.einsum_f32("bkgqs,bskh->bqkgh", p, v)
+    return o.astype(q.dtype)
+
+
+def _naive(q, k, v, qpos, kpos, blk):
+    return _sdpa(q, k, v, _mask(qpos, kpos, blk))
+
+
+def _blocked_causal(q, k, v, qpos, kpos, blk: BlockSpec, set_: AttnSettings):
+    """Online-softmax blocked causal attention (global layers)."""
+    b, s, K, G, hd = q.shape
+    qb = min(set_.q_block, s)
+    kb = min(set_.kv_block, s)
+    nq, nk = -(-s // qb), -(-s // kb)
+    pad_q, pad_k = nq * qb - s, nk * kb - s
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, pad_q)), constant_values=-1)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad_k)), constant_values=-1)
+    scale = 1.0 / np.sqrt(hd)
+
+    qs = q.reshape(b, nq, qb, K, G, hd)
+    qps = qpos.reshape(b, nq, qb)
+    ks = k.reshape(b, nk, kb, K, hd)
+    vs = v.reshape(b, nk, kb, K, hd)
+    kps = kpos.reshape(b, nk, kb)
+
+    def per_qblock(q_i, qp_i):
+        # q_i [b, qb, K, G, hd]; scan over kv blocks with running (m, l, acc)
+        m0 = jnp.full((b, qb, K, G), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, qb, K, G), jnp.float32)
+        a0 = jnp.zeros((b, qb, K, G, hd), jnp.float32)
+
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def scan_body(carry, inp):
+            m, l, acc = carry
+            k_j, v_j, kp_j = inp
+            sij = layers.einsum_f32("bqkgh,bskh->bqkgs", q_i, k_j) * scale
+            msk = _mask(qp_i, kp_j, blk)
+            sij = jnp.where(msk[:, :, None, None, :], sij, NEG_INF)
+            m_new = jnp.maximum(m, sij.max(axis=-1))
+            p = jnp.exp(sij - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + layers.einsum_f32(
+                "bqkgs,bskh->bqkgh", p, v_j)
+            return (m_new, l_new, acc_new), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            scan_body, (m0, l0, a0),
+            (jnp.moveaxis(ks, 1, 0), jnp.moveaxis(vs, 1, 0),
+             jnp.moveaxis(kps, 1, 0)))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q_i.dtype)
+
+    out = jax.lax.map(lambda args: jax.checkpoint(per_qblock)(*args),
+                      (jnp.moveaxis(qs, 1, 0), jnp.moveaxis(qps, 1, 0)))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, nq * qb, K, G, hd)
+    return out[:, :s]
+
+
+def _blocked_window(q, k, v, qpos, kpos, blk: BlockSpec, set_: AttnSettings):
+    """Exact sliding-window attention: per-q-block KV slice of w + qb."""
+    b, s, K, G, hd = q.shape
+    w = blk.window
+    qb = min(set_.q_block, s)
+    nq = -(-s // qb)
+    pad_q = nq * qb - s
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, pad_q)), constant_values=-1)
+    # Left-pad KV by w so slice [i*qb, i*qb + w + qb) is always in range.
+    kp = jnp.pad(k, ((0, 0), (w, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (w, 0), (0, 0), (0, 0)))
+    kpp = jnp.pad(kpos, ((0, 0), (w, 0)), constant_values=-1)
+    span = w + qb
+
+    @jax.checkpoint  # flash-style backward: recompute probs per q-block
+    def per_qblock(i):
+        q_i = jax.lax.dynamic_slice_in_dim(q, i * qb, qb, axis=1)
+        qp_i = jax.lax.dynamic_slice_in_dim(qpos, i * qb, qb, axis=1)
+        k_i = jax.lax.dynamic_slice_in_dim(kp, i * qb, span, axis=1)
+        v_i = jax.lax.dynamic_slice_in_dim(vp, i * qb, span, axis=1)
+        kp_i = jax.lax.dynamic_slice_in_dim(kpp, i * qb, span, axis=1)
+        return _sdpa(q_i, k_i, v_i, _mask(qp_i, kp_i, blk))
+
+    out = jax.lax.map(per_qblock, jnp.arange(nq))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, nq * qb, K, G, hd)
+    return out[:, :s]
+
+
+def _chunked(q, k, v, qpos, kpos, blk: BlockSpec, set_: AttnSettings):
+    """Chunked-local attention: fold chunks into batch, causal within."""
+    b, s, K, G, hd = q.shape
+    c = blk.chunk
+    if s <= c:
+        return _blocked_causal(q, k, v, qpos, kpos,
+                               dataclasses.replace(blk, chunk=None), set_)
+    pad = (-s) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, pad)), constant_values=-1)
+        kpos = jnp.pad(kpos, ((0, 0), (0, pad)), constant_values=-1)
+        out = _chunked(q, k, v, qpos, kpos, blk, set_)
+        return out[:, :s]
+    nc = s // c
+    fold = lambda t: t.reshape((b * nc, c) + t.shape[2:])
+    out = _blocked_causal(fold(q), fold(k), fold(v), fold(qpos), fold(kpos),
+                          dataclasses.replace(blk, chunk=None), set_)
+    return out.reshape(b, s, K, G, hd)
+
+
+def _seq_attention(q, k, v, qpos, kpos, blk, set_: AttnSettings):
+    if set_.backend == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, qpos, kpos,
+                                    window=blk.window, chunk=blk.chunk)
+    if set_.backend == "naive":
+        return _naive(q, k, v, qpos, kpos, blk)
+    if blk.window is not None:
+        return _blocked_window(q, k, v, qpos, kpos, blk, set_)
+    if blk.chunk is not None:
+        return _chunked(q, k, v, qpos, kpos, blk, set_)
+    return _blocked_causal(q, k, v, qpos, kpos, blk, set_)
+
+
+# ---------------------------------------------------------------------------
+# Ring-buffer KV cache
+# ---------------------------------------------------------------------------
+
+def cache_init(cfg: ModelConfig, blk: BlockSpec, batch: int, context: int,
+               dtype=jnp.bfloat16):
+    L = blk.cache_len(context)
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, L, cfg.n_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, L, cfg.n_kv_heads, hd), dtype),
+        "pos": jnp.full((batch, L), -1, jnp.int32),
+    }
+
+
+def cache_spec(cfg: ModelConfig, blk: BlockSpec, batch: int, context: int,
+               dtype=jnp.bfloat16):
+    """ShapeDtypeStruct version of cache_init (dry-run, no allocation)."""
+    L = blk.cache_len(context)
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, L, cfg.n_kv_heads, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, L, cfg.n_kv_heads, hd), dtype),
+        "pos": jax.ShapeDtypeStruct((batch, L), jnp.int32),
+    }
+
+
+def _cache_from_prefill(k, v, positions, blk: BlockSpec, context: int):
+    """Build a ring cache holding the last cache_len positions of a prefill."""
+    L = blk.cache_len(context)
+    k_t, v_t, p_t = k[:, -L:], v[:, -L:], positions[:, -L:]
+    # Ring layout: slot = pos % L. For contiguous positions that's a roll.
+    shift = p_t[0, 0] % L  # uniform across batch (packed sequences)
+    return {
+        "k": jnp.roll(k_t, shift, axis=1),
+        "v": jnp.roll(v_t, shift, axis=1),
+        "pos": jnp.roll(p_t, shift, axis=1),
+    }
+
+
+def _decode_attend(q, cache, blk: BlockSpec, positions):
+    """q [b,1,K,G,hd], cache k/v [b,L,K,hd]; positions [b]."""
+    hd = q.shape[-1]
+    scale = 1.0 / np.sqrt(hd)
+    s = layers.einsum_f32("bqkgh,bskh->bkgqs", q, cache["k"]) * scale
+    msk = _mask(positions[:, None], cache["pos"], blk)   # [b, 1, L]
+    s = jnp.where(msk[:, None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = layers.einsum_f32("bkgqs,bskh->bqkgh", p, cache["v"])
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block entry point
+# ---------------------------------------------------------------------------
+
+def attn_apply(params, cfg: ModelConfig, blk: BlockSpec, x, positions,
+               cache=None, decode: bool = False, context: int = 0,
+               settings: AttnSettings = AttnSettings()):
+    """x [b, s, d]; positions [b, s] (s=1 for decode).
+
+    Returns (y [b, s, d], new_cache or None).
+    """
+    b, s, d = x.shape
+    K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    G = cfg.q_group
+    h = layers.rmsnorm(params["norm"], x, cfg.norm_eps)
+    wq, wk, wv, wo = (params["wq"], params["wk"], params["wv"], params["wo"])
+    if settings.gather_weights:
+        wq = gather_fsdp(wq, None, "q_w")
+        wk = gather_fsdp(wk, None, "kv_w")
+        wv = gather_fsdp(wv, None, "kv_w")
+        wo = gather_fsdp(wo, "q_w", None)
+    q = layers.matmul(h, wq).reshape(b, s, K, G, hd)
+    k = layers.matmul(h, wk).reshape(b, s, K, hd)
+    v = layers.matmul(h, wv).reshape(b, s, K, hd)
+    use_repeat = settings.repeat_kv
+    if use_repeat is None:                       # auto (DESIGN.md §4)
+        from repro.parallel import axes as pax
+        mesh = pax.current_mesh()
+        msize = mesh.shape.get("model", 1) if mesh is not None else 1
+        use_repeat = (G > 1 and msize > 1 and K % msize != 0
+                      and (K * G) % msize == 0)
+    use_repeat = use_repeat and G > 1 and not decode
+    if not use_repeat:
+        # kv-head sharding (replicates over model when K doesn't divide it)
+        q = shard(q, "batch", "seq", "kv_heads", None, None)
+        k = shard(k, "batch", "seq", "kv_heads", None)
+        v = shard(v, "batch", "seq", "kv_heads", None)
+    if blk.rope:
+        q = layers.apply_rope(q.reshape(b, s, K * G, hd), positions,
+                              cfg.rope_theta).reshape(b, s, K, G, hd)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+
+    if decode:
+        assert cache is not None and s == 1
+        L = cache["pos"].shape[1]
+        pos1 = positions.reshape(b)              # accept [b] or [b, 1]
+        slot = pos1 % L
+        bidx = jnp.arange(b)
+        new_cache = {
+            "k": cache["k"].at[bidx, slot].set(k[:, 0]),
+            "v": cache["v"].at[bidx, slot].set(v[:, 0]),
+            "pos": cache["pos"].at[bidx, slot].set(pos1),
+        }
+        o = _decode_attend(q, new_cache, blk, pos1)
+    else:
+        kpos = positions
+        if use_repeat:
+            kr = jnp.repeat(k, G, axis=2)        # kv index h -> h // G
+            vr = jnp.repeat(v, G, axis=2)
+            qh = q.reshape(b, s, K * G, 1, hd)
+            qh = shard(qh, "batch", "seq", "heads", None, None)
+            kr = shard(kr, "batch", "seq", "heads", None)
+            vr = shard(vr, "batch", "seq", "heads", None)
+            o = _seq_attention(qh, kr, vr, positions, kpos, blk, settings)
+            o = o.reshape(b, s, K, G, hd)
+        else:
+            o = _seq_attention(q, k, v, positions, kpos, blk, settings)
+        new_cache = (_cache_from_prefill(k, v, positions, blk, context)
+                     if cache == "build" else None)
+
+    o = o.reshape(b, s, cfg.n_heads * hd)
+    y = layers.matmul(o, wo)
+    return shard(y, "batch", "seq", "embed"), new_cache

@@ -1,0 +1,194 @@
+"""Core layers: norms, dense projections, rotary embeddings, activations,
+embedding / LM head, cross-entropy. Pure functions over param pytrees.
+
+Compute convention: params in cfg.param_dtype (bf16), matmuls in bf16 with
+f32 accumulation via `preferred_element_type`, norms/softmax/loss in f32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.axes import shard
+
+INIT_STD = 0.02
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * INIT_STD).astype(dtype)
+
+
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Projection matmul, output in x.dtype (bf16).
+
+    No preferred_element_type: the MXU still accumulates f32 *within* a
+    shard, but the cross-shard TP reduction then travels in bf16 — halving
+    the per-layer all-reduce wire (EXPERIMENTS §Perf iter 4). The result was
+    cast to bf16 immediately afterwards anyway, so only the K=16 partial-sum
+    addition loses precision (standard Megatron fp16/bf16-reduce practice).
+    """
+    return jax.lax.dot_general(x, w, (((x.ndim - 1,), (0,)), ((), ())))
+
+
+def einsum_f32(spec: str, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Einsum with f32 accumulation and f32 output.
+
+    On TPU this is the MXU-native bf16 x bf16 -> f32 contraction
+    (preferred_element_type). XLA:CPU's DotThunk rejects some such batched
+    dots at execute time, so off-TPU the inputs are upcast instead —
+    numerically equivalent, and only test/example paths execute on CPU.
+    """
+    if jax.default_backend() == "tpu":
+        return jnp.einsum(spec, a, b, preferred_element_type=jnp.float32)
+    return jnp.einsum(spec, a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> jax.Array:
+    return jnp.zeros((d,), dtype)   # gemma-style (1 + scale)
+
+
+def rmsnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def groupnorm_heads(scale: jax.Array, x: jax.Array, n_heads: int,
+                    eps: float = 1e-6) -> jax.Array:
+    """Per-head RMS groupnorm over the trailing dim reshaped to heads."""
+    b, s, inner = x.shape
+    xf = x.astype(jnp.float32).reshape(b, s, n_heads, inner // n_heads)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = (xf * jax.lax.rsqrt(var + eps)).reshape(b, s, inner)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def squared_relu(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "squared_relu": squared_relu,
+}
+
+
+def glu_combine(activation: str, gate: jax.Array, up: jax.Array) -> jax.Array:
+    if activation == "swiglu":
+        return jax.nn.silu(gate.astype(jnp.float32)).astype(up.dtype) * up
+    if activation == "geglu":
+        return jax.nn.gelu(gate.astype(jnp.float32)).astype(up.dtype) * up
+    raise ValueError(activation)
+
+
+def is_glu(activation: str) -> bool:
+    return activation in ("swiglu", "geglu")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [b, s, h, hd]; positions: [b, s] int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [b, s, half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (recurrent blocks) — supports streaming decode
+# ---------------------------------------------------------------------------
+
+def conv1d_init(width: int, channels: int, dtype) -> jax.Array:
+    return jnp.full((width, channels), 1.0 / width, dtype)
+
+
+def causal_conv1d(w: jax.Array, x: jax.Array,
+                  state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: [b, s, c]; state: [b, width-1, c] history.
+
+    Returns (y [b, s, c], new_state [b, width-1, c]).
+    """
+    width = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = jnp.zeros_like(x)
+    for i in range(width):  # width is tiny (4): unrolled taps
+        y = y + w[i].astype(x.dtype) * jax.lax.dynamic_slice_in_dim(
+            xp, i, x.shape[1], axis=1)
+    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def embed_init(key, cfg):
+    return {"table": (jax.random.normal(
+        key, (cfg.padded_vocab_size, cfg.d_model),
+        jnp.float32) * INIT_STD).astype(_dtype(cfg))}
+
+
+def embed_lookup(params, cfg, tokens: jax.Array,
+                 onehot: bool = False) -> jax.Array:
+    """Token embedding. onehot=True uses a one-hot matmul instead of gather:
+    on a vocab-sharded table the partitioner turns it into a local matmul +
+    psum instead of an all-gather of the whole table (the gather path trips
+    GSPMD's 'involuntary full rematerialization' — see EXPERIMENTS §Perf)."""
+    table = params["table"]
+    if onehot:
+        oh = jax.nn.one_hot(tokens, table.shape[0], dtype=table.dtype)
+        x = jax.lax.dot_general(oh, table, (((oh.ndim - 1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32
+                                ).astype(table.dtype)
+    else:
+        x = jnp.take(table, tokens, axis=0)
+    x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)  # gemma-style scale
+    return shard(x, "batch", "seq", "embed")
+
+
+def lm_head(params, cfg, x: jax.Array) -> jax.Array:
+    """x: [b, s, d] -> logits [b, s, V] (f32)."""
+    table = params["table"]
+    logits = jax.lax.dot_general(
+        x, table, (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if cfg.logits_softcap:
+        c = cfg.logits_softcap
+        logits = jnp.tanh(logits / c) * c
+    return shard(logits, "batch", "seq", "vocab")
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean token NLL. logits [b, s, V] f32, targets [b, s] int32."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

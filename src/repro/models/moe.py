@@ -1,0 +1,116 @@
+"""Mixture-of-Experts channel mixer: top-k router + capacity-factor dispatch.
+
+TPU adaptation (DESIGN.md §5): dispatch/combine are dense one-hot einsums
+(GShard/Switch style) — on the MXU these outperform gather/scatter routing
+used by GPU implementations. The dispatch tensor [b, s, E, C] is the MoE
+"shuffle data" in WSMC terms: its transient footprint scales with the
+capacity factor and is exactly what pushes MoE archs into the Expanding
+categories; the planner controls it with microbatching.
+
+Expert weights are 3-D [E, d, f]: FSDP over d ("embed_w"), TP over f ("mlp");
+the EP strategy re-maps "experts" -> "model" instead (parallel/sharding.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.parallel.axes import shard
+
+
+def moe_init(key, cfg: ModelConfig):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    mult = 2 if layers.is_glu(cfg.activation) else 1
+    kr, ki, ko = jax.random.split(key, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "norm": layers.rmsnorm_init(d, dt),
+        "router": layers.dense_init(kr, d, E, jnp.float32),
+        "wi": (jax.random.normal(ki, (E, d, mult * f), jnp.float32)
+               * layers.INIT_STD).astype(dt),
+        "wo": (jax.random.normal(ko, (E, f, d), jnp.float32)
+               * layers.INIT_STD).astype(dt),
+    }
+
+
+def moe_apply(params, cfg: ModelConfig, x, group_size: int = 2048):
+    """x [b, s, d] -> (y [b, s, d], aux {lb_loss, z_loss}).
+
+    Tokens are routed in fixed-size groups (GShard): capacity — and the
+    dispatch transient — stays O(group_size), not O(seq). Decode steps
+    (s=1) group across the batch instead.
+    """
+    b0, s0, d = x.shape
+    if s0 == 1 and b0 > 1:                       # decode: batch is the group
+        y, aux = _moe_grouped(params, cfg, x.reshape(1, b0, d),
+                              min(group_size, b0))
+        return y.reshape(b0, s0, d), aux
+    g = min(group_size, s0)
+    pad = (-s0) % g
+    if pad:
+        xp = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        y, aux = moe_apply(params, cfg, xp, group_size)
+        return y[:, :s0], aux
+    n_g = s0 // g
+    y, aux = _moe_grouped(params, cfg,
+                          x.reshape(b0 * n_g, g, d) if n_g > 1 else x, g)
+    return y.reshape(b0, s0, d), aux
+
+
+def _moe_grouped(params, cfg: ModelConfig, x, group: int):
+    """x [rows, group, d] — one independent routing group per row."""
+    b, s, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = max(1, int(-(-s * k * cfg.capacity_factor // E)))
+
+    h = layers.rmsnorm(params["norm"], x, cfg.norm_eps)
+    logits = jnp.einsum("bsd,de->bse", h.astype(jnp.float32),
+                        params["router"])                       # [b, s, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)               # [b, s, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)            # renormalize
+
+    # Capacity assignment with choice priority (Switch): earlier choices
+    # claim slots first; cumulative per-expert counts shared across choices.
+    dispatch = jnp.zeros((b, s, E, C), h.dtype)
+    combine = jnp.zeros((b, s, E, C), jnp.float32)
+    counts = jnp.zeros((b, E), jnp.int32)
+    for choice in range(k):
+        e_onehot = jax.nn.one_hot(gate_idx[..., choice], E,
+                                  dtype=jnp.int32)              # [b, s, E]
+        pos = counts[:, None, :] + jnp.cumsum(e_onehot, axis=1) - e_onehot
+        keep = (pos < C) & (e_onehot > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                                dtype=h.dtype)[..., :C]         # [b, s, E, C]
+        sel = pos_oh * keep[..., None].astype(h.dtype)
+        dispatch = dispatch + sel
+        combine = combine + sel.astype(jnp.float32) * \
+            gate_vals[..., choice][..., None, None]
+        counts = counts + e_onehot.sum(axis=1)
+
+    dispatch = shard(dispatch, "batch", "seq", "experts", None)
+    xe = jnp.einsum("bsec,bsd->becd", dispatch, h)              # [b, E, C, d]
+    xe = shard(xe, "batch", "experts", None, "embed")
+
+    up = layers.einsum_f32("becd,edf->becf", xe, params["wi"]).astype(h.dtype)
+    up = shard(up, "batch", "experts", None, "mlp_act")
+    if layers.is_glu(cfg.activation):
+        gate, val = jnp.split(up, 2, axis=-1)
+        act = layers.glu_combine(cfg.activation, gate, val)
+    else:
+        act = layers.ACTIVATIONS[cfg.activation](up)
+    ye = layers.einsum_f32("becf,efd->becd", act, params["wo"]).astype(h.dtype)
+
+    y = jnp.einsum("bsec,becd->bsd", combine.astype(h.dtype), ye)
+    y = shard(y, "batch", "seq", "embed")
+
+    # Aux losses: Switch load-balance + router z-loss.
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    lb_loss = E * jnp.sum(frac_tokens * mean_probs)
+    z_loss = jnp.mean(jnp.square(jax.scipy.special.logsumexp(logits, -1)))
+    return y, {"lb_loss": lb_loss, "z_loss": z_loss}

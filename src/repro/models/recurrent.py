@@ -1,0 +1,297 @@
+"""Recurrent sequence mixers: xLSTM's mLSTM and sLSTM, Griffin's RG-LRU.
+
+TPU adaptation (DESIGN.md §6):
+  - mLSTM uses the chunkwise-parallel form (kernels/mlstm_scan or the blocked
+    jnp mirror) — MXU-dense within chunks, compact state across chunks.
+  - RG-LRU is a *diagonal* linear recurrence -> jax.lax.associative_scan
+    (log-depth, parallel) instead of a sequential stream.
+  - sLSTM has a genuinely nonlinear recurrence (h feeds the gates) and cannot
+    be parallelized over time; it runs as lax.scan. This is why xLSTM uses
+    them sparsely (1-in-8) — the config pattern reflects that.
+
+Gate simplification vs. the papers (documented deviation, DESIGN.md §9):
+RG-LRU gates are per-channel diagonal (w ⊙ x) rather than block-diagonal
+projections; parameter counts in configs/base.py match this implementation.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+from repro.parallel.axes import shard
+
+
+# ===========================================================================
+# mLSTM block (xLSTM)
+# ===========================================================================
+
+def mlstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    inner = int(cfg.mlstm_proj_factor * d)
+    bs = cfg.mlstm_qk_blocksize
+    nb = inner // bs
+    ks = jax.random.split(key, 6)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "norm": layers.rmsnorm_init(d, dt),
+        "w_up": layers.dense_init(ks[0], d, 2 * inner, dt),
+        "conv": layers.conv1d_init(cfg.mlstm_conv_width, inner, dt),
+        "wq": (jax.random.normal(ks[1], (nb, bs, bs), jnp.float32)
+               * layers.INIT_STD).astype(dt),
+        "wk": (jax.random.normal(ks[2], (nb, bs, bs), jnp.float32)
+               * layers.INIT_STD).astype(dt),
+        "w_i": layers.dense_init(ks[3], inner, cfg.n_heads, jnp.float32),
+        "b_i": jnp.zeros((cfg.n_heads,), jnp.float32),
+        "w_f": layers.dense_init(ks[4], inner, cfg.n_heads, jnp.float32),
+        "b_f": jnp.full((cfg.n_heads,), 3.0, jnp.float32),  # open forget gates
+        "gnorm": layers.rmsnorm_init(inner, dt),
+        "w_down": layers.dense_init(ks[5], inner, d, dt),
+    }
+
+
+def _blockdiag(x, w):
+    """x [..., nb*bs] @ block-diagonal w [nb, bs, bs]."""
+    nb, bs, _ = w.shape
+    xs = x.reshape(x.shape[:-1] + (nb, bs))
+    y = jnp.einsum("...nb,nbc->...nc", xs, w.astype(x.dtype))
+    return y.reshape(x.shape)
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int, abstract: bool = False):
+    d = cfg.d_model
+    inner = int(cfg.mlstm_proj_factor * d)
+    h = cfg.n_heads
+    hd = inner // h
+    cw = cfg.mlstm_conv_width
+    mk = (jax.ShapeDtypeStruct if abstract
+          else (lambda sh, dt: jnp.zeros(sh, dt)))
+    return {
+        "C": mk((batch, h, hd, hd), jnp.float32),
+        "n": mk((batch, h, hd), jnp.float32),
+        "m": mk((batch, h, 1), jnp.float32),
+        "conv": mk((batch, cw - 1, inner), jnp.bfloat16),
+    }
+
+
+def mlstm_apply(params, cfg: ModelConfig, x, state=None, decode: bool = False,
+                backend: Optional[str] = None, chunk: int = 128):
+    """x [b, s, d] -> (y, new_state or None)."""
+    from repro.kernels import ops as kops
+    b, s, d = x.shape
+    inner = int(cfg.mlstm_proj_factor * d)
+    h_heads = cfg.n_heads
+    hd = inner // h_heads
+
+    hin = layers.rmsnorm(params["norm"], x, cfg.norm_eps)
+    up = layers.matmul(hin, params["w_up"])
+    x_m, z = jnp.split(up, 2, axis=-1)
+    x_m = shard(x_m, "batch", "seq", "inner")
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = layers.causal_conv1d(params["conv"], x_m, conv_state)
+    xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
+
+    q = _blockdiag(xc, params["wq"]).reshape(b, s, h_heads, hd)
+    k = _blockdiag(xc, params["wk"]).reshape(b, s, h_heads, hd)
+    v = x_m.reshape(b, s, h_heads, hd)
+    i_gate = (jnp.einsum("bsi,ih->bsh", xc.astype(jnp.float32), params["w_i"])
+              + params["b_i"])
+    f_gate = (jnp.einsum("bsi,ih->bsh", xc.astype(jnp.float32), params["w_f"])
+              + params["b_f"])
+
+    if decode:
+        assert state is not None and s == 1
+        out, (C, n, m) = kops.mlstm_decode_step(
+            q[:, 0], k[:, 0], v[:, 0], i_gate[:, 0], f_gate[:, 0],
+            (state["C"], state["n"], state["m"]))
+        out = out[:, None]
+        new_state = {"C": C, "n": n, "m": m, "conv": new_conv}
+    else:
+        # checkpoint: backward recomputes the chunk scan instead of stashing
+        # every chunk's (dk×dv) carry for every layer simultaneously
+        # (EXPERIMENTS §Perf: 69.5 -> ~3 GiB/dev on xlstm train_4k)
+        scan_fn = jax.checkpoint(
+            lambda *a: kops.mlstm_scan(*a, chunk=chunk, backend=backend))
+        out, (C, n, m) = scan_fn(q, k, v, i_gate, f_gate)
+        new_state = ({"C": C, "n": n, "m": m, "conv": new_conv}
+                     if state is not None else None)
+
+    out = out.reshape(b, s, inner)
+    out = layers.groupnorm_heads(params["gnorm"], out, h_heads, cfg.norm_eps)
+    out = out * jax.nn.silu(z.astype(jnp.float32)).astype(out.dtype)
+    y = layers.matmul(out, params["w_down"])
+    return shard(y, "batch", "seq", "embed"), new_state
+
+
+# ===========================================================================
+# sLSTM block (xLSTM) — sequential scan, block-diagonal recurrence per head
+# ===========================================================================
+
+def slstm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    ff = cfg.slstm_ff_dim
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "norm": layers.rmsnorm_init(d, dt),
+        "w": layers.dense_init(ks[0], d, 4 * d, dt),          # z, i, f, o
+        "r": (jax.random.normal(ks[1], (h, hd, 4 * hd), jnp.float32)
+              * layers.INIT_STD).astype(jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((2 * d,), jnp.float32),
+                              jnp.full((d,), 3.0, jnp.float32),
+                              jnp.zeros((d,), jnp.float32)]),
+        "norm2": layers.rmsnorm_init(d, dt),
+        "w_ff": layers.dense_init(ks[2], d, 2 * ff, dt),
+        "w_ff_out": layers.dense_init(ks[3], ff, d, dt),
+    }
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int, abstract: bool = False):
+    d = cfg.d_model
+    mk = (jax.ShapeDtypeStruct if abstract
+          else (lambda sh, dt: jnp.zeros(sh, dt)))
+    return {
+        "c": mk((batch, d), jnp.float32),
+        "n": mk((batch, d), jnp.float32),
+        "h": mk((batch, d), jnp.float32),
+        "m": mk((batch, d), jnp.float32),
+    }
+
+
+def _slstm_step(params, cfg, xw_t, state):
+    """xw_t [b, 4d] (input projection); state dict of [b, d] f32."""
+    d = cfg.d_model
+    h = cfg.n_heads
+    hd = d // h
+    c, n, hid, m = state["c"], state["n"], state["h"], state["m"]
+    b = hid.shape[0]
+    rec = jnp.einsum("bhx,hxy->bhy", hid.reshape(b, h, hd),
+                     params["r"]).reshape(b, 4 * d)
+    pre = xw_t.astype(jnp.float32) + rec + params["b"]
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(zt)
+    o = jax.nn.sigmoid(ot)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    fp = jnp.exp(logf + m - m_new)
+    ip = jnp.exp(it - m_new)
+    c = fp * c + ip * z
+    n = fp * n + ip
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h_new, "m": m_new}
+
+
+def slstm_apply(params, cfg: ModelConfig, x, state=None, decode: bool = False):
+    b, s, d = x.shape
+    hin = layers.rmsnorm(params["norm"], x, cfg.norm_eps)
+    xw = layers.matmul(hin, params["w"])                      # [b, s, 4d]
+    st = state if state is not None else slstm_state_init(cfg, b)
+    core = {k: st[k] for k in ("c", "n", "h", "m")}
+    if decode:
+        assert s == 1
+        core = _slstm_step(params, cfg, xw[:, 0], core)
+        hs = core["h"][:, None]
+        new_state = core
+    else:
+        @jax.checkpoint  # recompute the time scan in backward (one layer
+        def _scan(core, xw_):  # of per-step carries live at a time)
+            def step(carry, xw_t):
+                carry = _slstm_step(params, cfg, xw_t, carry)
+                return carry, carry["h"]
+            return jax.lax.scan(step, core, xw_)
+        core, hs = _scan(core, jnp.moveaxis(xw, 1, 0))
+        hs = jnp.moveaxis(hs, 0, 1)
+        new_state = core if state is not None else None
+    y = x + hs.astype(x.dtype)                                 # residual core
+    # post-up GLU feed-forward (xLSTM sLSTM block, ff factor 4/3)
+    hff = layers.rmsnorm(params["norm2"], y, cfg.norm_eps)
+    up = layers.matmul(hff, params["w_ff"])
+    gate, val = jnp.split(up, 2, axis=-1)
+    ff = layers.glu_combine("swiglu", gate, val)
+    out = layers.matmul(ff, params["w_ff_out"])
+    return shard(out + hs.astype(x.dtype), "batch", "seq", "embed"), new_state
+
+
+# ===========================================================================
+# RG-LRU block (Griffin / RecurrentGemma)
+# ===========================================================================
+
+def rglru_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    # a_param init so that a = exp(-8*softplus(a_param)*r) spans ~[0.9, 0.999]
+    u = jax.random.uniform(ks[3], (w,), jnp.float32, 0.25, 0.75)
+    a_param = jnp.log(jnp.expm1(-jnp.log(u) / 8.0))
+    return {
+        "norm": layers.rmsnorm_init(d, dt),
+        "w_x": layers.dense_init(ks[0], d, w, dt),
+        "w_y": layers.dense_init(ks[1], d, w, dt),
+        "conv": layers.conv1d_init(cfg.conv_width, w, dt),
+        "gate_r": jnp.zeros((w,), jnp.float32),   # diag recurrence gate
+        "gate_i": jnp.zeros((w,), jnp.float32),   # diag input gate
+        "a_param": a_param,
+        "w_out": layers.dense_init(ks[2], w, d, dt),
+    }
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int, abstract: bool = False):
+    w = cfg.lru_width or cfg.d_model
+    cw = cfg.conv_width
+    mk = (jax.ShapeDtypeStruct if abstract
+          else (lambda sh, dt: jnp.zeros(sh, dt)))
+    return {
+        "h": mk((batch, w), jnp.float32),
+        "conv": mk((batch, cw - 1, w), jnp.bfloat16),
+    }
+
+
+def rglru_apply(params, cfg: ModelConfig, x, state=None, decode: bool = False):
+    """Griffin recurrent block: gelu branch ⊙ RG-LRU branch -> out proj."""
+    b, s, d = x.shape
+    wdt = params["w_x"].shape[1]
+    hin = layers.rmsnorm(params["norm"], x, cfg.norm_eps)
+    branch_y = jax.nn.gelu(layers.matmul(hin, params["w_y"])
+                           .astype(jnp.float32)).astype(x.dtype)
+    bx = layers.matmul(hin, params["w_x"])
+    bx = shard(bx, "batch", "seq", "lru")
+    conv_state = state["conv"] if state is not None else None
+    xc, new_conv = layers.causal_conv1d(params["conv"], bx, conv_state)
+
+    xf = xc.astype(jnp.float32)
+    r_pre = params["gate_r"] * xf
+    i_pre = params["gate_i"] * xf
+    log_a = (-8.0 * jax.nn.softplus(params["a_param"])
+             * jax.nn.sigmoid(r_pre))                        # [b, s, w] < 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = beta * jax.nn.sigmoid(i_pre) * xf                # B term
+
+    h0 = state["h"] if state is not None else jnp.zeros((b, wdt), jnp.float32)
+    if decode:
+        assert s == 1
+        h = a[:, 0] * h0 + gated[:, 0]
+        hs = h[:, None]
+        new_state = {"h": h, "conv": new_conv}
+    else:
+        # Diagonal linear recurrence h_t = a_t h_{t-1} + B_t with initial h0:
+        # fold h0 into the first step then associative_scan (parallel).
+        g0 = gated.at[:, 0].add(a[:, 0] * h0)
+        def combine(u, w_):
+            a1, b1 = u
+            a2, b2 = w_
+            return a1 * a2, a2 * b1 + b2
+        _, hs = jax.lax.associative_scan(combine, (a, g0), axis=1)
+        new_state = ({"h": hs[:, -1], "conv": new_conv}
+                     if state is not None else None)
+
+    out = (hs.astype(x.dtype) * branch_y)
+    y = layers.matmul(out, params["w_out"])
+    return shard(y, "batch", "seq", "embed"), new_state

@@ -1,0 +1,167 @@
+"""Optimizers with capacity-relevant state layouts.
+
+The WSMC planner treats the optimizer as a memory knob (DESIGN.md §2):
+  adamw_f32  — m, v in f32 (8 bytes/param of state)        fastest, largest
+  adamw_bf16 — m, v in bf16 (4 bytes/param)                minor quality cost
+  adafactor  — factored second moment (~0 bytes/param)     cheapest
+
+All states mirror parameter sharding (ZeRO: FSDP-sharded params => sharded
+optimizer state for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw_f32"          # adamw_f32 | adamw_bf16 | adafactor
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    # adafactor
+    decay_rate: float = 0.8
+    clip_threshold: float = 1.0
+
+    @property
+    def state_bytes_per_param(self) -> float:
+        """Closed-form state footprint (the predictor's Eq.7 'retrievable'
+        term; excludes the params themselves)."""
+        return {"adamw_f32": 8.0, "adamw_bf16": 4.0, "adafactor": 0.05}[self.kind]
+
+
+def _acc_dtype(ocfg: OptimizerConfig):
+    return jnp.bfloat16 if ocfg.kind == "adamw_bf16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+
+def init_state(ocfg: OptimizerConfig, params) -> Any:
+    if ocfg.kind in ("adamw_f32", "adamw_bf16"):
+        dt = _acc_dtype(ocfg)
+        zeros = lambda p: jnp.zeros(p.shape, dt)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+    if ocfg.kind == "adafactor":
+        def factored(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(factored, params),
+                "count": jnp.zeros((), jnp.int32)}
+    raise ValueError(ocfg.kind)
+
+
+def state_specs(ocfg: OptimizerConfig, param_spec_tree):
+    """PartitionSpecs for the optimizer state, mirroring the params."""
+    from jax.sharding import PartitionSpec as P
+    if ocfg.kind in ("adamw_f32", "adamw_bf16"):
+        return {"m": param_spec_tree, "v": param_spec_tree, "count": P()}
+    def factored(spec):
+        return {"vr": P(*spec[:-1]), "vc": P(*(tuple(spec[:-2]) + (spec[-1],)))
+                if len(spec) >= 2 else P(*spec)}
+    def one(spec):
+        if len(spec) >= 2:
+            return {"vr": P(*spec[:-1]),
+                    "vc": P(*(tuple(spec[:-2]) + (spec[-1],)))}
+        return {"v": P(*spec)}
+    return {"f": jax.tree.map(one, param_spec_tree,
+                              is_leaf=lambda x: isinstance(x, P)),
+            "count": P()}
+
+
+# ---------------------------------------------------------------------------
+
+def apply_updates(ocfg: OptimizerConfig, params, grads, state, lr):
+    """Returns (new_params, new_state). grads/params pytrees; lr scalar."""
+    if ocfg.kind in ("adamw_f32", "adamw_bf16"):
+        return _adamw(ocfg, params, grads, state, lr)
+    return _adafactor(ocfg, params, grads, state, lr)
+
+
+def _adamw(ocfg, params, grads, state, lr):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - ocfg.b1 ** cf
+    bc2 = 1.0 - ocfg.b2 ** cf
+    dt = _acc_dtype(ocfg)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = ocfg.b1 * m.astype(jnp.float32) + (1 - ocfg.b1) * gf
+        vf = ocfg.b2 * v.astype(jnp.float32) + (1 - ocfg.b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        step = mhat / (jnp.sqrt(vhat) + ocfg.eps)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step + ocfg.weight_decay * pf)
+        return pf.astype(p.dtype), mf.astype(dt), vf.astype(dt)
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m,
+                                                 flat_v)]
+    new_p = jax.tree.unflatten(tree, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tree, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tree, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+def _adafactor(ocfg, params, grads, state, lr):
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    rho = jnp.minimum(1.0 - cf ** (-ocfg.decay_rate), 0.999)
+
+    def upd(p, g, f):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + 1e-30
+        if p.ndim >= 2:
+            vr = rho * f["vr"] + (1 - rho) * g2.mean(axis=-1)
+            vc = rho * f["vc"] + (1 - rho) * g2.mean(axis=-2)
+            denom = (vr[..., None] / jnp.maximum(
+                vr.mean(axis=-1, keepdims=True)[..., None], 1e-30)) * vc[..., None, :]
+            step = gf / jnp.sqrt(jnp.maximum(denom, 1e-30))
+            nf = {"vr": vr, "vc": vc}
+        else:
+            v = rho * f["v"] + (1 - rho) * g2
+            step = gf / jnp.sqrt(jnp.maximum(v, 1e-30))
+            nf = {"v": v}
+        # update clipping (RMS)
+        rms = jnp.sqrt(jnp.mean(step * step) + 1e-30)
+        step = step / jnp.maximum(1.0, rms / ocfg.clip_threshold)
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (step + ocfg.weight_decay * pf)
+        return pf.astype(p.dtype), nf
+
+    is_f = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_f = jax.tree.flatten(state["f"], is_leaf=is_f)[0]
+    out = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+    new_p = jax.tree.unflatten(tree, [o[0] for o in out])
+    new_f = jax.tree.unflatten(tree, [o[1] for o in out])
+    return new_p, {"f": new_f, "count": count}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale).astype(x.dtype),
+                        tree), norm

@@ -1,0 +1,117 @@
+"""HLO-text collective parser: extract per-device collective payloads and
+wire (ICI link) bytes from a compiled module.
+
+cost_analysis() has no collective term, so we parse `compiled.as_text()`
+for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops, take their result shapes (per-device, since the
+text is the partitioned SPMD module), recover group sizes from
+replica_groups, and apply ring-algorithm wire factors:
+
+  all-reduce       2·B·(g-1)/g      (reduce-scatter + all-gather phases)
+  all-gather       B_result·(g-1)/g
+  reduce-scatter   B_operand·(g-1)/g
+  all-to-all       B·(g-1)/g
+  collective-permute B
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_OP_RE = re.compile(
+    r"(?P<dtype>[a-z0-9]+)\[(?P<shape>[0-9,]*)\][^=]*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<rest>.*)")
+
+_GROUPS_BRACKET_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    dtype: str
+    shape: tuple
+    result_bytes: int
+    group_size: int
+    wire_bytes: float      # per-chip ICI send volume (ring model)
+
+
+def _tuple_shapes(line: str) -> List[tuple]:
+    """Some collectives return tuples: (bf16[..], bf16[..]) all-gather(...)"""
+    out = []
+    for m in re.finditer(r"([a-z0-9]+)\[([0-9,]*)\]", line.split("=")[1]
+                         .split("all-")[0] if "=" in line else line):
+        out.append((m.group(1), m.group(2)))
+    return out
+
+
+def parse_collectives(hlo_text: str) -> List[CollectiveOp]:
+    ops: List[CollectiveOp] = []
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if not line.startswith("%") and not line.startswith("ROOT"):
+            continue
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        # skip -start/-done duplicates (count the -start only)
+        if re.search(r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                     r"collective-permute)-done", line):
+            continue
+        op = m.group("op")
+        dtype = m.group("dtype")
+        shape = tuple(int(x) for x in m.group("shape").split(",") if x)
+        nbytes = _DTYPE_BYTES.get(dtype, 4)
+        # XLA:CPU's all-reduce-promotion pass upcasts bf16 reductions to f32
+        # (to_apply=%..._promoted). TPU reduces bf16 natively — count the
+        # wire at the unpromoted width.
+        if dtype == "f32" and "_promoted" in line:
+            nbytes = 2
+        result_bytes = nbytes
+        for d in shape:
+            result_bytes *= d
+
+        g = 1
+        gm = _GROUPS_BRACKET_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gb = _GROUPS_BRACE_RE.search(line)
+            if gb:
+                g = len([x for x in gb.group(1).split(",") if x.strip()])
+        if op == "collective-permute":
+            g = 2  # pairwise
+
+        ring = (g - 1) / g if g > 1 else 0.0
+        if op == "all-reduce":
+            wire = 2.0 * result_bytes * ring
+        elif op == "all-gather":
+            wire = result_bytes * ring
+        elif op == "reduce-scatter":
+            wire = result_bytes * g * ring   # operand = result × g
+        elif op == "all-to-all":
+            wire = result_bytes * ring
+        else:  # collective-permute
+            wire = float(result_bytes)
+        ops.append(CollectiveOp(kind=op, dtype=dtype, shape=shape,
+                                result_bytes=result_bytes, group_size=g,
+                                wire_bytes=wire))
+    return ops
+
+
+def collective_summary(ops: List[CollectiveOp]) -> Dict[str, float]:
+    summary: Dict[str, float] = {}
+    for op in ops:
+        summary[op.kind] = summary.get(op.kind, 0.0) + op.wire_bytes
+    summary["total_wire_bytes"] = sum(summary.values())
+    summary["n_ops"] = float(len(ops))
+    return summary

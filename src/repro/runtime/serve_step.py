@@ -1,0 +1,58 @@
+"""Serving steps: prefill (builds the ring KV / recurrent caches, returns
+last-token logits) and decode (one token per sequence against the cache)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+def make_prefill_step(cfg: ModelConfig,
+                      settings: Optional[M.ModelSettings] = None):
+    settings = settings or M.ModelSettings()
+    psettings = dataclasses.replace(settings, build_cache=True)
+
+    def prefill_step(params, tokens, context: int, prefix_embeds=None):
+        logits, cache, _ = M.apply(params, cfg, tokens,
+                                   prefix_embeds=prefix_embeds,
+                                   settings=psettings, context=context,
+                                   logits_last_only=True)
+        return logits[:, -1], cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig,
+                     settings: Optional[M.ModelSettings] = None):
+    settings = settings or M.ModelSettings()
+
+    def decode_step(params, tokens, positions, cache, context: int):
+        logits, new_cache, _ = M.apply(params, cfg, tokens,
+                                       positions=positions, cache=cache,
+                                       decode=True, settings=settings,
+                                       context=context)
+        return logits[:, -1], new_cache
+
+    return decode_step
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt_tokens, n_steps: int,
+                    context: int, settings: Optional[M.ModelSettings] = None):
+    """Python-loop greedy decoding (tests/examples; drivers jit the steps)."""
+    b, p = prompt_tokens.shape
+    prefill = make_prefill_step(cfg, settings)
+    decode = make_decode_step(cfg, settings)
+    last_logits, cache = prefill(params, prompt_tokens, context)
+    out = []
+    tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    for t in range(n_steps):
+        out.append(tok)
+        pos = jnp.full((b,), p + t, jnp.int32)
+        logits, cache = decode(params, tok[:, None], pos, cache, context)
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,119 @@
+"""Train-step factory: remat policy × microbatch accumulation × optimizer.
+
+These three knobs are exactly the WSMC planner's configuration surface
+(core/planner.py): they trade transient memory ("shuffle data") against
+step time, the way spark.executor.memory traded caching against spills.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models.layers import cross_entropy
+from repro.optim import optimizers as opt
+from repro.optim.compress import compress_roundtrip
+from repro.optim.schedule import warmup_cosine
+
+REMAT_POLICIES = ("none", "dots", "full")
+
+
+def remat_wrapper(policy: str) -> Callable:
+    if policy == "none":
+        return lambda f: f
+    if policy == "dots":
+        return lambda f: jax.checkpoint(
+            f, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if policy == "full":
+        return lambda f: jax.checkpoint(
+            f, policy=jax.checkpoint_policies.nothing_saveable)
+    raise ValueError(policy)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepConfig:
+    remat: str = "none"
+    microbatches: int = 1
+    optimizer: opt.OptimizerConfig = opt.OptimizerConfig()
+    settings: M.ModelSettings = M.ModelSettings()
+    max_grad_norm: float = 1.0
+    lb_coef: float = 0.01
+    z_coef: float = 1e-3
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    compress_grads: bool = False    # int8 round-trip on accumulated grads
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainStepConfig):
+    wrapper = remat_wrapper(tcfg.remat)
+
+    def loss_fn(params, batch):
+        logits, _, aux = M.apply(
+            params, cfg, batch["tokens"],
+            prefix_embeds=batch.get("prefix_embeds"),
+            settings=tcfg.settings, unit_wrapper=wrapper)
+        if cfg.n_prefix_embeds:
+            logits = logits[:, cfg.n_prefix_embeds:]
+        loss = cross_entropy(logits, batch["targets"])
+        total = (loss + tcfg.lb_coef * aux["lb_loss"]
+                 + tcfg.z_coef * aux["z_loss"])
+        return total, {"loss": loss, "lb_loss": aux["lb_loss"],
+                       "z_loss": aux["z_loss"]}
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainStepConfig):
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics). Pure; jit/pjit-ready."""
+    loss_fn = make_loss_fn(cfg, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    n_micro = tcfg.microbatches
+
+    def train_step(params, opt_state, batch, step):
+        if n_micro == 1:
+            (_, metrics), grads = grad_fn(params, batch)
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                assert b % n_micro == 0, (b, n_micro)
+                return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+            micro = jax.tree.map(reshape, batch)
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            met0 = {"loss": jnp.zeros((), jnp.float32),
+                    "lb_loss": jnp.zeros((), jnp.float32),
+                    "z_loss": jnp.zeros((), jnp.float32)}
+
+            def body(carry, mb):
+                gacc, macc = carry
+                (_, met), g = grad_fn(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), gacc, g)
+                macc = {k: macc[k] + met[k] for k in macc}
+                return (gacc, macc), None
+
+            (gacc, macc), _ = jax.lax.scan(body, (acc0, met0), micro)
+            grads = jax.tree.map(lambda g: (g / n_micro), gacc)
+            metrics = {k: v / n_micro for k, v in macc.items()}
+
+        if tcfg.compress_grads:
+            key = jax.random.fold_in(jax.random.PRNGKey(17), step)
+            grads = compress_roundtrip(grads, key)
+
+        grads, gnorm = opt.clip_by_global_norm(grads, tcfg.max_grad_norm)
+        lr = warmup_cosine(step, tcfg.optimizer.lr, tcfg.warmup_steps,
+                           tcfg.total_steps)
+        params, opt_state = opt.apply_updates(tcfg.optimizer, params, grads,
+                                              opt_state, lr)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    return train_step

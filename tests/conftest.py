@@ -1,0 +1,23 @@
+import os
+import sys
+
+# Tests see the default single CPU device; mesh-dependent tests spawn
+# subprocesses with their own XLA_FLAGS (dry-run rule: never set the device
+# count globally).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def run_in_subprocess(code: str, devices: int = 8, timeout: int = 560) -> str:
+    """Run `code` in a fresh python with N fake devices; returns stdout."""
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, f"subprocess failed:\n{out.stdout}\n{out.stderr}"
+    return out.stdout

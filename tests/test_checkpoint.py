@@ -1,0 +1,80 @@
+"""Checkpointing: roundtrip, atomic commit, async save, latest-step recovery,
+cross-mesh resharding restore (elastic)."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt as CK
+from conftest import run_in_subprocess
+
+TREE = {"params": {"w": jnp.arange(12.0).reshape(3, 4),
+                   "layers": [jnp.ones((2, 2)), jnp.zeros((5,))]},
+        "opt": {"count": jnp.asarray(3)}}
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    CK.save(d, 7, TREE, extra={"note": "x"})
+    restored, manifest = CK.restore(d, TREE)
+    assert manifest["step"] == 7 and manifest["extra"]["note"] == "x"
+    for a, b in zip(jax.tree.leaves(TREE), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_skips_uncommitted(tmp_path):
+    d = str(tmp_path / "ck")
+    CK.save(d, 1, TREE)
+    CK.save(d, 5, TREE)
+    os.makedirs(os.path.join(d, "step_00000009.tmp"))  # crashed mid-save
+    assert CK.latest_step(d) == 5
+
+
+def test_async_save(tmp_path):
+    d = str(tmp_path / "ck")
+    t = CK.save(d, 2, TREE, async_=True)
+    t.join()
+    assert CK.latest_step(d) == 2
+    restored, _ = CK.restore(d, TREE)
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(TREE["params"]["w"]))
+
+
+def test_restore_rejects_shape_mismatch(tmp_path):
+    d = str(tmp_path / "ck")
+    CK.save(d, 1, TREE)
+    bad = {"params": {"w": jnp.zeros((4, 4)),
+                      "layers": TREE["params"]["layers"]},
+           "opt": TREE["opt"]}
+    with pytest.raises(ValueError):
+        CK.restore(d, bad)
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Save on an 8-device (4,2) mesh, restore onto a (2,2) submesh — the
+    elastic-restart path."""
+    code = f"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.checkpoint import ckpt as CK
+from repro.launch.mesh import make_mesh
+
+d = {str(tmp_path / 'eck')!r}
+mesh8 = make_mesh((4, 2), ("data", "model"))
+spec = {{"w": P("data", "model")}}
+w = jax.device_put(jnp.arange(64.0).reshape(8, 8),
+                   NamedSharding(mesh8, spec["w"]))
+CK.save(d, 1, {{"w": w}})
+
+mesh4 = make_mesh((2, 2), ("data", "model"))
+target = {{"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
+restored, _ = CK.restore(d, target, mesh=mesh4, spec_tree=spec)
+assert restored["w"].sharding.mesh.devices.size == 4
+np.testing.assert_array_equal(np.asarray(restored["w"]),
+                              np.arange(64.0).reshape(8, 8))
+print("ELASTIC_OK")
+"""
+    out = run_in_subprocess(code, devices=8)
+    assert "ELASTIC_OK" in out

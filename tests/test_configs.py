@@ -1,0 +1,66 @@
+"""Config system: registry, param counts vs eval_shape, shape registry."""
+import jax
+import pytest
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, param_count,
+                           active_param_count, shape_applicable, input_specs)
+from repro.launch.compile import abstract_params
+
+EXPECTED_B = {  # published sizes (±20% tolerance; DESIGN.md notes deviations)
+    "xlstm-1.3b": 1.4, "musicgen-medium": 1.5, "nemotron-4-340b": 341.0,
+    "h2o-danube-1.8b": 1.8, "gemma3-12b": 12.0, "mistral-nemo-12b": 12.2,
+    "recurrentgemma-9b": 9.0, "mixtral-8x7b": 46.7,
+    "llama4-scout-17b-a16e": 107.0, "internvl2-26b": 20.0,
+}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_matches_eval_shape(arch):
+    cfg = get_config(arch).reduced()
+    analytic = param_count(cfg)
+    actual = sum(int(x.size) for x in jax.tree.leaves(abstract_params(cfg)))
+    assert abs(analytic - actual) / actual < 0.02, (analytic, actual)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_size_in_expected_range(arch):
+    n = param_count(get_config(arch)) / 1e9
+    exp = EXPECTED_B[arch]
+    assert 0.8 * exp < n < 1.25 * exp, (arch, n, exp)
+
+
+def test_pattern_covers_depth():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        assert len(cfg.blocks()) == cfg.n_layers
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("mixtral-8x7b")
+    assert active_param_count(cfg) < 0.4 * param_count(cfg)
+
+
+def test_long_500k_skips():
+    skipped = {a for a in ARCH_IDS
+               if not shape_applicable(get_config(a), SHAPES["long_500k"])[0]}
+    assert skipped == {"musicgen-medium", "nemotron-4-340b",
+                       "mistral-nemo-12b", "internvl2-26b"}
+
+
+def test_40_cells_defined():
+    assert len(ARCH_IDS) * len(SHAPES) == 40
+
+
+def test_input_specs_kinds():
+    cfg = get_config("internvl2-26b")
+    tr = input_specs(cfg, SHAPES["train_4k"])
+    assert tr["tokens"].shape == (256, 4096 - cfg.n_prefix_embeds)
+    assert "prefix_embeds" in tr
+    de = input_specs(cfg, SHAPES["decode_32k"])
+    assert de["tokens"].shape == (128, 1)
+    assert "positions" in de
+
+
+def test_padded_vocab_divisible():
+    for arch in ARCH_IDS:
+        assert get_config(arch).padded_vocab_size % 16 == 0

@@ -1,0 +1,165 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _attn_inputs(b, s, K, G, hd, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, s, K, G, hd), dtype)
+    k = jax.random.normal(ks[1], (b, s, K, hd), dtype)
+    v = jax.random.normal(ks[2], (b, s, K, hd), dtype)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    return q, k, v, pos
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5),
+                                        (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize("s,K,G,hd,window,chunk,qb,kb", [
+    (128, 2, 2, 32, None, None, 64, 64),
+    (128, 1, 4, 16, 48, None, 32, 32),
+    (256, 2, 1, 64, None, 64, 64, 64),
+    (64, 4, 1, 8, 16, None, 64, 64),     # single q block
+])
+def test_flash_attention_sweep(dtype, atol, s, K, G, hd, window, chunk, qb,
+                               kb):
+    q, k, v, pos = _attn_inputs(2, s, K, G, hd, dtype)
+    out = ops.flash_attention(q, k, v, pos, pos, window=window, chunk=chunk,
+                              backend="interpret", q_block=qb, kv_block=kb)
+    exp = ref.flash_attention_ref(q, k, v, pos, pos, window=window,
+                                  chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=atol,
+                               rtol=atol)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5),
+                                        (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize("L,K,G,hd,window,kvb", [
+    (128, 2, 2, 32, None, 32),
+    (128, 1, 4, 16, 40, 64),
+    (96, 8, 1, 8, None, 48),
+])
+def test_decode_attention_sweep(dtype, atol, L, K, G, hd, window, kvb):
+    b = 3
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, K, G, hd), dtype)
+    kc = jax.random.normal(ks[1], (b, L, K, hd), dtype)
+    vc = jax.random.normal(ks[2], (b, L, K, hd), dtype)
+    cpos = jnp.broadcast_to(jnp.arange(L, dtype=jnp.int32)[None], (b, L))
+    positions = jnp.array([L - 1, L // 2, 7], jnp.int32)
+    out = ops.decode_attention(q, kc, vc, cpos, positions, window=window,
+                               backend="interpret", kv_block=kvb)
+    exp = ref.decode_attention_ref(q, kc, vc, cpos, positions, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=atol,
+                               rtol=atol)
+
+
+@pytest.mark.parametrize("backend", ["interpret", "blocked"])
+@pytest.mark.parametrize("s,h,dk,dv,chunk", [
+    (128, 2, 16, 16, 32),
+    (64, 1, 8, 24, 64),     # dk != dv
+    (96, 4, 32, 32, 32),
+])
+def test_mlstm_scan_sweep(backend, s, h, dk, dv, chunk):
+    b = 2
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, s, h, dk)) * 0.5
+    k = jax.random.normal(ks[1], (b, s, h, dk)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, dv))
+    ig = jax.random.normal(ks[3], (b, s, h))
+    fg = jax.random.normal(ks[4], (b, s, h)) + 2.0
+    out, (C, n, m) = ops.mlstm_scan(q, k, v, ig, fg, chunk=chunk,
+                                    backend=backend)
+    exp, (Cr, nr, mr) = ops.mlstm_scan(q, k, v, ig, fg, backend="ref")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(C), np.asarray(Cr), atol=1e-4,
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr), atol=1e-5,
+                               rtol=1e-5)
+
+
+def test_mlstm_decode_step_matches_ref():
+    b, h, dk, dv, S = 2, 2, 8, 8, 16
+    ks = jax.random.split(KEY, 5)
+    q = jax.random.normal(ks[0], (b, S, h, dk)) * 0.5
+    k = jax.random.normal(ks[1], (b, S, h, dk)) * 0.5
+    v = jax.random.normal(ks[2], (b, S, h, dv))
+    ig = jax.random.normal(ks[3], (b, S, h))
+    fg = jax.random.normal(ks[4], (b, S, h)) + 1.0
+    exp, _ = ops.mlstm_scan(q, k, v, ig, fg, backend="ref")
+    C = jnp.zeros((b, h, dk, dv))
+    n = jnp.zeros((b, h, dk))
+    m = jnp.full((b, h, 1), -jnp.inf)
+    outs = []
+    state = (C, n, m)
+    for t in range(S):
+        o, state = ops.mlstm_decode_step(q[:, t], k[:, t], v[:, t],
+                                         ig[:, t], fg[:, t], state)
+        outs.append(o)
+    out = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=1e-4,
+                               rtol=1e-4)
+
+
+def test_flash_kernel_bf16_io_f32_math():
+    """Kernel must not lose the online-softmax accuracy to bf16 accumulation."""
+    q, k, v, pos = _attn_inputs(1, 128, 1, 1, 32, jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, pos, pos, backend="interpret",
+                              q_block=32, kv_block=32)
+    exp = ref.flash_attention_ref(q.astype(jnp.float32),
+                                  k.astype(jnp.float32),
+                                  v.astype(jnp.float32), pos, pos)
+    assert float(jnp.max(jnp.abs(out.astype(jnp.float32) - exp))) < 0.03
+
+
+@pytest.mark.parametrize("window,chunk", [(None, None), (48, None),
+                                          (None, 64)])
+def test_flash_attention_bwd_matches_ref_grads(window, chunk):
+    """Pallas dQ/dK/dV kernels vs autodiff through the jnp oracle."""
+    b, s, K, G, hd = 1, 128, 2, 2, 16
+    q, k, v, pos = _attn_inputs(b, s, K, G, hd, jnp.float32)
+
+    def loss_kernel(q, k, v):
+        out = ops.flash_attention_trainable(
+            q, k, v, pos, pos, window=window, chunk=chunk,
+            q_block=32, kv_block=32, interpret=True)
+        return jnp.sum(out * out)
+
+    def loss_ref(q, k, v):
+        out = ref.flash_attention_ref(q, k, v, pos, pos, window=window,
+                                      chunk=chunk)
+        return jnp.sum(out * out)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_flash_fwd_lse_matches_ref():
+    b, s, K, G, hd = 2, 64, 1, 2, 16
+    q, k, v, pos = _attn_inputs(b, s, K, G, hd, jnp.float32)
+    from repro.kernels.flash_attention import flash_attention_fwd
+    qh = q.reshape(b, s, K * G, hd)
+    out, lse = flash_attention_fwd(qh, k, v, pos, pos, q_block=32,
+                                   kv_block=32, interpret=True,
+                                   return_lse=True)
+    # reference lse
+    import numpy as _np
+    scale = 1.0 / _np.sqrt(hd)
+    s_ = jnp.einsum("bqkgh,bskh->bkgqs", q, k) * scale
+    mask = (pos[:, None, :] <= pos[:, :, None])[:, None, None]
+    s_ = jnp.where(jnp.moveaxis(mask, 3, 3), s_, -1e30)
+    lse_ref = jax.scipy.special.logsumexp(s_, axis=-1)  # [b,K,G,s]
+    lse_ref = jnp.moveaxis(lse_ref.reshape(b, K * G, s), 1, 2)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref),
+                               atol=1e-4, rtol=1e-4)

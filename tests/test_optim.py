@@ -1,0 +1,88 @@
+"""Optimizers: AdamW reference math, adafactor behaviour, clipping, schedule."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import optimizers as opt
+from repro.optim.schedule import warmup_cosine
+
+
+def test_adamw_first_step_matches_reference():
+    ocfg = opt.OptimizerConfig(kind="adamw_f32", lr=0.1, b1=0.9, b2=0.99,
+                               eps=1e-8, weight_decay=0.0)
+    params = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    grads = {"w": jnp.asarray([0.5, 0.5, -1.0])}
+    state = opt.init_state(ocfg, params)
+    new_p, _ = opt.apply_updates(ocfg, params, grads, state, 0.1)
+    # bias-corrected first step: m̂=g, v̂=g² -> step = g/(|g|+eps) = sign(g)
+    expected = np.asarray([1.0, -2.0, 3.0]) - 0.1 * np.sign([0.5, 0.5, -1.0])
+    np.testing.assert_allclose(np.asarray(new_p["w"]), expected, atol=1e-5)
+
+
+def test_adamw_weight_decay_shrinks():
+    ocfg = opt.OptimizerConfig(kind="adamw_f32", lr=0.1, weight_decay=0.5)
+    params = {"w": jnp.asarray([10.0])}
+    grads = {"w": jnp.asarray([0.0])}
+    state = opt.init_state(ocfg, params)
+    new_p, _ = opt.apply_updates(ocfg, params, grads, state, 0.1)
+    assert float(new_p["w"][0]) < 10.0
+
+
+def test_adamw_bf16_state_dtype():
+    ocfg = opt.OptimizerConfig(kind="adamw_bf16")
+    params = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+    state = opt.init_state(ocfg, params)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_adafactor_factored_shapes():
+    ocfg = opt.OptimizerConfig(kind="adafactor")
+    params = {"w": jnp.zeros((6, 8)), "b": jnp.zeros((8,)),
+              "t": jnp.zeros((2, 6, 8))}
+    state = opt.init_state(ocfg, params)
+    assert state["f"]["w"]["vr"].shape == (6,)
+    assert state["f"]["w"]["vc"].shape == (8,)
+    assert state["f"]["t"]["vr"].shape == (2, 6)
+    assert state["f"]["t"]["vc"].shape == (2, 8)
+    assert state["f"]["b"]["v"].shape == (8,)
+
+
+def test_adafactor_state_much_smaller():
+    ocfg = opt.OptimizerConfig(kind="adafactor")
+    params = {"w": jnp.zeros((512, 512))}
+    state = opt.init_state(ocfg, params)
+    state_elems = sum(x.size for x in jax.tree.leaves(state))
+    assert state_elems < 0.01 * params["w"].size
+
+
+def test_adafactor_descends_quadratic():
+    ocfg = opt.OptimizerConfig(kind="adafactor", lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.full((4, 4), 5.0)}
+    state = opt.init_state(ocfg, params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    l0 = float(loss(params))
+    for _ in range(20):
+        grads = jax.grad(loss)(params)
+        params, state = opt.apply_updates(ocfg, params, grads, state, 0.1)
+    assert float(loss(params)) < l0 * 0.5
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    clipped, norm = opt.clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(5.0)
+    cn = float(opt.global_norm(clipped))
+    assert cn == pytest.approx(1.0, rel=1e-5)
+    # under the limit: unchanged
+    same, _ = opt.clip_by_global_norm(tree, 100.0)
+    np.testing.assert_allclose(np.asarray(same["a"]), [3.0])
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(jnp.asarray(s), 1e-3, 10, 100))
+           for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1e-3 + 1e-9           # warmup ascends
+    assert lrs[10] == pytest.approx(1e-3, rel=0.1)  # peak after warmup
+    assert lrs[-1] < lrs[20]                         # cosine decays
+    assert lrs[-1] >= 1e-4 - 1e-9                    # min_ratio floor

@@ -1,0 +1,106 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import classifier as C
+from repro.models import layers
+from repro.optim import compress
+from repro.data.pipeline import DataConfig, TokenPipeline
+
+S = settings(max_examples=25, deadline=None)
+
+
+@S
+@given(st.floats(0, 100, allow_nan=False), st.floats(0, 100, allow_nan=False))
+def test_classifier_total_function(alpha, inc):
+    cat = C.classify(alpha, inc)
+    assert cat in C.Category
+    # Table I boundaries
+    if alpha >= 1.0:
+        assert cat in (C.Category.EXPANDING_RAPID, C.Category.EXPANDING_MEDIUM)
+    elif alpha <= 0.5:
+        assert cat == C.Category.SHRINKING
+    else:
+        assert cat == C.Category.MEDIUM
+
+
+@S
+@given(st.integers(1, 6), st.integers(2, 64))
+def test_rmsnorm_scale_invariance(seed, d):
+    """rmsnorm(c·x) ≈ rmsnorm(x) for c > 0 (zero-scale params). Exact only
+    up to the eps regularizer, so inputs are kept well-scaled."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (3, d)) + 2.0
+    scale = jnp.zeros((d,))
+    a = layers.rmsnorm(scale, x)
+    b = layers.rmsnorm(scale, 7.3 * x)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4,
+                               rtol=1e-4)
+
+
+@S
+@given(st.integers(1, 5), st.integers(1, 8))
+def test_rope_preserves_norm(seed, hd_half):
+    hd = 2 * hd_half
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 4, 2, hd))
+    pos = jnp.broadcast_to(jnp.arange(4, dtype=jnp.int32)[None], (1, 4))
+    y = layers.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5, atol=1e-5)
+
+
+@S
+@given(st.integers(0, 2**31 - 1), st.integers(1, 400))
+def test_quantize_int8_bounded_error(seed, scale_int):
+    """Dequantized value within one quantization step of the input."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (64,)) * (scale_int / 10.0)
+    q, s = compress.quantize_int8(x, key)
+    err = np.abs(np.asarray(compress.dequantize_int8(q, s)) - np.asarray(x))
+    assert err.max() <= float(s) + 1e-6
+
+
+def test_quantize_int8_unbiased():
+    """Stochastic rounding: E[dequant] == x (mean over many keys)."""
+    x = jnp.asarray([0.301, -0.777, 0.123, 0.499]) * 0.01
+    acc = np.zeros(4)
+    n = 400
+    for i in range(n):
+        q, s = compress.quantize_int8(x, jax.random.PRNGKey(i))
+        acc += np.asarray(compress.dequantize_int8(q, s))
+    np.testing.assert_allclose(acc / n, np.asarray(x), atol=2e-4)
+
+
+@S
+@given(st.integers(0, 1000), st.integers(1, 4), st.integers(2, 4))
+def test_pipeline_determinism(step, host, n_hosts_pow):
+    n_hosts = 2 ** n_hosts_pow
+    host = host % n_hosts
+    dc = DataConfig(vocab_size=101, seq_len=8, global_batch=16, seed=1)
+    a = TokenPipeline(dc, n_hosts=n_hosts, host_id=host).batch_at(step)
+    b = TokenPipeline(dc, n_hosts=n_hosts, host_id=host).batch_at(step)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].min() >= 0
+    assert a["tokens"].max() < 101
+
+
+@S
+@given(st.integers(0, 2**31 - 1))
+def test_targets_are_next_tokens(seed):
+    dc = DataConfig(vocab_size=101, seq_len=32, global_batch=2,
+                    seed=seed % 1000, markov_p=0.5)
+    b = TokenPipeline(dc).batch_at(0)
+    # within a row, targets[i] must equal tokens[i+1]
+    np.testing.assert_array_equal(b["targets"][:, :-1], b["tokens"][:, 1:])
+
+
+@S
+@given(st.integers(2, 40), st.integers(1, 39))
+def test_ring_cache_slot_bijection(L, span):
+    """Any L consecutive positions map to distinct ring slots."""
+    start = span
+    pos = np.arange(start, start + L)
+    slots = pos % L
+    assert len(set(slots.tolist())) == L

@@ -1,0 +1,59 @@
+"""Serving: prefill+decode equals full forward; greedy generation runs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import ModelSettings, apply, init_params
+from repro.models.attention import AttnSettings
+from repro.runtime.serve_step import (greedy_generate, make_decode_step,
+                                      make_prefill_step)
+
+KEY = jax.random.PRNGKey(1)
+SETTINGS = ModelSettings(attn=AttnSettings(backend="naive"))
+
+DECODE_ARCHS = ["h2o-danube-1.8b", "xlstm-1.3b", "recurrentgemma-9b",
+                "gemma3-12b", "mixtral-8x7b", "llama4-scout-17b-a16e",
+                "mistral-nemo-12b", "musicgen-medium", "nemotron-4-340b"]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_decode_matches_full_forward(arch):
+    cfg = get_config(arch).reduced()
+    params = init_params(KEY, cfg)
+    S, S0, b = 24, 16, 2
+    tokens = jax.random.randint(KEY, (b, S), 0, cfg.vocab_size)
+    full_logits, _, _ = apply(params, cfg, tokens, settings=SETTINGS)
+    prefill = make_prefill_step(cfg, SETTINGS)
+    decode = make_decode_step(cfg, SETTINGS)
+    _, cache = prefill(params, tokens[:, :S0], context=S)
+    errs = []
+    for t in range(S0, S):
+        pos = jnp.full((b,), t, jnp.int32)
+        lg, cache = decode(params, tokens[:, t:t + 1], pos, cache, context=S)
+        errs.append(float(jnp.abs(lg - full_logits[:, t]).max()))
+    assert max(errs) < 0.06, errs   # bf16 params tolerance
+
+
+def test_greedy_generate_deterministic():
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    params = init_params(KEY, cfg)
+    prompt = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size)
+    out1 = greedy_generate(params, cfg, prompt, n_steps=6, context=16,
+                           settings=SETTINGS)
+    out2 = greedy_generate(params, cfg, prompt, n_steps=6, context=16,
+                           settings=SETTINGS)
+    assert out1.shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert int(out1.max()) < cfg.padded_vocab_size
+
+
+def test_prefill_last_logits_only():
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    params = init_params(KEY, cfg)
+    prefill = make_prefill_step(cfg, SETTINGS)
+    logits, cache = prefill(params, jax.random.randint(KEY, (2, 8), 0, 100),
+                            context=16)
+    assert logits.shape == (2, cfg.padded_vocab_size)
+    assert cache is not None

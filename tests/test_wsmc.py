@@ -1,0 +1,191 @@
+"""WSMC math: classifier thresholds (Tables I-II), predictor (Eqs. 6-11),
+planner lattice, min_devices (Eq. 9)."""
+import pytest
+
+from repro import hw as HW
+from repro.configs import SHAPES, get_config
+from repro.core import classifier as C
+from repro.core import expansion as E
+from repro.core import planner as PL
+from repro.core import predictor as PR
+
+
+def _mk_profile(alpha, input_bytes=1e6, n_stages=1, seq=512, **kw):
+    return E.MemoryProfile(
+        arch="x", shape_name="s", kind="train", n_devices=8, seq_len=seq,
+        global_batch=8, n_stages=n_stages, input_bytes=input_bytes,
+        argument_bytes=0.0, transient_bytes=alpha * input_bytes * n_stages,
+        output_bytes=0.0, reported_peak=0.0, **kw)
+
+
+# --- Table I / II thresholds ------------------------------------------------
+
+@pytest.mark.parametrize("alpha,inc,cat", [
+    (1.0, 2.0, C.Category.EXPANDING_RAPID),
+    (1.5, 2.5, C.Category.EXPANDING_RAPID),
+    (1.0, 1.9, C.Category.EXPANDING_MEDIUM),
+    (5.0, 0.5, C.Category.EXPANDING_MEDIUM),
+    (0.75, 5.0, C.Category.MEDIUM),
+    (0.51, 0.1, C.Category.MEDIUM),
+    (0.5, 9.0, C.Category.SHRINKING),
+    (0.1, 0.0, C.Category.SHRINKING),
+])
+def test_classify_thresholds(alpha, inc, cat):
+    assert C.classify(alpha, inc) == cat
+
+
+def test_classification_partitions_space():
+    """Every (α, inc) lands in exactly one category."""
+    for alpha in (0.0, 0.3, 0.5, 0.7, 1.0, 3.0, 50.0):
+        for inc in (0.0, 1.0, 2.0, 10.0):
+            assert C.classify(alpha, inc) in C.Category
+
+
+def test_factor_table_is_papers():
+    assert C.FACTOR_SHUF[C.Category.EXPANDING_RAPID] == 4
+    assert C.FACTOR_SHUF[C.Category.EXPANDING_MEDIUM] == 3
+    assert C.FACTOR_SHUF[C.Category.MEDIUM] == 2
+    assert C.FACTOR_SHUF[C.Category.SHRINKING] == 1
+
+
+# --- Eq. 4/5 ----------------------------------------------------------------
+
+def test_mean_expansion_ratio():
+    ps = [_mk_profile(2.0), _mk_profile(4.0)]
+    assert abs(E.mean_expansion_ratio(ps) - 3.0) < 1e-9
+
+
+def test_increasing_rate_linear_is_one():
+    ps = [_mk_profile(2.0, input_bytes=x) for x in (1e6, 2e6, 4e6)]
+    assert abs(E.increasing_rate(ps) - 1.0) < 1e-6
+
+
+def test_increasing_rate_superlinear():
+    # transient ∝ input² -> inc grows past 2
+    ps = []
+    for x in (1e6, 2e6, 4e6):
+        p = _mk_profile(1.0, input_bytes=x)
+        object.__setattr__(p, "transient_bytes", x * x / 1e6)
+        ps.append(p)
+    assert E.increasing_rate(ps) > 2.0
+
+
+def test_fitted_slope_exact_on_linear_data():
+    ps = [_mk_profile(3.0, input_bytes=x) for x in (1e6, 2e6, 3e6)]
+    assert abs(E.fitted_slope(ps) - 3.0) < 1e-6
+
+
+# --- Eqs. 6-11 ---------------------------------------------------------------
+
+def _cls(cat=C.Category.MEDIUM, alpha=0.8, inc=1.0, slope=0.8, intercept=0.0):
+    return C.Classification(category=cat, alpha=alpha, inc=inc, slope=slope,
+                            intercept=intercept)
+
+
+MESH = {"data": 16, "model": 16}
+
+
+def test_capacity_eq11():
+    assert HW.capacity_from_requirement(900, 300) == pytest.approx(
+        1200 * 4 / 3 + HW.TPU_V5E.reserved_bytes)
+
+
+def test_predict_monotone_in_microbatches():
+    cfg = get_config("h2o-danube-1.8b")
+    shape = SHAPES["train_4k"]
+    cls = _cls()
+    t1 = PR.transient_bytes(cfg, shape, PR.MemoryPlan(microbatches=1), cls,
+                            MESH)
+    t4 = PR.transient_bytes(cfg, shape, PR.MemoryPlan(microbatches=4), cls,
+                            MESH)
+    assert t4 == pytest.approx(t1 / 4)
+
+
+def test_predict_remat_ordering():
+    cfg = get_config("h2o-danube-1.8b")
+    shape = SHAPES["train_4k"]
+    cls = _cls()
+    ts = [PR.transient_bytes(cfg, shape, PR.MemoryPlan(remat=r), cls, MESH)
+          for r in ("none", "dots", "full")]
+    assert ts[0] > ts[1] > ts[2]
+
+
+def test_resident_includes_opt_state():
+    cfg = get_config("h2o-danube-1.8b")
+    shape = SHAPES["train_4k"]
+    r_f32 = PR.resident_bytes(cfg, shape, PR.MemoryPlan(optimizer="adamw_f32"),
+                              MESH)
+    r_af = PR.resident_bytes(cfg, shape,
+                             PR.MemoryPlan(optimizer="adafactor"), MESH)
+    assert r_f32 > r_af
+
+
+def test_decode_cache_dominates_resident():
+    cfg = get_config("mistral-nemo-12b")
+    shape = SHAPES["decode_32k"]
+    plan = PR.MemoryPlan(kv_shard="seq")
+    cache = PR.cache_bytes_per_device(cfg, shape, plan, MESH)
+    assert cache > 0
+    res = PR.resident_bytes(cfg, shape, plan, MESH)
+    assert res > cache  # params + cache
+
+
+def test_min_devices_monotone():
+    cfg = get_config("nemotron-4-340b")
+    shape = SHAPES["train_4k"]
+    cls = _cls(C.Category.MEDIUM)
+    light = PR.MemoryPlan(remat="full", microbatches=16,
+                          optimizer="adafactor")
+    heavy = PR.MemoryPlan(remat="none", microbatches=1,
+                          optimizer="adamw_f32")
+    dl = PR.min_devices(cfg, shape, light, cls)
+    dh = PR.min_devices(cfg, shape, heavy, cls)
+    assert dl > 0
+    assert dh == -1 or dh >= dl
+
+
+# --- planner ------------------------------------------------------------------
+
+def test_candidate_lattice_fastest_first():
+    cfg = get_config("h2o-danube-1.8b")
+    cands = PL.candidate_plans(cfg, SHAPES["train_4k"])
+    pens = [p.step_time_penalty() for p in cands]
+    assert pens == sorted(pens)
+    assert cands[0].remat == "none" and cands[0].microbatches == 1
+
+
+def test_wsmc_plan_picks_first_fitting():
+    cfg = get_config("h2o-danube-1.8b")
+    shape = SHAPES["train_4k"]
+    dec = PL.wsmc_plan(cfg, shape, _cls(), MESH)
+    assert dec.prediction.fits
+    assert dec.policy == "wsmc"
+    # a plan one notch faster must NOT fit (otherwise it would be chosen)
+    cands = [p for p in PL.candidate_plans(cfg, shape)
+             if (shape.global_batch // p.microbatches) % 16 == 0]
+    idx = cands.index(dec.plan)
+    for faster in cands[:idx]:
+        assert not PR.predict(cfg, shape, faster, _cls(), MESH).fits
+
+
+def test_default_plan_is_safest():
+    cfg = get_config("h2o-danube-1.8b")
+    plan = PL.default_plan(cfg, SHAPES["train_4k"])
+    assert plan.remat == "full" and plan.optimizer == "adafactor"
+
+
+def test_oracle_search_counts_compiles():
+    cfg = get_config("h2o-danube-1.8b")
+    shape = SHAPES["train_4k"]
+    budget = HW.TPU_V5E.hbm_bytes / HW.CAPACITY_HEADROOM \
+        - HW.TPU_V5E.reserved_bytes
+    calls = []
+
+    def fake_measure(plan):
+        calls.append(plan)
+        # only full remat fits in this fake world
+        return budget * (0.5 if plan.remat == "full" else 10.0)
+
+    plan, peak, n = PL.oracle_plan(cfg, shape, fake_measure)
+    assert plan.remat == "full"
+    assert n == len(calls) and n > 1
