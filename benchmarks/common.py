@@ -43,6 +43,32 @@ def small_mesh(shape=(4, 2), axes=("data", "model")):
     return make_mesh(shape, axes)
 
 
+# The benchmark mesh as a plain {axis: size} dict — all the simulator needs.
+SMALL_MESH_SHAPE = {"data": 4, "model": 2}
+
+
+def backend() -> str:
+    """Measurement backend for this benchmark run: WSMC_BACKEND env var,
+    'compile' (XLA ground truth) by default, 'simulate' for the zero-compile
+    analytical sweeps."""
+    return os.environ.get("WSMC_BACKEND", "compile")
+
+
+def measurer(mesh=None):
+    """Build the run's MemoryMeasurer. Under 'simulate' no jax mesh (hence
+    no fake-device subprocess) is required; under 'compile' a real mesh is
+    built unless one is passed in. WSMC_PROFILE_CACHE points the on-disk
+    profile cache."""
+    from repro.core import measure as MM
+    cache_path = os.environ.get("WSMC_PROFILE_CACHE")
+    cache = MM.ProfileCache(cache_path) if cache_path else None
+    if backend() == "simulate":
+        return MM.SimulatedMeasurer(
+            SMALL_MESH_SHAPE if mesh is None else mesh, cache=cache)
+    return MM.CompileMeasurer(mesh if mesh is not None else small_mesh(),
+                              cache=cache)
+
+
 def ensure_devices(n: int = 8):
     """Benchmarks that need a mesh re-exec themselves with fake devices."""
     import jax

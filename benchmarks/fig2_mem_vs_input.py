@@ -8,22 +8,19 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, flush
+from benchmarks.common import emit, flush, measurer
 
 ARCHS = ["h2o-danube-1.8b", "mixtral-8x7b", "xlstm-1.3b", "gemma3-12b"]
 SEQS = [64, 128, 256, 512]
 
 
 def main():
-    import jax
     from repro.configs import get_config
     from repro.configs.base import ShapeConfig, TRAIN
-    from repro.core import profiler as PF
     from repro.core.classifier import classify_profiles
     from repro.core.predictor import MemoryPlan, predict
-    from repro.launch.mesh import make_mesh
 
-    mesh = make_mesh((4, 2), ("data", "model"))
+    m = measurer()
     plan = MemoryPlan()
     for arch in ARCHS:
         cfg = get_config(arch).reduced()
@@ -31,7 +28,7 @@ def main():
         for seq in SEQS:
             shape = ShapeConfig(f"t{seq}", TRAIN, seq, 8)
             t0 = time.perf_counter()
-            p = PF.profile_point(cfg, shape, mesh, plan)
+            p = m.measure(cfg, shape, plan)
             us = (time.perf_counter() - t0) * 1e6
             profiles.append(p)
             emit(f"fig2.measure.{arch}.seq{seq}", us,
@@ -41,7 +38,7 @@ def main():
         cls = classify_profiles(profiles[:3])
         target = ShapeConfig("t", TRAIN, SEQS[-1], 8)
         for mode in ("paper", "fitted"):
-            pred = predict(cfg, target, plan, cls, dict(mesh.shape),
+            pred = predict(cfg, target, plan, cls, m.mesh_shape,
                            mode=mode)
             actual = profiles[-1].peak_bytes
             err = (pred.resident_bytes + pred.transient_bytes) / max(

@@ -7,25 +7,24 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, flush
+from benchmarks.common import emit, flush, measurer
 
 
 def main():
     from repro.configs import ARCH_IDS, get_config
     from repro.configs.base import ShapeConfig, TRAIN
     from repro.core import profiler as PF
-    from repro.core.classifier import classify_profiles
     from repro.core.predictor import MemoryPlan
-    from repro.launch.mesh import make_mesh
+    from repro.core.classifier import classify_profiles
 
-    mesh = make_mesh((4, 2), ("data", "model"))
+    m = measurer()
     plan = MemoryPlan()
     shape = ShapeConfig("t", TRAIN, 256, 8)   # same input size for all
     for arch in ARCH_IDS:
         cfg = get_config(arch).reduced()
         t0 = time.perf_counter()
-        ladder = PF.profile_ladder(cfg, shape, mesh, plan, n_points=3,
-                                   base_seq=64)
+        ladder = PF.profile_ladder(cfg, shape, None, plan, n_points=3,
+                                   base_seq=64, measurer=m)
         us = (time.perf_counter() - t0) * 1e6
         p = ladder[-1]
         cls = classify_profiles(ladder)

@@ -16,89 +16,93 @@ from __future__ import annotations
 import dataclasses
 import time
 
-from benchmarks.common import emit, flush
+from benchmarks.common import backend, emit, flush, measurer
 
 ARCHS = ["h2o-danube-1.8b", "mixtral-8x7b", "xlstm-1.3b"]
 
 
 def main():
-    import jax
-    import jax.numpy as jnp
     from repro import hw as HW
     from repro.configs import get_config
     from repro.configs.base import ShapeConfig, TRAIN
     from repro.core import planner as PL
     from repro.core import profiler as PF
     from repro.core.classifier import classify_profiles
-    from repro.data.pipeline import DataConfig, TokenPipeline
-    from repro.launch import compile as LC
-    from repro.launch.mesh import make_mesh
-    from repro.models import init_params
-    from repro.optim import optimizers as opt
-    from repro.runtime.train_step import make_train_step
 
-    mesh = make_mesh((4, 2), ("data", "model"))
+    m = measurer()
     shape = ShapeConfig("t", TRAIN, 256, 8)
     # miniature HBM budget so the knob choice is non-trivial at test scale:
     hbm = dataclasses.replace(HW.TPU_V5E, hbm_bytes=64 * 2**20,
                               reserved_bytes=2 * 2**20)
 
-    def measure_peak(cfg, plan):
-        bundle = LC.build(cfg, shape, mesh,
-                          strategy=PF.strategy_for(cfg, plan, mesh),
-                          tcfg=PF._tcfg_for(plan))
-        ma = bundle.compile().memory_analysis()
-        return float(ma.argument_size_in_bytes + ma.output_size_in_bytes
-                     + ma.temp_size_in_bytes)
-
     for arch in ARCHS:
         cfg = get_config(arch).reduced()
         cls = classify_profiles(
-            PF.profile_ladder(cfg, shape, mesh, n_points=3, base_seq=64))
+            PF.profile_ladder(cfg, shape, None, n_points=3, base_seq=64,
+                              measurer=m))
 
         policies = {}
         policies["default"] = PL.default_plan(cfg, shape)
         t0 = time.perf_counter()
-        policies["wsmc"] = PL.wsmc_plan(cfg, shape, cls, dict(mesh.shape),
+        policies["wsmc"] = PL.wsmc_plan(cfg, shape, cls, m.mesh_shape,
                                         hw=hbm).plan
         wsmc_us = (time.perf_counter() - t0) * 1e6
         t0 = time.perf_counter()
-        proper, proper_peak, n_compiles = PL.oracle_plan(
-            cfg, shape, lambda p: measure_peak(cfg, p), hw=hbm,
-            max_candidates=6)
+        proper, proper_peak, n_measures = PL.oracle_plan(
+            cfg, shape, hw=hbm, max_candidates=6, measurer=m)
         oracle_us = (time.perf_counter() - t0) * 1e6
         policies["proper"] = proper
         emit(f"policies.search_cost.{arch}", wsmc_us,
              f"wsmc_prediction_only;oracle_us={oracle_us:.0f};"
-             f"oracle_compiles={n_compiles}")
+             f"oracle_measures={n_measures};backend={m.backend}")
 
         for name, plan in policies.items():
             # Fig. 8: memory
-            peak = measure_peak(cfg, plan)
+            peak = m.measure_peak(cfg, shape, plan)
             capacity = (hbm.hbm_bytes if name == "default"
                         else HW.capacity_from_requirement(peak, 0.0, hbm))
-            # Fig. 7: step time (3 steps, after 1 warmup)
-            params = init_params(jax.random.PRNGKey(0), cfg)
-            tcfg = PF._tcfg_for(plan)
-            step = jax.jit(make_train_step(cfg, tcfg))
-            ostate = opt.init_state(tcfg.optimizer, params)
-            pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
-                                            seq_len=shape.seq_len,
-                                            global_batch=shape.global_batch))
-            batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
-            params, ostate, _ = step(params, ostate, batch, jnp.asarray(0))
-            t0 = time.perf_counter()
-            for s in range(3):
-                params, ostate, m = step(params, ostate, batch,
-                                         jnp.asarray(s + 1))
-            jax.block_until_ready(m["loss"])
-            step_us = (time.perf_counter() - t0) / 3 * 1e6
+            emit(f"fig8.mem.{arch}.{name}", 0.0,
+                 f"peak_bytes={peak:.0f};capacity_bytes={capacity:.0f}")
+            # Fig. 7: step time (3 steps, after 1 warmup). Real execution —
+            # only meaningful (and only possible) with live devices, so the
+            # simulate backend reports the analytic penalty alone.
+            if backend() == "simulate":
+                emit(f"fig7.time.{arch}.{name}", 0.0,
+                     f"remat={plan.remat};micro={plan.microbatches};"
+                     f"opt={plan.optimizer};"
+                     f"penalty={plan.step_time_penalty():.2f};analytic_only")
+                continue
+            step_us = _timed_step(cfg, shape, plan)
             emit(f"fig7.time.{arch}.{name}", step_us,
                  f"remat={plan.remat};micro={plan.microbatches};"
                  f"opt={plan.optimizer};penalty={plan.step_time_penalty():.2f}")
-            emit(f"fig8.mem.{arch}.{name}", 0.0,
-                 f"peak_bytes={peak:.0f};capacity_bytes={capacity:.0f}")
     flush()
+
+
+def _timed_step(cfg, shape, plan):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import profiler as PF
+    from repro.data.pipeline import DataConfig, TokenPipeline
+    from repro.models import init_params
+    from repro.optim import optimizers as opt
+    from repro.runtime.train_step import make_train_step
+
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    tcfg = PF._tcfg_for(plan)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    ostate = opt.init_state(tcfg.optimizer, params)
+    pipe = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=shape.seq_len,
+                                    global_batch=shape.global_batch))
+    batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+    params, ostate, _ = step(params, ostate, batch, jnp.asarray(0))
+    t0 = time.perf_counter()
+    for s in range(3):
+        params, ostate, metrics = step(params, ostate, batch,
+                                       jnp.asarray(s + 1))
+    jax.block_until_ready(metrics["loss"])
+    return (time.perf_counter() - t0) / 3 * 1e6
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ single device (dry-run rule).
 """
 from __future__ import annotations
 
+import argparse
 import os
 import subprocess
 import sys
@@ -21,9 +22,14 @@ LOCAL_BENCHES = [
 ]
 
 
-def _run_subprocess(module: str) -> int:
+def _run_subprocess(module: str, backend: str = "compile",
+                    profile_cache: str = "") -> int:
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["WSMC_BACKEND"] = backend
+    if profile_cache:
+        env["WSMC_PROFILE_CACHE"] = profile_cache
+    if backend == "compile":
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env["PYTHONPATH"] = os.pathsep.join(
         [os.path.join(root, "src"), root,
@@ -37,11 +43,23 @@ def _run_subprocess(module: str) -> int:
     return proc.returncode
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default=os.environ.get("WSMC_BACKEND",
+                                                        "compile"),
+                    choices=["compile", "simulate"],
+                    help="memory-measurement backend for the WSMC sweeps "
+                         "(simulate = zero XLA compiles, seconds not minutes)")
+    ap.add_argument("--profile-cache",
+                    default=os.environ.get("WSMC_PROFILE_CACHE", ""),
+                    help="on-disk MemoryProfile cache path shared by all "
+                         "benchmark modules")
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     failures = 0
     for module in MESH_BENCHES:
-        failures += _run_subprocess(module) != 0
+        failures += _run_subprocess(module, args.backend,
+                                    args.profile_cache) != 0
     for module in LOCAL_BENCHES:
         import importlib
         importlib.import_module(module).main()

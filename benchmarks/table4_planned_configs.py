@@ -6,7 +6,7 @@ from __future__ import annotations
 
 import time
 
-from benchmarks.common import emit, flush
+from benchmarks.common import emit, flush, measurer
 
 
 def main():
@@ -15,20 +15,20 @@ def main():
     from repro.core import planner as PL
     from repro.core import profiler as PF
     from repro.core.classifier import classify_profiles
-    from repro.launch.mesh import make_mesh
 
-    mesh = make_mesh((4, 2), ("data", "model"))
+    m = measurer()
     for arch in ARCH_IDS:
         cfg = get_config(arch).reduced()
         base = ShapeConfig("t", TRAIN, 256, 8)
         t0 = time.perf_counter()
         cls = classify_profiles(
-            PF.profile_ladder(cfg, base, mesh, n_points=3, base_seq=64))
+            PF.profile_ladder(cfg, base, None, n_points=3, base_seq=64,
+                              measurer=m))
         profile_us = (time.perf_counter() - t0) * 1e6
         for seq in (128, 256, 512):
             shape = ShapeConfig(f"t{seq}", TRAIN, seq, 8)
             t0 = time.perf_counter()
-            dec = PL.wsmc_plan(cfg, shape, cls, dict(mesh.shape))
+            dec = PL.wsmc_plan(cfg, shape, cls, m.mesh_shape)
             us = (time.perf_counter() - t0) * 1e6
             emit(f"table4.{arch}.seq{seq}", us,
                  f"category={cls.category.value};remat={dec.plan.remat};"

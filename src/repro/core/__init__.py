@@ -8,6 +8,10 @@ from repro.core.classifier import (  # noqa: F401
 from repro.core.expansion import (  # noqa: F401
     MemoryProfile, expansion_ratio, increasing_rate, mean_expansion_ratio,
 )
+from repro.core.measure import (  # noqa: F401
+    BASELINE_PLAN, CompileMeasurer, MemoryMeasurer, ProfileCache,
+    SimulatedMeasurer, measurer_for,
+)
 from repro.core.planner import (  # noqa: F401
     PlanDecision, candidate_plans, default_plan, oracle_plan, wsmc_plan,
 )

@@ -99,14 +99,20 @@ def wsmc_plan(cfg: ModelConfig, shape: ShapeConfig, cls: Classification,
 
 
 def oracle_plan(cfg: ModelConfig, shape: ShapeConfig,
-                measure: Callable[[MemoryPlan], float],
+                measure: Optional[Callable[[MemoryPlan], float]] = None,
                 hw: HW.HardwareSpec = HW.TPU_V5E,
-                max_candidates: Optional[int] = None) -> Tuple[MemoryPlan,
-                                                               float, int]:
-    """The 'proper configuration': compile-verify candidates fastest-first
-    until one's measured peak fits. `measure(plan)` returns peak bytes/device
-    (a real compile — expensive; this is exactly the cost WSMC avoids).
-    Returns (plan, measured_peak, n_compiles)."""
+                max_candidates: Optional[int] = None,
+                measurer=None) -> Tuple[MemoryPlan, float, int]:
+    """The 'proper configuration': measure-verify candidates fastest-first
+    until one's measured peak fits. `measure(plan)` returns peak bytes/device.
+    Alternatively pass a `core.measure.MemoryMeasurer` — under the compile
+    backend each call is a real compile (expensive; exactly the cost WSMC
+    avoids), under the simulator the whole search is compile-free.
+    Returns (plan, measured_peak, n_measurements)."""
+    if measure is None:
+        if measurer is None:
+            raise TypeError("oracle_plan needs `measure` or `measurer`")
+        measure = measurer.peak_fn(cfg, shape)
     cands = candidate_plans(cfg, shape)
     if max_candidates:
         cands = cands[:max_candidates]

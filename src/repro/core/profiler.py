@@ -1,9 +1,11 @@
 """Online workload profiling (paper §III-E) and the offline knowledge base.
 
-Online phase: an ad-hoc workload (arch × shape × kind) is AOT-compiled on a
+Online phase: an ad-hoc workload (arch × shape × kind) is measured on a
 *ladder of small shapes* (the paper's 50-250 MB inputs), its per-device
-transient/input bytes extracted from memory_analysis(), classified, and the
-classification handed to the planner. Zero data movement: compile-time only.
+transient/input bytes classified, and the classification handed to the
+planner. Measurement goes through a pluggable `core.measure.MemoryMeasurer`:
+the compile backend (AOT-compile + memory_analysis(); zero data movement,
+compile-time only) or the analytical simulator (closed form, zero compiles).
 
 Offline phase: the same over the benchmark suite (the 10 assigned archs),
 persisted as JSON — the paper's Table III knowledge base.
@@ -19,18 +21,12 @@ from repro.configs.base import (DECODE, PREFILL, TRAIN, ModelConfig,
                                 ShapeConfig)
 from repro.core import expansion as E
 from repro.core.classifier import Classification, classify_profiles
+from repro.core.measure import BASELINE_PLAN, CompileMeasurer, MemoryMeasurer
 from repro.core.predictor import MemoryPlan
-from repro.launch import compile as LC
 from repro.models import model as M
-from repro.models.attention import AttnSettings
 from repro.optim.optimizers import OptimizerConfig
 from repro.parallel import sharding as S
 from repro.runtime.train_step import TrainStepConfig
-
-# Baseline profiling plan (slope is measured here; the planner scales it
-# analytically for other knob settings — see predictor.transient_bytes).
-BASELINE_PLAN = MemoryPlan(remat="none", microbatches=1,
-                           optimizer="adamw_f32")
 
 
 def ladder_shapes(shape: ShapeConfig, n_points: int = 3,
@@ -73,40 +69,44 @@ def strategy_for(cfg: ModelConfig, plan: MemoryPlan, mesh) -> S.Strategy:
     return dataclasses.replace(base, kv_shard=plan.kv_shard)
 
 
+def _measurer_or_default(mesh, measurer: Optional[MemoryMeasurer]
+                         ) -> MemoryMeasurer:
+    """Back-compat default: no explicit measurer means the compile backend
+    on the given mesh (the original behaviour of these entry points)."""
+    return measurer if measurer is not None else CompileMeasurer(mesh)
+
+
 def profile_point(cfg: ModelConfig, shape: ShapeConfig, mesh,
                   plan: MemoryPlan = BASELINE_PLAN,
-                  settings: Optional[M.ModelSettings] = None
+                  settings: Optional[M.ModelSettings] = None,
+                  measurer: Optional[MemoryMeasurer] = None
                   ) -> E.MemoryProfile:
-    """One compile -> one MemoryProfile (per-device numbers)."""
-    strategy = strategy_for(cfg, plan, mesh)
-    bundle = LC.build(cfg, shape, mesh, strategy=strategy,
-                      tcfg=_tcfg_for(plan, settings), settings=settings)
-    compiled = bundle.compile()
-    n_dev = mesh.devices.size
-    dp = 1
-    for ax in ("pod", "data"):
-        if ax in mesh.shape:
-            dp *= mesh.shape[ax]
-    return E.profile_from_compiled(compiled, cfg, shape, n_dev, dp)
+    """One measurement -> one MemoryProfile (per-device numbers)."""
+    return _measurer_or_default(mesh, measurer).measure(cfg, shape, plan,
+                                                        settings)
 
 
 def profile_ladder(cfg: ModelConfig, shape: ShapeConfig, mesh,
                    plan: MemoryPlan = BASELINE_PLAN,
                    n_points: int = 3, base_seq: int = 512,
-                   settings: Optional[M.ModelSettings] = None
+                   settings: Optional[M.ModelSettings] = None,
+                   measurer: Optional[MemoryMeasurer] = None
                    ) -> List[E.MemoryProfile]:
+    m = _measurer_or_default(mesh, measurer)
     min_seq = cfg.n_prefix_embeds if shape.kind != "decode" else 0
-    return [profile_point(cfg, sh, mesh, plan, settings)
+    return [m.measure(cfg, sh, plan, settings)
             for sh in ladder_shapes(shape, n_points, base_seq, min_seq)]
 
 
 def classify_workload(cfg: ModelConfig, shape: ShapeConfig, mesh,
                       plan: MemoryPlan = BASELINE_PLAN,
                       n_points: int = 3, base_seq: int = 512,
-                      settings: Optional[M.ModelSettings] = None
+                      settings: Optional[M.ModelSettings] = None,
+                      measurer: Optional[MemoryMeasurer] = None
                       ) -> Classification:
     return classify_profiles(
-        profile_ladder(cfg, shape, mesh, plan, n_points, base_seq, settings))
+        profile_ladder(cfg, shape, mesh, plan, n_points, base_seq, settings,
+                       measurer))
 
 
 # ---------------------------------------------------------------------------

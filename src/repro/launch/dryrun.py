@@ -6,17 +6,20 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 For every (architecture × input shape) cell:
   1. offline/online WSMC phases pick the memory plan (knowledge base),
-  2. the full-depth step is lowered + compiled on the single-pod (16,16)
-     mesh AND the multi-pod (2,16,16) mesh — memory_analysis() proves the
-     per-device footprint, the multi-pod pass proves the "pod" axis shards,
+  2. the full-depth step is measured on the single-pod (16,16) mesh AND
+     the multi-pod (2,16,16) mesh — under the default compile backend,
+     memory_analysis() proves the per-device footprint and the multi-pod
+     pass proves the "pod" axis shards; under --backend simulate the same
+     sweep runs compile-free in seconds via the analytical measurer,
   3. depth-1/2 unrolled variants provide scan-corrected roofline terms
-     (single-pod only — §Roofline).
+     (single-pod, compile backend only — §Roofline).
 
 Artifacts: one JSON per cell under --out, plus a summary table.
 
 Usage:
   python -m repro.launch.dryrun --arch all --shape all --mesh both \
-      --out artifacts/dryrun [--no-roofline] [--kb artifacts/kb.json]
+      --out artifacts/dryrun [--no-roofline] [--kb artifacts/kb.json] \
+      [--backend compile|simulate] [--profile-cache artifacts/profiles.json]
 """
 import argparse
 import dataclasses
@@ -25,19 +28,24 @@ import time
 import traceback
 from typing import Dict, Optional
 
-import jax
-
 from repro.configs import (ARCH_IDS, SHAPES, SHAPE_ORDER, get_config,
                            shape_applicable)
 from repro.configs.base import TRAIN, ModelConfig, ShapeConfig
+from repro.core import measure as MM
 from repro.core import planner as PL
 from repro.core import profiler as PF
-from repro.core.classifier import Classification, Category, classify_profiles
-from repro.core.expansion import profile_from_compiled
+from repro.core.classifier import Classification, Category
 from repro.launch import compile as LC
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import ModelSettings
 from repro.roofline import analysis as RA
+
+# Mesh shapes the driver sweeps; under --backend simulate no jax Mesh (and
+# no fake-device process) is ever constructed — the dicts are enough.
+MESH_SHAPES = {
+    "single": {"data": 16, "model": 16},
+    "multi": {"pod": 2, "data": 16, "model": 16},
+}
 
 
 def depth_variant(cfg: ModelConfig, n_units: int) -> ModelConfig:
@@ -45,22 +53,16 @@ def depth_variant(cfg: ModelConfig, n_units: int) -> ModelConfig:
         cfg, n_layers=n_units * len(cfg.unit) + len(cfg.tail))
 
 
-def dp_size(mesh) -> int:
-    dp = 1
-    for ax in ("pod", "data"):
-        if ax in mesh.shape:
-            dp *= mesh.shape[ax]
-    return dp
-
-
-def classification_for(cfg, shape, mesh, kb: Dict) -> Classification:
+def classification_for(cfg, shape, measurer: MM.MemoryMeasurer,
+                       kb: Dict) -> Classification:
     key = f"{cfg.name}::{shape.kind}"
     if key in kb:
         e = kb[key]
         return Classification(category=Category(e["category"]),
                               alpha=e["alpha"], inc=e["inc"],
                               slope=e["slope"], intercept=e["intercept"])
-    cls = PF.classify_workload(cfg, shape, mesh, n_points=3, base_seq=512)
+    cls = PF.classify_workload(cfg, shape, None, n_points=3, base_seq=512,
+                               measurer=measurer)
     kb[key] = {"category": cls.category.value, "alpha": cls.alpha,
                "inc": cls.inc, "slope": cls.slope,
                "intercept": cls.intercept, "factor": cls.factor}
@@ -75,7 +77,8 @@ def paper_faithful_settings(scan_layers: bool = True) -> ModelSettings:
                          attn=AttnSettings(repeat_kv=False))
 
 
-def run_cell(arch: str, shape: ShapeConfig, meshes: Dict[str, object],
+def run_cell(arch: str, shape: ShapeConfig,
+             measurers: Dict[str, MM.MemoryMeasurer],
              kb: Dict, do_roofline: bool = True,
              plan_override=None, settings_fn=ModelSettings) -> dict:
     cfg = get_config(arch)
@@ -86,14 +89,17 @@ def run_cell(arch: str, shape: ShapeConfig, meshes: Dict[str, object],
         result["reason"] = reason
         return result
 
-    single = meshes.get("single")
+    # The single-pod measurer anchors profiling/roofline; a multi-only
+    # sweep (--mesh multi) profiles on the multi-pod mesh instead.
+    single_m = measurers.get("single") or next(iter(measurers.values()))
+    result["backend"] = single_m.backend
     # --- WSMC online phase (profiling ladder on the single-pod mesh) ----
     t0 = time.time()
-    cls = classification_for(cfg, shape, single, kb)
+    cls = classification_for(cfg, shape, single_m, kb)
     plan = plan_override
     if plan is None:
         factors = PF.calibrated_factors(kb)
-        decision = PL.wsmc_plan(cfg, shape, cls, dict(single.shape),
+        decision = PL.wsmc_plan(cfg, shape, cls, single_m.mesh_shape,
                                 factors=factors)
         plan = decision.plan
         result["wsmc"] = {
@@ -107,47 +113,45 @@ def run_cell(arch: str, shape: ShapeConfig, meshes: Dict[str, object],
         }
     result["profile_s"] = round(time.time() - t0, 1)
 
-    # --- full-depth compiles on each mesh -------------------------------
-    for mesh_name, mesh in meshes.items():
+    # --- full-depth measurement on each mesh ----------------------------
+    for mesh_name, measurer in measurers.items():
         t0 = time.time()
         # re-plan per mesh: microbatch divisibility depends on the dp size
         if plan_override is None:
-            mesh_plan = PL.wsmc_plan(cfg, shape, cls, dict(mesh.shape),
+            mesh_plan = PL.wsmc_plan(cfg, shape, cls, measurer.mesh_shape,
                                      factors=PF.calibrated_factors(kb)).plan
         else:
             mesh_plan = plan_override
         st = settings_fn(scan_layers=True)
-        tcfg = PF._tcfg_for(mesh_plan, settings=st)
-        strategy = PF.strategy_for(cfg, mesh_plan, mesh)
-        bundle = LC.build(cfg, shape, mesh, strategy=strategy, tcfg=tcfg,
-                          settings=st)
-        compiled = bundle.compile()
-        ma = compiled.memory_analysis()
-        print(f"[{arch} × {shape.name} × {mesh_name}] memory_analysis:", ma,
-              flush=True)
+        prof = measurer.measure(cfg, shape, mesh_plan, settings=st)
         entry = {
-            "argument_bytes": int(ma.argument_size_in_bytes),
-            "output_bytes": int(ma.output_size_in_bytes),
-            "temp_bytes": int(ma.temp_size_in_bytes),
-            "peak_static_bytes": int(ma.argument_size_in_bytes
-                                     + ma.output_size_in_bytes
-                                     + ma.temp_size_in_bytes),
-            "compile_s": round(time.time() - t0, 1),
-            "n_devices": int(mesh.devices.size),
+            "argument_bytes": int(prof.argument_bytes),
+            "output_bytes": int(prof.output_bytes),
+            "temp_bytes": int(prof.transient_bytes),
+            "peak_static_bytes": int(prof.peak_bytes),
+            "measure_s": round(time.time() - t0, 1),
+            "n_devices": int(MM.n_devices_of(measurer.mesh_shape)),
+            "alpha_full": round(prof.alpha, 3),
         }
-        prof = profile_from_compiled(compiled, cfg, shape,
-                                     mesh.devices.size, dp_size(mesh))
-        entry["alpha_full"] = round(prof.alpha, 3)
-        if mesh_name == "single":
-            ca = compiled.cost_analysis()
+        print(f"[{arch} × {shape.name} × {mesh_name}] "
+              f"{measurer.backend} measure: args={entry['argument_bytes']} "
+              f"temp={entry['temp_bytes']} out={entry['output_bytes']}",
+              flush=True)
+        if mesh_name == "single" and measurer.last_compiled is not None:
+            # raw HLO flops only exist under the compile backend (and only
+            # when the profile wasn't served from the cache)
+            ca = RA.cost_dict(measurer.last_compiled)
             print(f"[{arch} × {shape.name} × {mesh_name}] cost_analysis "
                   f"(scan counts body once): flops={ca.get('flops', 0):.3e}",
                   flush=True)
             entry["raw_cost_flops"] = float(ca.get("flops", 0.0))
+        measurer.last_compiled = None
         result[f"mesh_{mesh_name}"] = entry
-        del compiled, bundle
 
-    # --- roofline (depth-extrapolated, single-pod) -----------------------
+    # --- roofline (depth-extrapolated, single-pod, compile backend) ------
+    single = (measurers["single"].mesh
+              if "single" in measurers
+              and measurers["single"].backend == "compile" else None)
     if do_roofline and single is not None:
         t0 = time.time()
         # microbatches=1: the microbatch loop is a lax.scan whose body
@@ -187,16 +191,29 @@ def main(argv=None):
     ap.add_argument("--paper-faithful", action="store_true",
                     help="disable the beyond-paper default optimizations "
                          "(baseline reproduction cells)")
+    ap.add_argument("--backend", default="compile",
+                    choices=["compile", "simulate"],
+                    help="memory-measurement backend: 'compile' = XLA "
+                         "memory_analysis() ground truth (slow), 'simulate' "
+                         "= closed-form analytical model (zero compiles)")
+    ap.add_argument("--profile-cache", default=None,
+                    help="path of the on-disk MemoryProfile cache (keyed by "
+                         "arch × shape × plan × mesh × backend)")
     args = ap.parse_args(argv)
 
     archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
     shapes = list(SHAPE_ORDER) if args.shape == "all" else args.shape.split(",")
 
-    meshes = {}
-    if args.mesh in ("single", "both"):
-        meshes["single"] = make_production_mesh(multi_pod=False)
-    if args.mesh in ("multi", "both"):
-        meshes["multi"] = make_production_mesh(multi_pod=True)
+    cache = MM.ProfileCache(args.profile_cache) if args.profile_cache else None
+    measurers = {}
+    for name in ("single", "multi"):
+        if args.mesh not in (name, "both"):
+            continue
+        if args.backend == "compile":
+            mesh = make_production_mesh(multi_pod=(name == "multi"))
+        else:
+            mesh = MESH_SHAPES[name]     # no jax mesh needed to simulate
+        measurers[name] = MM.measurer_for(args.backend, mesh, cache=cache)
 
     os.makedirs(args.out, exist_ok=True)
     kb = {}
@@ -221,7 +238,7 @@ def main(argv=None):
             try:
                 settings_fn = (paper_faithful_settings if args.paper_faithful
                                else ModelSettings)
-                result = run_cell(arch, shape, meshes, kb,
+                result = run_cell(arch, shape, measurers, kb,
                                   do_roofline=not args.no_roofline,
                                   settings_fn=settings_fn)
             except Exception as e:  # noqa: BLE001 — record and continue

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel import axes as pax
+
 
 def pipeline_apply(stage_fn: Callable, stage_params, x_micro, *,
                    mesh: Mesh, axis: str = "pipe"):
@@ -78,7 +80,7 @@ def pipeline_apply(stage_fn: Callable, stage_params, x_micro, *,
         return outputs
 
     stacked_spec = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(per_device, mesh=mesh,
+    fn = pax.shard_map(per_device, mesh=mesh,
                        in_specs=(stacked_spec, P()), out_specs=P(),
                        check_vma=False)
     return fn(stage_params, x_micro)

@@ -7,6 +7,9 @@ import pytest
 from repro.configs.base import BlockSpec
 from repro.models import attention as A
 
+# XLA compiles dominate the runtime => slow tier
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(7)
 
 

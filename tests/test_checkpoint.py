@@ -10,6 +10,9 @@ import pytest
 from repro.checkpoint import ckpt as CK
 from conftest import run_in_subprocess
 
+# subprocess + XLA compiles => slow tier
+pytestmark = pytest.mark.slow
+
 TREE = {"params": {"w": jnp.arange(12.0).reshape(3, 4),
                    "layers": [jnp.ones((2, 2)), jnp.zeros((5,))]},
         "opt": {"count": jnp.asarray(3)}}

@@ -5,6 +5,9 @@ import pytest
 
 from conftest import run_in_subprocess
 
+# subprocess + XLA compiles => slow tier
+pytestmark = pytest.mark.slow
+
 
 def test_dryrun_flow_all_kinds():
     code = """

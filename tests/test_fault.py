@@ -13,6 +13,9 @@ from repro.optim import optimizers as opt
 from repro.runtime import fault as F
 from repro.runtime.train_step import TrainStepConfig, make_train_step
 
+# XLA compiles dominate the runtime => slow tier
+pytestmark = pytest.mark.slow
+
 SETTINGS = ModelSettings(attn=AttnSettings(backend="blocked", q_block=16,
                                            kv_block=16))
 

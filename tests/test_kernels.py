@@ -6,6 +6,9 @@ import pytest
 
 from repro.kernels import ops, ref
 
+# XLA compiles dominate the runtime => slow tier
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(3)
 
 

@@ -1,5 +1,10 @@
 """Pipeline parallelism: pipelined forward/backward == sequential."""
+import pytest
+
 from conftest import run_in_subprocess
+
+# subprocess + XLA compiles => slow tier
+pytestmark = pytest.mark.slow
 
 
 def test_pipeline_matches_sequential():

@@ -1,0 +1,112 @@
+"""Offline knowledge base + ladder construction (profiler.py): the paper's
+Table III calibration machinery, previously untested."""
+import dataclasses
+
+import pytest
+
+from repro.configs.base import DECODE, PREFILL, TRAIN, ShapeConfig
+from repro.core import profiler as PF
+from repro.core.classifier import Category, Classification, FACTOR_SHUF
+
+
+# --- ladder_shapes edge cases ------------------------------------------------
+
+def test_ladder_ascending_and_capped_at_target():
+    shape = ShapeConfig("t", TRAIN, 4_096, 256)
+    ladder = PF.ladder_shapes(shape, n_points=3, base_seq=512)
+    seqs = [s.seq_len for s in ladder]
+    assert seqs == [512, 1024, 2048]
+    assert all(s.kind == TRAIN for s in ladder)
+
+
+def test_ladder_tiny_target_collapses_and_dedupes():
+    """A target smaller than the base rung collapses the ladder to one
+    unique point (every rung clamps to the target seq)."""
+    shape = ShapeConfig("t", TRAIN, 256, 8)
+    ladder = PF.ladder_shapes(shape, n_points=3, base_seq=512)
+    assert [s.seq_len for s in ladder] == [256]
+
+
+def test_ladder_min_seq_flooring():
+    """Prefix-embed archs need seq > n_prefix: base_seq doubles past the
+    floor before the ladder starts."""
+    shape = ShapeConfig("t", PREFILL, 32_768, 32)
+    ladder = PF.ladder_shapes(shape, n_points=3, base_seq=512, min_seq=512)
+    assert [s.seq_len for s in ladder] == [1024, 2048, 4096]
+    # floor far above base: first rung still clears it
+    ladder = PF.ladder_shapes(shape, n_points=2, base_seq=512, min_seq=3000)
+    assert ladder[0].seq_len == 4096
+
+
+def test_ladder_decode_clamps_context():
+    """Decode rungs never profile below a 1024-token cache."""
+    shape = ShapeConfig("d", DECODE, 32_768, 128)
+    ladder = PF.ladder_shapes(shape, n_points=3, base_seq=128)
+    assert [s.seq_len for s in ladder] == [1024]  # 128/256/512 all clamp+dedupe
+    ladder = PF.ladder_shapes(shape, n_points=3, base_seq=1024)
+    assert [s.seq_len for s in ladder] == [1024, 2048, 4096]
+
+
+def test_ladder_names_are_distinct():
+    shape = ShapeConfig("t", TRAIN, 4_096, 256)
+    names = [s.name for s in PF.ladder_shapes(shape, n_points=3)]
+    assert len(set(names)) == len(names)
+
+
+# --- calibrated_factors ------------------------------------------------------
+
+def _kb_entry(cat, alpha):
+    return {"category": cat.value, "alpha": alpha, "inc": 1.0,
+            "slope": alpha, "intercept": 0.0, "factor": FACTOR_SHUF[cat]}
+
+
+def test_calibrated_factors_empty_kb_is_paper_table():
+    out = PF.calibrated_factors({})
+    assert out == {c.value: f for c, f in FACTOR_SHUF.items()}
+
+
+def test_calibrated_factors_envelope_with_margin():
+    kb = {"a::train": _kb_entry(Category.EXPANDING_MEDIUM, 10.0),
+          "b::train": _kb_entry(Category.EXPANDING_MEDIUM, 4.0)}
+    out = PF.calibrated_factors(kb)
+    # max observed alpha (10) + 10% margin beats the paper's 3
+    assert out[Category.EXPANDING_MEDIUM.value] == pytest.approx(11.0)
+    # unseen categories keep the paper values
+    assert out[Category.SHRINKING.value] == FACTOR_SHUF[Category.SHRINKING]
+
+
+def test_calibrated_factors_never_below_paper():
+    kb = {"a::train": _kb_entry(Category.EXPANDING_RAPID, 0.01)}
+    out = PF.calibrated_factors(kb)
+    assert out[Category.EXPANDING_RAPID.value] == \
+        FACTOR_SHUF[Category.EXPANDING_RAPID]
+
+
+# --- knowledge base round-trip ----------------------------------------------
+
+def _cls(cat=Category.MEDIUM, alpha=0.8):
+    return Classification(category=cat, alpha=alpha, inc=1.2, slope=0.75,
+                          intercept=123.0)
+
+
+def test_build_save_load_roundtrip(tmp_path):
+    entries = {"h2o::train": _cls(Category.EXPANDING_MEDIUM, 2.5),
+               "xlstm::decode": _cls(Category.SHRINKING, 0.2)}
+    kb = PF.build_knowledge_base(entries)
+    assert kb["h2o::train"]["factor"] == \
+        FACTOR_SHUF[Category.EXPANDING_MEDIUM]
+    path = str(tmp_path / "sub" / "kb.json")   # exercises makedirs
+    PF.save_knowledge_base(path, kb)
+    loaded = PF.load_knowledge_base(path)
+    assert loaded == kb
+    # the loaded KB feeds calibration directly (alpha 2.5 → envelope 2.75
+    # stays floored at the paper's factor 3)
+    factors = PF.calibrated_factors(loaded)
+    assert factors[Category.EXPANDING_MEDIUM.value] == pytest.approx(3.0)
+
+
+def test_save_knowledge_base_bare_filename(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    PF.save_knowledge_base("kb.json", {"k": {"category": "Medium",
+                                             "alpha": 1.0}})
+    assert PF.load_knowledge_base("kb.json")["k"]["alpha"] == 1.0

@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (optional test dep)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import classifier as C
 from repro.models import layers

@@ -3,10 +3,14 @@ streaming matches sequence processing."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.kernels import ref as kref
 from repro.models import recurrent as R
+
+# XLA compiles dominate the runtime => slow tier
+pytestmark = pytest.mark.slow
 
 KEY = jax.random.PRNGKey(11)
 

@@ -10,6 +10,9 @@ from repro.models.attention import AttnSettings
 from repro.runtime.serve_step import (greedy_generate, make_decode_step,
                                       make_prefill_step)
 
+# XLA compiles dominate the runtime => slow tier
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(1)
 SETTINGS = ModelSettings(attn=AttnSettings(backend="naive"))
 

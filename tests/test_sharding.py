@@ -5,6 +5,9 @@ import pytest
 
 from conftest import run_in_subprocess
 
+# subprocess + XLA compiles => slow tier
+pytestmark = pytest.mark.slow
+
 _is_spec = None  # placeholder (subprocess snippets define their own)
 
 from repro.configs import get_config
@@ -133,11 +136,12 @@ from functools import partial
 from jax.sharding import PartitionSpec as P
 from repro.launch.mesh import make_mesh
 from repro.optim.compress import compressed_psum
+from repro.parallel import shard_map
 
 mesh = make_mesh((8,), ("data",))
 x = jnp.arange(64.0).reshape(8, 8) / 7.0
 
-@partial(jax.shard_map, mesh=mesh, in_specs=P("data"), out_specs=P("data"))
+@partial(shard_map, mesh=mesh, in_specs=P("data"), out_specs=P("data"))
 def f(xs):
     key = jax.random.PRNGKey(0)
     return compressed_psum(xs, "data", key)
