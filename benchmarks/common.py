@@ -8,9 +8,7 @@ wall-clock, which the roofline covers.
 """
 from __future__ import annotations
 
-import contextlib
 import os
-import sys
 import time
 from typing import Callable, List, Tuple
 

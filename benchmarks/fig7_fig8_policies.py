@@ -1,10 +1,13 @@
-"""Paper Figs. 7 & 8 — the three-policy comparison:
+"""Paper Figs. 7 & 8 — the policy comparison, run through the unified
+`repro.search` subsystem:
 
   default — static conservative config (Spark's 2 GB analogue): full remat,
             deep microbatching, adafactor, full-HBM capacity request
-  wsmc    — planner-chosen config from the small-ladder classification
-  proper  — oracle: compile-verified exhaustive search (the paper's
-            manually-found configuration)
+  wsmc    — strategies.fastest_first over the paper space (§III-E walk)
+  staged  — simulator-screened top-k, verified on the run's backend
+            (oracle quality in O(k) expensive measurements)
+  proper  — strategies.exhaustive_verified: the paper's manually-found
+            configuration (measure-verify the whole walk)
 
 Fig. 7 analogue: measured wall-clock of one train step per policy (CPU,
 reduced config — the *relative* ordering is the claim) plus the analytic
@@ -25,9 +28,12 @@ def main():
     from repro import hw as HW
     from repro.configs import get_config
     from repro.configs.base import ShapeConfig, TRAIN
+    from repro.core import measure as MM
     from repro.core import planner as PL
     from repro.core import profiler as PF
     from repro.core.classifier import classify_profiles
+    from repro.search import space as SPC
+    from repro.search import strategies as ST
 
     m = measurer()
     shape = ShapeConfig("t", TRAIN, 256, 8)
@@ -40,21 +46,29 @@ def main():
         cls = classify_profiles(
             PF.profile_ladder(cfg, shape, None, n_points=3, base_seq=64,
                               measurer=m))
+        space = SPC.paper_space(cfg, shape, m.mesh_shape)
 
         policies = {}
         policies["default"] = PL.default_plan(cfg, shape)
         t0 = time.perf_counter()
-        policies["wsmc"] = PL.wsmc_plan(cfg, shape, cls, m.mesh_shape,
-                                        hw=hbm).plan
+        policies["wsmc"] = ST.fastest_first(space, cfg, shape, cls,
+                                            hw=hbm).plan
         wsmc_us = (time.perf_counter() - t0) * 1e6
         t0 = time.perf_counter()
-        proper, proper_peak, n_measures = PL.oracle_plan(
-            cfg, shape, hw=hbm, max_candidates=6, measurer=m)
+        st = ST.staged(space, cfg, shape,
+                       screener=MM.SimulatedMeasurer(m.mesh_shape),
+                       verifier=m, k=5, hw=hbm)
+        staged_us = (time.perf_counter() - t0) * 1e6
+        policies["staged"] = st.plan
+        t0 = time.perf_counter()
+        ex = ST.exhaustive_verified(space, cfg, shape, hw=hbm,
+                                    max_candidates=6, measurer=m)
         oracle_us = (time.perf_counter() - t0) * 1e6
-        policies["proper"] = proper
+        policies["proper"] = ex.plan
         emit(f"policies.search_cost.{arch}", wsmc_us,
              f"wsmc_prediction_only;oracle_us={oracle_us:.0f};"
-             f"oracle_measures={n_measures};backend={m.backend}")
+             f"oracle_measures={ex.measured};staged_us={staged_us:.0f};"
+             f"staged_measures={st.measured};backend={m.backend}")
 
         for name, plan in policies.items():
             # Fig. 8: memory

@@ -11,7 +11,6 @@ from benchmarks.common import emit, flush
 def main():
     import jax
     import jax.numpy as jnp
-    import numpy as np
     from repro.configs.base import BlockSpec
     from repro.kernels import ops
     from repro.models import attention as A

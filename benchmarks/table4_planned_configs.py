@@ -12,9 +12,10 @@ from benchmarks.common import emit, flush, measurer
 def main():
     from repro.configs import ARCH_IDS, get_config
     from repro.configs.base import ShapeConfig, TRAIN
-    from repro.core import planner as PL
     from repro.core import profiler as PF
     from repro.core.classifier import classify_profiles
+    from repro.search import space as SPC
+    from repro.search import strategies as ST
 
     m = measurer()
     for arch in ARCH_IDS:
@@ -27,8 +28,9 @@ def main():
         profile_us = (time.perf_counter() - t0) * 1e6
         for seq in (128, 256, 512):
             shape = ShapeConfig(f"t{seq}", TRAIN, seq, 8)
+            space = SPC.paper_space(cfg, shape, m.mesh_shape)
             t0 = time.perf_counter()
-            dec = PL.wsmc_plan(cfg, shape, cls, m.mesh_shape)
+            dec = ST.fastest_first(space, cfg, shape, cls)
             us = (time.perf_counter() - t0) * 1e6
             emit(f"table4.{arch}.seq{seq}", us,
                  f"category={cls.category.value};remat={dec.plan.remat};"

@@ -13,10 +13,7 @@ XLA_FLAGS ordering).
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Optional, Sequence, Tuple
-
-import numpy as np
+from typing import Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Block descriptors
@@ -193,6 +190,13 @@ class ModelConfig:
             lru_width=None if self.lru_width is None else 64,
             n_prefix_embeds=0 if self.n_prefix_embeds == 0 else 4,
         )
+
+
+def depth_variant(cfg: ModelConfig, n_units: int) -> "ModelConfig":
+    """cfg with the unit pattern repeated `n_units` times — the depth-1/2
+    probes the roofline extrapolates from."""
+    return dataclasses.replace(
+        cfg, n_layers=n_units * len(cfg.unit) + len(cfg.tail))
 
 
 # ---------------------------------------------------------------------------

@@ -12,9 +12,19 @@ from repro.core.measure import (  # noqa: F401
     BASELINE_PLAN, CompileMeasurer, MemoryMeasurer, ProfileCache,
     SimulatedMeasurer, measurer_for,
 )
-from repro.core.planner import (  # noqa: F401
-    PlanDecision, candidate_plans, default_plan, oracle_plan, wsmc_plan,
-)
 from repro.core.predictor import (  # noqa: F401
     CapacityPrediction, MemoryPlan, min_devices, predict,
 )
+
+# planner sits on top of repro.search, which itself imports
+# repro.core.predictor/measure — importing it lazily here keeps
+# `import repro.search` (and this package) cycle-free.
+_PLANNER_EXPORTS = ("PlanDecision", "candidate_plans", "default_plan",
+                    "oracle_plan", "wsmc_plan")
+
+
+def __getattr__(name):
+    if name in _PLANNER_EXPORTS:
+        from repro.core import planner
+        return getattr(planner, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

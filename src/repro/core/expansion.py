@@ -22,9 +22,9 @@ multiplies back by the live-stage count (remat controls how many survive).
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Sequence
 
-from repro.configs.base import DECODE, ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig, ShapeConfig
 
 BYTES_ACT = 2  # bf16 activations
 

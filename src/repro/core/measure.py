@@ -36,7 +36,7 @@ import tempfile
 from typing import Callable, Dict, Optional, Union
 
 from repro.configs.base import (DECODE, MLP_DENSE, MLP_MOE, TRAIN,
-                                ModelConfig, ShapeConfig, param_count)
+                                ModelConfig, ShapeConfig)
 from repro.core import expansion as E
 from repro.core import predictor as PR
 from repro.core.predictor import MemoryPlan
@@ -161,6 +161,9 @@ class MemoryMeasurer(abc.ABC):
     """
 
     backend: str = "?"
+    # Extra cache-key discriminator for measurer-level knobs the plan/settings
+    # don't carry (e.g. the simulator's EP mode).
+    key_suffix: str = ""
 
     def __init__(self, mesh: MeshLike, cache: Optional[ProfileCache] = None):
         self.mesh = mesh
@@ -174,8 +177,9 @@ class MemoryMeasurer(abc.ABC):
     def measure(self, cfg: ModelConfig, shape: ShapeConfig,
                 plan: MemoryPlan = BASELINE_PLAN,
                 settings=None) -> E.MemoryProfile:
+        tag = "default" if settings is None else repr(settings)
         key = profile_key(self.backend, cfg, shape, plan, self.mesh_shape,
-                          "default" if settings is None else repr(settings))
+                          tag + self.key_suffix)
         self.last_compiled = None   # compile backend refreshes this below
         if self.cache is not None:
             hit = self.cache.get(key)
@@ -244,14 +248,29 @@ class SimulatedMeasurer(MemoryMeasurer):
     scaled by the plan's remat/microbatch knobs exactly as the capacity
     predictor assumes. Accepts a plain {axis: size} dict — no jax mesh (and
     hence no fake-device subprocess) required.
+
+    Mesh axes understood: data/pod (DP), model (TP), and pipe (pipeline
+    stages: weights and caches split across stages, 1F1B in-flight
+    microbatches keep activations live). `ep=True` models expert-parallel
+    MoE sharding (all-to-all dispatch/combine buffers instead of
+    intra-expert TP) — a Strategy-level knob the plan doesn't carry, so it
+    lives on the measurer and discriminates the cache key.
     """
 
     backend = "simulate"
 
+    def __init__(self, mesh: MeshLike, cache: Optional[ProfileCache] = None,
+                 ep: bool = False):
+        super().__init__(mesh, cache)
+        self.ep = bool(ep)
+        if self.ep:
+            self.key_suffix = "|ep"
+
     def _measure(self, cfg, shape, plan, settings) -> E.MemoryProfile:
         ms = self.mesh_shape
         resident = PR.resident_bytes(cfg, shape, plan, ms)
-        transient = simulated_transient_bytes(cfg, shape, plan, ms)
+        transient = simulated_transient_bytes(cfg, shape, plan, ms,
+                                              ep=self.ep)
         output = simulated_output_bytes(cfg, shape, ms)
         n_dev = n_devices_of(ms)
         return E.MemoryProfile(
@@ -295,7 +314,8 @@ def _tokens_per_device(cfg: ModelConfig, shape: ShapeConfig,
 
 def block_transient_bytes(cfg: ModelConfig, blk, toks: float,
                           shape: ShapeConfig,
-                          mesh_shape: Dict[str, int]) -> float:
+                          mesh_shape: Dict[str, int],
+                          ep: bool = False) -> float:
     """Live activation bytes one block materializes for `toks` tokens on one
     device (bf16 unless noted). This is the simulator's per-stage unit: the
     same quantity expansion.MemoryProfile.stage_transient_bytes estimates
@@ -340,8 +360,15 @@ def block_transient_bytes(cfg: ModelConfig, blk, toks: float,
     elif blk.mlp == MLP_MOE:
         mult = 2 if cfg.activation in ("swiglu", "geglu") else 1
         routed = toks * cfg.top_k * cfg.capacity_factor
+        # Per-device expert activations are the same bytes either way:
+        # intra-expert TP shards d_ff over `model`; EP keeps d_ff whole but
+        # each device serves only routed/model tokens (capacity-balanced).
         total += routed * (mult + 1) * cfg.d_ff / model * A
         total += toks * cfg.n_experts * BYTES_F32       # router logits
+        if ep:
+            # EP adds the all-to-all dispatch + combine buffers: the routed
+            # token slices at model width, in and out.
+            total += 2 * (routed / max(model, 1)) * d * A
     return total
 
 
@@ -373,16 +400,22 @@ SCRATCH_PER_BLOCK = 48 * 1024
 
 def simulated_transient_bytes(cfg: ModelConfig, shape: ShapeConfig,
                               plan: MemoryPlan,
-                              mesh_shape: Dict[str, int]) -> float:
+                              mesh_shape: Dict[str, int],
+                              ep: bool = False) -> float:
     """Per-device XLA-temp estimate for (cfg, shape) under `plan`."""
     toks = _tokens_per_device(cfg, shape, mesh_shape)
     if shape.kind == TRAIN:
         toks /= max(plan.microbatches, 1)
-    per_block = [block_transient_bytes(cfg, b, toks, shape, mesh_shape)
+    per_block = [block_transient_bytes(cfg, b, toks, shape, mesh_shape, ep)
                  for b in cfg.blocks()]
     if shape.kind == TRAIN:
         live = (sum(per_block) * PR.REMAT_SCALE[plan.remat]
                 * TRAIN_BWD_SCALE)
+        pipe = int(mesh_shape.get("pipe", 1))
+        if pipe > 1:
+            # each stage holds 1/pipe of the layer stack, with up to `pipe`
+            # in-flight microbatches (1F1B) keeping their activations live
+            live *= min(max(plan.microbatches, 1), pipe) / pipe
         # plus the remat-recompute scratch of the block currently in bwd
         live += max(per_block, default=0.0)
     else:

@@ -1,29 +1,35 @@
 """Capacity planner — the online phase's decision step: turn a capacity
 prediction into the workload's memory configuration (paper §III-E).
 
-Three policies, mirroring the paper's evaluation (§IV):
+Since the unified plan-search refactor this module is a thin façade over
+`repro.search`: the knob lattice is `search.space.paper_space` and the
+policies are `search.strategies` —
   default_plan — the static conservative configuration every workload gets
                  without WSMC: full remat, deep microbatching, factored
                  optimizer, full-HBM capacity request. Always fits; slowest.
                  (The analogue of Spark's static 2 GB executor default.)
-  wsmc_plan    — walk the knob lattice fastest-first, pick the first plan
-                 whose *predicted* capacity fits the HBM budget.
-  oracle_plan  — the paper's manually-found "proper configuration":
-                 exhaustive search where each candidate is verified by a
-                 real .lower().compile() + memory_analysis().
+  wsmc_plan    — strategies.fastest_first: walk the lattice fastest-first,
+                 pick the first plan whose *predicted* capacity fits.
+  oracle_plan  — strategies.exhaustive_verified: the paper's manually-found
+                 "proper configuration", each candidate verified by a
+                 measurement backend (compile = real memory_analysis()).
+Decision parity with the pre-refactor inline loops is pinned by
+tests/test_search.py.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Tuple
 
 from repro import hw as HW
-from repro.configs.base import DECODE, PREFILL, TRAIN, ModelConfig, ShapeConfig
+from repro.configs.base import TRAIN, ModelConfig, ShapeConfig
 from repro.core.classifier import Classification
-from repro.core.predictor import CapacityPrediction, MemoryPlan, predict
+from repro.core.predictor import CapacityPrediction, MemoryPlan
+from repro.search import space as SP
+from repro.search import strategies as ST
 
-REMATS = ("none", "dots", "full")
-OPTIMIZERS = ("adamw_f32", "adamw_bf16", "adafactor")
+REMATS = SP.REMATS
+OPTIMIZERS = SP.OPTIMIZERS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,24 +41,14 @@ class PlanDecision:
 
 
 def _kv_default(cfg: ModelConfig, model_size: int = 16) -> str:
-    """KV-head sharding only when heads divide the model axis; otherwise the
-    ring cache shards its sequence dim (padding/replication would multiply
-    the decode-resident cache — see musicgen kv=24 in EXPERIMENTS §Perf)."""
-    return "heads" if cfg.n_kv_heads % model_size == 0 else "seq"
+    return SP.kv_auto(cfg, model_size)
 
 
 def candidate_plans(cfg: ModelConfig, shape: ShapeConfig,
                     model_size: int = 16) -> List[MemoryPlan]:
     """The knob lattice, ordered fastest-first by step_time_penalty."""
-    kv = _kv_default(cfg, model_size)
-    if shape.kind != TRAIN:
-        return [MemoryPlan(remat="none", microbatches=1,
-                           optimizer="adamw_f32", kv_shard=kv)]
-    micros = [m for m in (1, 2, 4, 8, 16, 32, 64)
-              if shape.global_batch % m == 0]
-    cands = [MemoryPlan(remat=r, microbatches=m, optimizer=o, kv_shard=kv)
-             for r in REMATS for m in micros for o in OPTIMIZERS]
-    return sorted(cands, key=lambda p: p.step_time_penalty())
+    space = SP.paper_space(cfg, shape, model_size=model_size)
+    return [c.plan for c in space.candidates(cfg, shape)]
 
 
 def default_plan(cfg: ModelConfig, shape: ShapeConfig,
@@ -72,30 +68,11 @@ def wsmc_plan(cfg: ModelConfig, shape: ShapeConfig, cls: Classification,
               factors: Optional[dict] = None) -> PlanDecision:
     """Paper §III-E: predict per candidate, take the fastest that fits.
     `factors` is the offline-calibrated Table III (profiler.calibrated_factors)."""
-    dp = mesh_shape.get("pod", 1) * mesh_shape.get("data", 1)
-    model_size = mesh_shape.get("model", 16)
-
-    def _divisible(p):
-        per_micro = shape.global_batch // p.microbatches
-        if shape.kind == TRAIN:
-            # strict: a per-micro batch below dp replicates compute/memory
-            return per_micro % dp == 0
-        # serving: bs=1 long-context cells replicate the batch axis benignly
-        return per_micro % dp == 0 or per_micro < dp
-
-    all_cands = candidate_plans(cfg, shape, model_size)
-    cands = [p for p in all_cands if _divisible(p)] or all_cands[-1:]
-    for i, plan in enumerate(cands):
-        pred = predict(cfg, shape, plan, cls, mesh_shape, mode, hw, factors)
-        if pred.fits:
-            return PlanDecision(plan=plan, prediction=pred, policy="wsmc",
-                                considered=i + 1)
-    # nothing fits: return the safest with its (over-budget) prediction
-    plan = cands[-1]
-    return PlanDecision(plan=plan,
-                        prediction=predict(cfg, shape, plan, cls, mesh_shape,
-                                           mode, hw, factors),
-                        policy="wsmc_overflow", considered=len(cands))
+    space = SP.paper_space(cfg, shape, mesh_shape)
+    res = ST.fastest_first(space, cfg, shape, cls, mode=mode, hw=hw,
+                           factors=factors)
+    return PlanDecision(plan=res.plan, prediction=res.prediction,
+                        policy=res.policy, considered=res.considered)
 
 
 def oracle_plan(cfg: ModelConfig, shape: ShapeConfig,
@@ -109,21 +86,10 @@ def oracle_plan(cfg: ModelConfig, shape: ShapeConfig,
     backend each call is a real compile (expensive; exactly the cost WSMC
     avoids), under the simulator the whole search is compile-free.
     Returns (plan, measured_peak, n_measurements)."""
-    if measure is None:
-        if measurer is None:
-            raise TypeError("oracle_plan needs `measure` or `measurer`")
-        measure = measurer.peak_fn(cfg, shape)
-    cands = candidate_plans(cfg, shape)
-    if max_candidates:
-        cands = cands[:max_candidates]
-    budget = hw.hbm_bytes / HW.CAPACITY_HEADROOM - hw.reserved_bytes
-    n = 0
-    best = None
-    for plan in cands:
-        n += 1
-        peak = measure(plan)
-        if peak <= budget:
-            return plan, peak, n
-        if best is None or peak < best[1]:
-            best = (plan, peak)
-    return best[0], best[1], n
+    if measure is None and measurer is None:
+        raise TypeError("oracle_plan needs `measure` or `measurer`")
+    space = SP.paper_space(cfg, shape)
+    res = ST.exhaustive_verified(space, cfg, shape, measurer=measurer,
+                                 measure=measure, hw=hw,
+                                 max_candidates=max_candidates)
+    return res.plan, res.peak_bytes, res.measured

@@ -69,11 +69,14 @@ class CapacityPrediction:
 
 
 def mesh_factors(mesh_shape: dict) -> Tuple[int, int, int]:
-    """(weight_shards, dp_size, model_size) from a mesh {axis: size} dict."""
+    """(weight_shards, dp_size, model_size) from a mesh {axis: size} dict.
+    A "pipe" axis splits the layer stack across pipeline stages, so each
+    device holds 1/pipe of the weights — it multiplies the shard count."""
     data = mesh_shape.get("data", 1)
     model = mesh_shape.get("model", 1)
     pod = mesh_shape.get("pod", 1)
-    return data * model, pod * data, model
+    pipe = mesh_shape.get("pipe", 1)
+    return data * model * pipe, pod * data, model
 
 
 def cache_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig,
@@ -107,7 +110,8 @@ def cache_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig,
             w = cfg.lru_width or cfg.d_model
             total += batch_per * w * 4
             total += batch_per * (cfg.conv_width - 1) * w * BYTES_ACT
-    return total
+    # pipeline stages each hold the caches of their own 1/pipe of the layers
+    return total / max(int(mesh_shape.get("pipe", 1)), 1)
 
 
 def resident_bytes(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan,
@@ -143,6 +147,12 @@ def transient_bytes(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan,
     data_input = embedded_input_bytes(cfg, shape, 0, dp)
     per_micro = data_input / max(plan.microbatches, 1)
     n_stages = cfg.n_layers
+    pipe = int(mesh_shape.get("pipe", 1))
+    if pipe > 1:
+        # each pipeline stage holds 1/pipe of the layers, with up to `pipe`
+        # microbatches in flight (1F1B) keeping their activations live
+        n_stages = -(-cfg.n_layers // pipe) * min(max(plan.microbatches, 1),
+                                                  pipe)
     if mode == "paper":
         # Eq. 6 per stage. The factor table is the paper's Table III —
         # *calibrated on this platform* by the offline phase when available

@@ -15,10 +15,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
-from repro.configs.base import (DECODE, PREFILL, TRAIN, ModelConfig,
-                                ShapeConfig)
+from repro.configs.base import DECODE, ModelConfig, ShapeConfig
 from repro.core import expansion as E
 from repro.core.classifier import Classification, classify_profiles
 from repro.core.measure import BASELINE_PLAN, CompileMeasurer, MemoryMeasurer
@@ -118,7 +117,7 @@ def calibrated_factors(kb: dict) -> Dict[str, float]:
     (max observed per-stage α across the benchmark suite, +10%) — the same
     empirical procedure the paper used to derive {4,3,2,1} on SparkBench.
     Falls back to the paper's values for unseen categories."""
-    from repro.core.classifier import FACTOR_SHUF, Category
+    from repro.core.classifier import FACTOR_SHUF
     out = {c.value: f for c, f in FACTOR_SHUF.items()}
     seen: Dict[str, float] = {}
     for entry in kb.values():

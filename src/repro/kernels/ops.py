@@ -15,7 +15,7 @@ REPRO_KERNEL_BACKEND.
 from __future__ import annotations
 
 import os
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -26,19 +26,19 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs import (ARCH_IDS, SHAPES, SHAPE_ORDER, get_config,
                            shape_applicable)
-from repro.configs.base import TRAIN, ModelConfig, ShapeConfig
+from repro.configs.base import ShapeConfig, depth_variant  # noqa: F401 — depth_variant re-exported for back-compat
 from repro.core import measure as MM
-from repro.core import planner as PL
 from repro.core import profiler as PF
 from repro.core.classifier import Classification, Category
 from repro.launch import compile as LC
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import ModelSettings
 from repro.roofline import analysis as RA
+from repro.search import strategies as ST
 
 # Mesh shapes the driver sweeps; under --backend simulate no jax Mesh (and
 # no fake-device process) is ever constructed — the dicts are enough.
@@ -46,11 +46,6 @@ MESH_SHAPES = {
     "single": {"data": 16, "model": 16},
     "multi": {"pod": 2, "data": 16, "model": 16},
 }
-
-
-def depth_variant(cfg: ModelConfig, n_units: int) -> ModelConfig:
-    return dataclasses.replace(
-        cfg, n_layers=n_units * len(cfg.unit) + len(cfg.tail))
 
 
 def classification_for(cfg, shape, measurer: MM.MemoryMeasurer,
@@ -80,7 +75,8 @@ def paper_faithful_settings(scan_layers: bool = True) -> ModelSettings:
 def run_cell(arch: str, shape: ShapeConfig,
              measurers: Dict[str, MM.MemoryMeasurer],
              kb: Dict, do_roofline: bool = True,
-             plan_override=None, settings_fn=ModelSettings) -> dict:
+             plan_override=None, settings_fn=ModelSettings,
+             strategy: str = "fastest") -> dict:
     cfg = get_config(arch)
     result = {"arch": arch, "shape": shape.name, "kind": shape.kind}
     ok, reason = shape_applicable(cfg, shape)
@@ -99,8 +95,9 @@ def run_cell(arch: str, shape: ShapeConfig,
     plan = plan_override
     if plan is None:
         factors = PF.calibrated_factors(kb)
-        decision = PL.wsmc_plan(cfg, shape, cls, single_m.mesh_shape,
-                                factors=factors)
+        decision = ST.plan_for(cfg, shape, cls, single_m.mesh_shape,
+                               strategy=strategy, measurer=single_m,
+                               factors=factors)
         plan = decision.plan
         result["wsmc"] = {
             "category": cls.category.value,
@@ -108,9 +105,16 @@ def run_cell(arch: str, shape: ShapeConfig,
             "inc": round(cls.inc, 3),
             "plan": dataclasses.asdict(plan),
             "policy": decision.policy,
-            "pred_capacity_bytes": decision.prediction.capacity_bytes,
-            "pred_fits": decision.prediction.fits,
+            "strategy": strategy,
+            "considered": decision.considered,
+            "measured": decision.measured,
         }
+        if decision.prediction is not None:
+            result["wsmc"]["pred_capacity_bytes"] = \
+                decision.prediction.capacity_bytes
+            result["wsmc"]["pred_fits"] = decision.prediction.fits
+        if decision.peak_bytes is not None:
+            result["wsmc"]["verified_peak_bytes"] = decision.peak_bytes
     result["profile_s"] = round(time.time() - t0, 1)
 
     # --- full-depth measurement on each mesh ----------------------------
@@ -118,8 +122,9 @@ def run_cell(arch: str, shape: ShapeConfig,
         t0 = time.time()
         # re-plan per mesh: microbatch divisibility depends on the dp size
         if plan_override is None:
-            mesh_plan = PL.wsmc_plan(cfg, shape, cls, measurer.mesh_shape,
-                                     factors=PF.calibrated_factors(kb)).plan
+            mesh_plan = ST.plan_for(cfg, shape, cls, measurer.mesh_shape,
+                                    strategy=strategy, measurer=measurer,
+                                    factors=PF.calibrated_factors(kb)).plan
         else:
             mesh_plan = plan_override
         st = settings_fn(scan_layers=True)
@@ -196,6 +201,13 @@ def main(argv=None):
                     help="memory-measurement backend: 'compile' = XLA "
                          "memory_analysis() ground truth (slow), 'simulate' "
                          "= closed-form analytical model (zero compiles)")
+    ap.add_argument("--strategy", default="fastest",
+                    choices=list(ST.CLI_STRATEGIES),
+                    help="plan-search strategy: 'fastest' = the paper's "
+                         "predicted walk, 'staged' = simulator-screened "
+                         "top-k verified on --backend, 'exhaustive' = "
+                         "verify every candidate, 'greedy' = coordinate "
+                         "hillclimb")
     ap.add_argument("--profile-cache", default=None,
                     help="path of the on-disk MemoryProfile cache (keyed by "
                          "arch × shape × plan × mesh × backend)")
@@ -240,7 +252,8 @@ def main(argv=None):
                                else ModelSettings)
                 result = run_cell(arch, shape, measurers, kb,
                                   do_roofline=not args.no_roofline,
-                                  settings_fn=settings_fn)
+                                  settings_fn=settings_fn,
+                                  strategy=args.strategy)
             except Exception as e:  # noqa: BLE001 — record and continue
                 result = {"arch": arch, "shape": shape_name,
                           "status": "failed", "error": str(e),

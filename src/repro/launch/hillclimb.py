@@ -1,105 +1,105 @@
-import os
-if "XLA_FLAGS" not in os.environ:
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-"""Perf hillclimbing harness (§Perf): lower one (arch × shape) cell under
-named optimization variants and report the three roofline terms + deltas.
+"""Perf hillclimbing harness (§Perf): search the optimization-variant space
+and lower one (arch × shape) cell under named variants, reporting the three
+roofline terms + deltas.
 
   PYTHONPATH=src python -m repro.launch.hillclimb --arch h2o-danube-1.8b \
       --shape train_4k --variants baseline,onehot_embed,remat_dots [--memory]
 
-Each variant is a (plan, settings, strategy) override bundle — the exact
-knobs the WSMC planner owns, plus beyond-paper levers (one-hot embedding,
-EP, DP-replicated weights, attention block sizes).
+Each named variant is a point in the hillclimb ConfigSpace
+(`repro.search.space.hillclimb_space`) — the exact knobs the WSMC planner
+owns plus the beyond-paper levers (one-hot embedding, EP, DP-replicated
+weights, attention block sizes, MoE routing group).
+
+The driver always runs a *planning phase* first: the selected --strategy
+searches the space through the --backend measurer. Under the default
+`--backend simulate` that phase does zero XLA compiles (ROADMAP: plan
+screening before the compile-verified pass). With no --variants the driver
+stops there; listing variants lowers + compiles each one as before.
 """
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse
 import dataclasses
 import json
 import time
-from typing import Dict, Optional
+from typing import Dict
 
-import jax
-
+from repro import hw as HW
 from repro.configs import SHAPES, get_config
-from repro.core.predictor import MemoryPlan
+from repro.core import measure as MM
 from repro.core import profiler as PF
-from repro.launch import compile as LC
-from repro.launch.dryrun import depth_variant
-from repro.launch.mesh import make_production_mesh
+from repro.core.predictor import MemoryPlan
+from repro.configs.base import depth_variant
 from repro.models.attention import AttnSettings
 from repro.models.model import ModelSettings
-from repro.parallel import sharding as S
 from repro.roofline import analysis as RA
+from repro.search import space as SP
+from repro.search import strategies as ST
 
+# The planning phase scores candidates against the single-pod production
+# mesh shape — a plain dict is all the simulator needs.
+PLAN_MESH_SHAPE = {"data": 16, "model": 16}
 
-@dataclasses.dataclass
-class Variant:
-    name: str
-    plan: Dict = dataclasses.field(default_factory=dict)
-    settings: Dict = dataclasses.field(default_factory=dict)
-    attn: Dict = dataclasses.field(default_factory=dict)
-    strategy: Dict = dataclasses.field(default_factory=dict)
+SPACE = SP.hillclimb_space(PLAN_MESH_SHAPE)
 
+# Enumeration-based strategies (fastest/staged/exhaustive) see only what a
+# measurer can distinguish: the plan knobs + ep. The other extras are
+# ordering-neutral twins — pinning them to their baselines shrinks the
+# lattice ~400x without changing any decision; greedy walks the full SPACE
+# point-by-point and keeps every lever.
+MEASURE_SPACE = SPACE.subspace(
+    "hillclimb/measure",
+    **{k.name: (k.values[0],) for k in SPACE.knobs
+       if k.group == "extra" and k.name != "ep"})
 
-VARIANTS = {
-    "baseline": Variant("baseline"),
+# Named points in SPACE: the old hand-rolled VARIANTS dict reduced to knob
+# assignments the space validates (unknown knobs / values raise at lookup).
+VARIANTS: Dict[str, Dict[str, object]] = {
+    "baseline": {},
     # --- beyond-paper levers ---
-    "onehot_embed": Variant("onehot_embed",
-                            settings=dict(embed_onehot=True)),
-    "attn_replicated": Variant("attn_replicated",
-                               attn=dict(repeat_kv=False)),
-    "repeat_kv": Variant("repeat_kv", attn=dict(repeat_kv=True)),
-    "gather_w": Variant("gather_w", attn=dict(gather_weights=True)),
-    "gather_w+onehot": Variant("gather_w+onehot",
-                               attn=dict(gather_weights=True),
-                               settings=dict(embed_onehot=True)),
-    "remat_dots": Variant("remat_dots", plan=dict(remat="dots")),
-    "remat_full": Variant("remat_full", plan=dict(remat="full")),
-    "no_fsdp": Variant("no_fsdp", strategy=dict(fsdp=False)),
-    "ep": Variant("ep", strategy=dict(ep=True)),
-    "kv_heads": Variant("kv_heads", plan=dict(kv_shard="heads"),
-                        strategy=dict(kv_shard="heads")),
-    "kv_seq": Variant("kv_seq", plan=dict(kv_shard="seq"),
-                      strategy=dict(kv_shard="seq")),
-    "qb_1024": Variant("qb_1024", attn=dict(q_block=1024, kv_block=1024)),
-    "qb_256": Variant("qb_256", attn=dict(q_block=256, kv_block=256)),
-    "micro_4": Variant("micro_4", plan=dict(microbatches=4)),
-    "moe_group_512": Variant("moe_group_512", settings=dict(moe_group=512)),
-    "moe_group_1024": Variant("moe_group_1024",
-                              settings=dict(moe_group=1024)),
-    "ep+group512": Variant("ep+group512", strategy=dict(ep=True),
-                           settings=dict(moe_group=512)),
-    "ep+g512+onehot": Variant("ep+g512+onehot", strategy=dict(ep=True),
-                              settings=dict(moe_group=512,
-                                            embed_onehot=True)),
-    "ep+g512+oh+gw": Variant("ep+g512+oh+gw", strategy=dict(ep=True),
-                             attn=dict(gather_weights=True),
-                             settings=dict(moe_group=512,
-                                           embed_onehot=True)),
-    "ep+g512+oh+qb1k": Variant("ep+g512+oh+qb1k", strategy=dict(ep=True),
-                               attn=dict(q_block=1024, kv_block=1024),
-                               settings=dict(moe_group=512,
-                                             embed_onehot=True)),
-    "onehot+dots": Variant("onehot+dots", plan=dict(remat="dots"),
-                           settings=dict(embed_onehot=True)),
-    "onehot+nofsdp": Variant("onehot+nofsdp",
-                             settings=dict(embed_onehot=True),
-                             strategy=dict(fsdp=False)),
+    "onehot_embed": dict(embed_onehot=True),
+    "attn_replicated": dict(repeat_kv=False),
+    "repeat_kv": dict(repeat_kv=True),
+    "gather_w": dict(gather_weights=True),
+    "gather_w+onehot": dict(gather_weights=True, embed_onehot=True),
+    "remat_dots": dict(remat="dots"),
+    "remat_full": dict(remat="full"),
+    "no_fsdp": dict(fsdp=False),
+    "ep": dict(ep=True),
+    "kv_heads": dict(kv_shard="heads"),
+    "kv_seq": dict(kv_shard="seq"),
+    "qb_1024": dict(q_block=1024, kv_block=1024),
+    "qb_256": dict(q_block=256, kv_block=256),
+    "micro_4": dict(microbatches=4),
+    "moe_group_512": dict(moe_group=512),
+    "moe_group_1024": dict(moe_group=1024),
+    "ep+group512": dict(ep=True, moe_group=512),
+    "ep+g512+onehot": dict(ep=True, moe_group=512, embed_onehot=True),
+    "ep+g512+oh+gw": dict(ep=True, moe_group=512, embed_onehot=True,
+                          gather_weights=True),
+    "ep+g512+oh+qb1k": dict(ep=True, moe_group=512, embed_onehot=True,
+                            q_block=1024, kv_block=1024),
+    "onehot+dots": dict(remat="dots", embed_onehot=True),
+    "onehot+nofsdp": dict(embed_onehot=True, fsdp=False),
 }
 
-
-def run_variant(cfg, shape, mesh, base_plan: MemoryPlan, var: Variant,
+def run_variant(cfg, shape, mesh, cand: SP.Candidate,
                 measure_memory: bool = False):
-    plan = dataclasses.replace(base_plan, **var.plan)
+    plan = cand.plan
     rplan = dataclasses.replace(plan, microbatches=1)
+    over = SP.candidate_overrides(cand)
     strategy = dataclasses.replace(
-        PF.strategy_for(cfg, rplan, mesh), **var.strategy)
-    attn = AttnSettings(**{**dataclasses.asdict(AttnSettings()), **var.attn})
+        PF.strategy_for(cfg, rplan, mesh), **over["strategy"])
+    attn = dataclasses.replace(AttnSettings(), **over["attn"])
     costs = []
     t0 = time.time()
     for n_units in (1, 2):
         dcfg = depth_variant(cfg, n_units)
-        st = ModelSettings(scan_layers=False, attn=attn, **var.settings)
-        bundle = LC.build(dcfg, shape, mesh, strategy=strategy,
+        st = ModelSettings(scan_layers=False, attn=attn, **over["settings"])
+        bundle = LC_build(dcfg, shape, mesh, strategy=strategy,
                           tcfg=PF._tcfg_for(rplan, settings=st), settings=st)
         costs.append(RA.component_cost(bundle.compile()))
     total = RA.extrapolate(costs[0], costs[1], cfg.repeats)
@@ -111,8 +111,8 @@ def run_variant(cfg, shape, mesh, base_plan: MemoryPlan, var: Variant,
     out = rep.to_dict()
     out["lower_s"] = round(time.time() - t0, 1)
     if measure_memory:
-        st = ModelSettings(scan_layers=True, attn=attn, **var.settings)
-        bundle = LC.build(cfg, shape, mesh, strategy=strategy,
+        st = ModelSettings(scan_layers=True, attn=attn, **over["settings"])
+        bundle = LC_build(cfg, shape, mesh, strategy=strategy,
                           tcfg=PF._tcfg_for(plan, settings=st), settings=st)
         ma = bundle.compile().memory_analysis()
         out["temp_bytes"] = int(ma.temp_size_in_bytes)
@@ -120,18 +120,80 @@ def run_variant(cfg, shape, mesh, base_plan: MemoryPlan, var: Variant,
     return out
 
 
+def LC_build(*args, **kwargs):
+    """Lazy launch.compile.build so the simulate-only planning path never
+    imports the AOT stack (and the hermetic tests can assert zero compiles)."""
+    from repro.launch import compile as LC
+    return LC.build(*args, **kwargs)
+
+
+def plan_phase(cfg, shape, base_cand: SP.Candidate, strategy: str,
+               backend: str):
+    """Search the variant space through the MemoryMeasurer interface.
+    Under --backend simulate this is compile-free; under compile every
+    verification is a real lowering on the production mesh."""
+    if backend == "simulate":
+        measurer = MM.SimulatedMeasurer(PLAN_MESH_SHAPE)
+    else:
+        from repro.launch.mesh import make_production_mesh
+        measurer = MM.CompileMeasurer(make_production_mesh(multi_pod=False))
+    scorer = ST.CandidateScorer(measurer=measurer)
+    budget = ST.plan_budget(HW.TPU_V5E)
+
+    name = ST.get_strategy(strategy).__name__
+    if name == "greedy_coordinate":
+        res = ST.greedy_coordinate(
+            SPACE, cfg, shape, start=base_cand, scorer=scorer,
+            score=ST.feasibility_score(scorer, cfg, shape))
+    elif name == "staged":
+        res = ST.staged(MEASURE_SPACE, cfg, shape,
+                        screener=MM.SimulatedMeasurer(PLAN_MESH_SHAPE),
+                        verifier=measurer)
+    elif name == "exhaustive_verified":
+        res = ST.exhaustive_verified(MEASURE_SPACE, cfg, shape,
+                                     measurer=measurer)
+    else:   # fastest_first needs a classification from the profiling ladder
+        cls = PF.classify_workload(cfg, shape, None, n_points=2, base_seq=64,
+                                   measurer=measurer)
+        res = ST.fastest_first(MEASURE_SPACE, cfg, shape, cls)
+    # report the already-verified peak: greedy's winner is memoized in the
+    # scorer (free), and the simulator costs nothing — never re-compile
+    peak = res.peak_bytes
+    if peak is None and (backend == "simulate"
+                         or name == "greedy_coordinate"):
+        peak = scorer.peak(cfg, shape, res.candidate)
+    if peak is not None:
+        mem = f"peak={peak / 2**30:.2f}GiB fits={peak <= budget}"
+    else:
+        mem = (f"pred_capacity="
+               f"{res.prediction.capacity_bytes / 2**30:.2f}GiB")
+    print(f"plan[{strategy}/{backend}]: {res.candidate.describe()} "
+          f"policy={res.policy} considered={res.considered} "
+          f"measured={res.measured} {mem}", flush=True)
+    return res
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)
-    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--variants", default="",
+                    help="comma-separated named variants to lower + compile; "
+                         "empty = planning phase only")
     ap.add_argument("--plan", default="",
                     help="remat,microbatches,optimizer,kv_shard")
+    ap.add_argument("--strategy", default="greedy",
+                    choices=list(ST.CLI_STRATEGIES),
+                    help="planning-phase search strategy over the variant "
+                         "space")
+    ap.add_argument("--backend", default="simulate",
+                    choices=["simulate", "compile"],
+                    help="measurement backend for the planning phase; "
+                         "simulate = zero XLA compiles")
     ap.add_argument("--memory", action="store_true")
     ap.add_argument("--out", default="artifacts/hillclimb")
     args = ap.parse_args(argv)
 
-    mesh = make_production_mesh(multi_pod=False)
     cfg = get_config(args.arch)
     shape = SHAPES[args.shape]
     base_plan = MemoryPlan()
@@ -139,26 +201,36 @@ def main(argv=None):
         r, m, o, kv = args.plan.split(",")
         base_plan = MemoryPlan(remat=r, microbatches=int(m), optimizer=o,
                                kv_shard=kv)
+    base_cand = SPACE.point(cfg, base=SP.Candidate(plan=base_plan))
 
+    plan_phase(cfg, shape, base_cand, args.strategy, args.backend)
+    if not args.variants:
+        return 0
+
+    from repro.launch.mesh import make_production_mesh
+    mesh = make_production_mesh(multi_pod=False)
     os.makedirs(args.out, exist_ok=True)
     results = {}
     base = None
     for vname in args.variants.split(","):
-        var = VARIANTS[vname]
+        cand = SPACE.point(cfg, base=base_cand, **VARIANTS[vname])
         try:
-            r = run_variant(cfg, shape, mesh, base_plan, var, args.memory)
+            r = run_variant(cfg, shape, mesh, cand, args.memory)
         except Exception as e:  # noqa: BLE001
             print(f"{vname:16s} FAILED: {e}", flush=True)
             continue
         results[vname] = r
         if base is None:
             base = r
-        d = lambda k: (r[k] / base[k] - 1.0) * 100 if base[k] else 0.0
-        extra = (f" temp={r.get('temp_bytes', 0)/2**30:.2f}GiB"
+
+        def delta(k):
+            return (r[k] / base[k] - 1.0) * 100 if base[k] else 0.0
+
+        extra = (f" temp={r.get('temp_bytes', 0) / 2**30:.2f}GiB"
                  if args.memory and "temp_bytes" in r else "")
-        print(f"{vname:16s} comp={r['t_comp']:.3f}s({d('t_comp'):+.0f}%) "
-              f"mem={r['t_mem']:.3f}s({d('t_mem'):+.0f}%) "
-              f"coll={r['t_coll']:.3f}s({d('t_coll'):+.0f}%) "
+        print(f"{vname:16s} comp={r['t_comp']:.3f}s({delta('t_comp'):+.0f}%) "
+              f"mem={r['t_mem']:.3f}s({delta('t_mem'):+.0f}%) "
+              f"coll={r['t_coll']:.3f}s({delta('t_coll'):+.0f}%) "
               f"roof={r['t_roofline']:.3f}s "
               f"bottleneck={r['bottleneck']} "
               f"mfu_bound={r['mfu_bound']:.3f}{extra}", flush=True)

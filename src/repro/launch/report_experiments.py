@@ -6,9 +6,7 @@ from __future__ import annotations
 
 import json
 import os
-import sys
 
-from repro.configs import ARCH_IDS, SHAPE_ORDER
 from repro.launch.summarize import dryrun_table, load_cells, roofline_table
 
 GB = 1024.0**3

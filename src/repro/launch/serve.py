@@ -1,8 +1,14 @@
 """Serving driver: batched prefill + decode with WSMC-planned cache layout.
 
+Plan selection goes through the pluggable `repro.search` subsystem: the
+default `--backend simulate` screens candidates with the analytical
+MemoryMeasurer, so serving startup performs zero throwaway compiles (the
+only compiles are the prefill/decode steps that actually serve).
+
 Example (CPU, reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --reduced \
-      --prompt-len 32 --gen 16 --batch 4
+      --prompt-len 32 --gen 16 --batch 4 [--backend simulate|compile] \
+      [--strategy fastest|staged|exhaustive|greedy]
 """
 from __future__ import annotations
 
@@ -14,14 +20,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.configs.base import DECODE, PREFILL, ShapeConfig
-from repro.core import planner as PL
+from repro.configs.base import DECODE, ShapeConfig
+from repro.core import measure as MM
 from repro.core import profiler as PF
 from repro.launch.mesh import host_mesh_for
 from repro.models import init_params
-from repro.parallel import sharding as S
 from repro.parallel.axes import axis_rules
 from repro.runtime.serve_step import make_decode_step, make_prefill_step
+from repro.search import strategies as ST
 
 
 def main(argv=None):
@@ -33,6 +39,12 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default="simulate",
+                    choices=["simulate", "compile"],
+                    help="memory-measurement backend for plan selection; "
+                         "simulate = zero throwaway compiles at startup")
+    ap.add_argument("--strategy", default="fastest",
+                    choices=list(ST.CLI_STRATEGIES))
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -40,13 +52,27 @@ def main(argv=None):
         cfg = cfg.reduced()
     context = args.prompt_len + args.gen
     mesh = host_mesh_for(len(jax.devices()), args.model_parallel)
+    mesh_shape = dict(mesh.shape)
 
     shape = ShapeConfig("serve_cli", DECODE, context, args.batch)
-    cls = PF.classify_workload(cfg, shape, mesh, n_points=2, base_seq=64)
-    decision = PL.wsmc_plan(cfg, shape, cls, dict(mesh.shape))
-    print(f"WSMC: {cls.category.value} -> kv_shard={decision.plan.kv_shard} "
-          f"capacity={decision.prediction.capacity_bytes/2**20:.0f} MiB")
-    strategy = PF.strategy_for(cfg, decision.plan, mesh)
+    if args.backend == "simulate":
+        measurer = MM.SimulatedMeasurer(mesh_shape)
+    else:
+        measurer = MM.CompileMeasurer(mesh)
+    cls = PF.classify_workload(cfg, shape, mesh, n_points=2, base_seq=64,
+                               measurer=measurer)
+    res = ST.plan_for(cfg, shape, cls, mesh_shape, strategy=args.strategy,
+                      measurer=measurer)
+    if res.prediction is not None:
+        cap = f"capacity={res.prediction.capacity_bytes / 2**20:.0f} MiB"
+    elif res.peak_bytes is not None:
+        cap = (f"verified_peak={res.peak_bytes / 2**20:.0f} MiB "
+               f"measured={res.measured}")
+    else:
+        cap = f"considered={res.considered}"
+    print(f"WSMC[{args.strategy}/{args.backend}]: {cls.category.value} -> "
+          f"kv_shard={res.plan.kv_shard} policy={res.policy} {cap}")
+    strategy = PF.strategy_for(cfg, res.plan, mesh)
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     prompt = jax.random.randint(jax.random.PRNGKey(args.seed + 1),

@@ -17,20 +17,17 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import json
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.configs import SHAPES, get_config
+from repro.configs import get_config
 from repro.configs.base import ShapeConfig, TRAIN
 from repro.core import planner as PL
 from repro.core import profiler as PF
 from repro.data.pipeline import DataConfig, TokenPipeline
 from repro.launch.mesh import host_mesh_for
 from repro.models import init_params
-from repro.models.model import ModelSettings
 from repro.optim import optimizers as opt
 from repro.parallel import sharding as S
 from repro.parallel.axes import axis_rules

@@ -10,14 +10,13 @@ All mixers follow the delta convention: they return the residual increment.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import (ATTN, MLSTM, RGLRU, SLSTM, MLP_DENSE,
-                                MLP_MOE, MLP_NONE, BlockSpec, ModelConfig)
+                                MLP_MOE, BlockSpec, ModelConfig)
 from repro.models import attention, layers, moe, recurrent
 from repro.parallel.axes import shard
 

@@ -8,8 +8,6 @@ schedule avoids int8 overflow by accumulating in int32.
 """
 from __future__ import annotations
 
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -17,7 +17,6 @@ usual (S-1)/(T+S-1); the runtime chooses n_micro >= 4*S.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -20,7 +20,7 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.tree_util import DictKey, SequenceKey
 
-from repro.configs.base import ModelConfig, TRAIN, PREFILL, DECODE
+from repro.configs.base import ModelConfig
 from repro.parallel import axes as pax
 
 

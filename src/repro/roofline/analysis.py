@@ -16,7 +16,7 @@ term is the §Perf hillclimbing target.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 from repro import hw as HW
 from repro.configs.base import (ATTN, DECODE, MLSTM, RGLRU, SLSTM, TRAIN,

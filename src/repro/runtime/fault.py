@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 import signal
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 

@@ -5,7 +5,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig

@@ -7,8 +7,7 @@ step time, the way spark.executor.memory traded caching against spills.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,14 @@
+"""Unified plan-search subsystem: a declarative config space (knobs,
+constraints, ordering) + pluggable strategies (fastest-first prediction,
+exhaustive verification, staged simulate→compile screening, greedy
+hillclimbing). The planner, hillclimb, serve, dryrun and the benchmarks all
+search through this one API."""
+from repro.search.space import (  # noqa: F401
+    AUTO, Candidate, ConfigSpace, Constraint, Knob, candidate_overrides,
+    hillclimb_space, kv_auto, mesh_space, paper_space,
+)
+from repro.search.strategies import (  # noqa: F401
+    CLI_STRATEGIES, CandidateScorer, SearchResult, exhaustive_verified,
+    fastest_first, get_strategy, greedy_coordinate, plan_budget, plan_for,
+    staged,
+)

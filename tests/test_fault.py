@@ -1,7 +1,6 @@
 """Fault tolerance: straggler watchdog, failure-injection restart,
 preemption checkpoint, deterministic data under re-mesh."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -9,7 +9,7 @@ import pytest
 
 from repro import hw as HW
 from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
-from repro.configs.base import DECODE, PREFILL, TRAIN, ShapeConfig, param_count
+from repro.configs.base import TRAIN, ShapeConfig, param_count
 from repro.core import measure as MM
 from repro.core import planner as PL
 from repro.core import predictor as PR

@@ -1,6 +1,5 @@
 """Offline knowledge base + ladder construction (profiler.py): the paper's
 Table III calibration machinery, previously untested."""
-import dataclasses
 
 import pytest
 

@@ -1,0 +1,493 @@
+"""The unified plan-search subsystem (repro.search): lattice enumeration and
+constraints, decision parity of `fastest_first` with the pre-refactor inline
+`wsmc_plan` loop across the whole config registry, the `staged`
+simulate→compile screening strategy (never returns a plan the simulator says
+doesn't fit; O(k) verify calls), greedy coordinate descent, and the
+simulator's new pipe/EP mesh dimensions. Everything here is hermetic except
+the one compile-backed staged-vs-exhaustive pin (slow tier)."""
+import dataclasses
+
+import pytest
+
+from repro import hw as HW
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs.base import TRAIN, ShapeConfig
+from repro.core import measure as MM
+from repro.core import planner as PL
+from repro.core import predictor as PR
+from repro.core.classifier import Category, Classification
+from repro.search import space as SP
+from repro.search import strategies as ST
+
+MESH = {"data": 16, "model": 16}
+
+
+def _cls(cat=Category.MEDIUM, alpha=0.8, inc=1.0):
+    return Classification(category=cat, alpha=alpha, inc=inc, slope=alpha,
+                          intercept=0.0)
+
+
+def _hbm(gib):
+    return dataclasses.replace(HW.TPU_V5E, hbm_bytes=int(gib * 2**30))
+
+
+# --- the reference implementation --------------------------------------------
+# A verbatim copy of the pre-refactor inline planner loops; the new API must
+# reproduce these decisions exactly (acceptance criterion).
+
+def _seed_candidate_plans(cfg, shape, model_size=16):
+    kv = "heads" if cfg.n_kv_heads % model_size == 0 else "seq"
+    if shape.kind != TRAIN:
+        return [PR.MemoryPlan(remat="none", microbatches=1,
+                              optimizer="adamw_f32", kv_shard=kv)]
+    micros = [m for m in (1, 2, 4, 8, 16, 32, 64)
+              if shape.global_batch % m == 0]
+    cands = [PR.MemoryPlan(remat=r, microbatches=m, optimizer=o, kv_shard=kv)
+             for r in ("none", "dots", "full") for m in micros
+             for o in ("adamw_f32", "adamw_bf16", "adafactor")]
+    return sorted(cands, key=lambda p: p.step_time_penalty())
+
+
+def _seed_wsmc_plan(cfg, shape, cls, mesh_shape, hw=HW.TPU_V5E):
+    dp = mesh_shape.get("pod", 1) * mesh_shape.get("data", 1)
+    model_size = mesh_shape.get("model", 16)
+
+    def _divisible(p):
+        per_micro = shape.global_batch // p.microbatches
+        if shape.kind == TRAIN:
+            return per_micro % dp == 0
+        return per_micro % dp == 0 or per_micro < dp
+
+    all_cands = _seed_candidate_plans(cfg, shape, model_size)
+    cands = [p for p in all_cands if _divisible(p)] or all_cands[-1:]
+    for i, plan in enumerate(cands):
+        pred = PR.predict(cfg, shape, plan, cls, mesh_shape, "paper", hw)
+        if pred.fits:
+            return plan, "wsmc", i + 1
+    return cands[-1], "wsmc_overflow", len(cands)
+
+
+# --- package hygiene ---------------------------------------------------------
+
+def test_import_search_standalone():
+    """`import repro.search` must work on its own (no prior repro.core
+    import) — regression for the planner↔search import cycle."""
+    import os
+    import subprocess
+    import sys
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    env = dict(os.environ, PYTHONPATH=src)
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "import repro.search; import repro.core; repro.core.wsmc_plan"],
+        capture_output=True, text=True, env=env)
+    assert out.returncode == 0, out.stderr
+
+
+# --- lattice enumeration / constraints ---------------------------------------
+
+def test_paper_space_matches_seed_lattice():
+    for arch in ("h2o-danube-1.8b", "mixtral-8x7b", "musicgen-medium"):
+        cfg = get_config(arch)
+        for shape_name in ("train_4k", "prefill_32k", "decode_32k"):
+            shape = SHAPES[shape_name]
+            space = SP.paper_space(cfg, shape, MESH)
+            got = [c.plan for c in space.candidates(cfg, shape)]
+            assert got == _seed_candidate_plans(cfg, shape)
+
+
+def test_candidate_plans_wrapper_matches_seed():
+    cfg = get_config("h2o-danube-1.8b")
+    shape = SHAPES["train_4k"]
+    assert PL.candidate_plans(cfg, shape) == _seed_candidate_plans(cfg, shape)
+
+
+def test_mesh_space_respects_constraints():
+    cfg = get_config("h2o-danube-1.8b")          # 24 layers, batch 256
+    shape = SHAPES["train_4k"]
+    space = SP.mesh_space(cfg, shape, max_devices=64, data=(4, 8, 16),
+                          model=(2, 4), pipe=(1, 2))
+    cands = space.candidates(cfg, shape)
+    assert cands
+    for c in cands:
+        ms = c.mesh_shape
+        n = ms["data"] * ms["model"] * ms["pipe"]
+        assert n <= 64
+        assert shape.global_batch % c.plan.microbatches == 0
+        per = shape.global_batch // c.plan.microbatches
+        assert per % ms["data"] == 0
+        if ms["pipe"] > 1:
+            assert cfg.n_layers % ms["pipe"] == 0
+            assert c.plan.microbatches >= ms["pipe"]
+        if c.plan.kv_shard == "heads":
+            assert cfg.n_kv_heads % ms["model"] == 0
+    # the pipe axis is genuinely searchable (24 layers divide pipe=2)
+    assert any(c.mesh_shape["pipe"] == 2 for c in cands)
+    # 16x4x2 = 128 devices would bust the budget: never enumerated
+    assert not any(c.mesh_shape["data"] * c.mesh_shape["model"]
+                   * c.mesh_shape["pipe"] > 64 for c in cands)
+
+
+def test_mesh_space_pipe_needs_layer_divisibility():
+    cfg = get_config("gemma3-12b")               # 48 layers
+    odd = dataclasses.replace(cfg, n_layers=47, unit=(), tail=())
+    shape = SHAPES["train_4k"]
+    space = SP.mesh_space(odd, shape, max_devices=64, data=(8,), model=(2,),
+                          pipe=(1, 2))
+    assert all(c.mesh_shape["pipe"] == 1
+               for c in space.candidates(odd, shape))
+
+
+def test_mesh_space_no_pipe_for_serving():
+    cfg = get_config("h2o-danube-1.8b")
+    space = SP.mesh_space(cfg, SHAPES["decode_32k"], max_devices=64,
+                          data=(8,), model=(2,), pipe=(1, 2))
+    cands = space.candidates(cfg, SHAPES["decode_32k"])
+    assert cands
+    assert all(c.mesh_shape["pipe"] == 1 for c in cands)
+
+
+def test_point_validates_knobs_and_values():
+    cfg = get_config("h2o-danube-1.8b")
+    space = SP.hillclimb_space()
+    with pytest.raises(KeyError):
+        space.point(cfg, warp_drive=True)
+    with pytest.raises(ValueError):
+        space.point(cfg, remat="everything")
+    cand = space.point(cfg, remat="dots", ep=True)
+    assert cand.plan.remat == "dots"
+    assert cand.extra("ep") is True
+    # unassigned knobs take the baseline (first value)
+    assert cand.plan.microbatches == 1
+    assert cand.extra("embed_onehot") is True
+
+
+def test_subspace_pins_values():
+    cfg = get_config("h2o-danube-1.8b")
+    shape = SHAPES["train_4k"]
+    space = SP.paper_space(cfg, shape, MESH)
+    sub = space.subspace(remat="full", optimizer=("adafactor",))
+    cands = sub.candidates(cfg, shape)
+    assert cands
+    assert all(c.plan.remat == "full" and c.plan.optimizer == "adafactor"
+               for c in cands)
+    with pytest.raises(KeyError):
+        space.subspace(nope=1)
+    with pytest.raises(ValueError):
+        space.subspace(remat="everything")
+
+
+def test_candidate_overrides_buckets():
+    space = SP.hillclimb_space()
+    cfg = get_config("mixtral-8x7b")
+    cand = space.point(cfg, ep=True, moe_group=512, q_block=1024,
+                       gather_weights=True, fsdp=False)
+    over = SP.candidate_overrides(cand)
+    assert over["strategy"] == {"ep": True, "fsdp": False}
+    assert over["settings"]["moe_group"] == 512
+    assert over["attn"]["q_block"] == 1024
+    assert over["attn"]["gather_weights"] is True
+    # ep=None means "keep the default_strategy choice" — dropped
+    base = SP.candidate_overrides(space.point(cfg))
+    assert "ep" not in base["strategy"]
+
+
+# --- fastest_first: decision parity with the seed planner --------------------
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_fastest_first_matches_seed_wsmc(arch):
+    """The acceptance pin: across the whole registry × shapes × categories ×
+    budgets, the new walk reproduces the old inline wsmc_plan decisions
+    (plan, policy, and the number of candidates considered)."""
+    cfg = get_config(arch)
+    classes = [_cls(Category.MEDIUM, 0.8, 1.0),
+               _cls(Category.EXPANDING_RAPID, 4.0, 3.0)]
+    for shape_name in ("train_4k", "prefill_32k", "decode_32k"):
+        shape = SHAPES[shape_name]
+        for mesh in (MESH, {"pod": 2, "data": 16, "model": 16}):
+            for cls in classes:
+                for hw in (HW.TPU_V5E, _hbm(0.5)):
+                    want = _seed_wsmc_plan(cfg, shape, cls, mesh, hw)
+                    dec = PL.wsmc_plan(cfg, shape, cls, mesh, hw=hw)
+                    got = (dec.plan, dec.policy, dec.considered)
+                    assert got == want, (arch, shape_name, mesh,
+                                         cls.category, hw.hbm_bytes)
+
+
+def test_oracle_plan_wrapper_parity():
+    """oracle_plan delegates to exhaustive_verified and keeps its contract:
+    fastest-first verification, early exit, overflow = least-bad plan."""
+    cfg = get_config("h2o-danube-1.8b")
+    shape = SHAPES["train_4k"]
+    budget = ST.plan_budget(HW.TPU_V5E)
+    calls = []
+
+    def fake_measure(plan):
+        calls.append(plan)
+        return budget * (0.5 if plan.remat == "full" else 10.0)
+
+    plan, peak, n = PL.oracle_plan(cfg, shape, fake_measure)
+    assert plan.remat == "full"
+    assert n == len(calls) and n > 1
+    # the walk is fastest-first: everything measured before the winner is
+    # strictly faster
+    assert all(p.step_time_penalty() <= plan.step_time_penalty()
+               for p in calls)
+
+
+def test_fastest_first_plans_the_mesh():
+    """Mesh shape is a planned *output* on a mesh_space — the ROADMAP door
+    to elastic scaling."""
+    cfg = get_config("h2o-danube-1.8b")
+    shape = SHAPES["train_4k"]
+    space = SP.mesh_space(cfg, shape, max_devices=256)
+    res = ST.fastest_first(space, cfg, shape, _cls())
+    assert res.policy == "wsmc"
+    assert res.prediction.fits
+    assert res.mesh_shape          # the decision carries its mesh
+    n = 1
+    for v in res.mesh_shape.values():
+        n *= v
+    assert n <= 256
+
+
+# --- staged ------------------------------------------------------------------
+
+class CountingMeasurer(MM.SimulatedMeasurer):
+    """Simulator that counts backend invocations — the stand-in for the
+    compile backend in the O(k)-verifications pin."""
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self.n_measures = 0
+
+    def _measure(self, *args, **kwargs):
+        self.n_measures += 1
+        return super()._measure(*args, **kwargs)
+
+
+def test_staged_verifies_at_most_k():
+    """Acceptance pin: staged finds a fitting train plan while invoking the
+    verify backend at most k (≤ 5) times — vs O(lattice) for the oracle."""
+    cfg = get_config("mixtral-8x7b")
+    shape = SHAPES["train_4k"]
+    space = SP.paper_space(cfg, shape, MESH)
+    verifier = CountingMeasurer(MESH)
+    res = ST.staged(space, cfg, shape, screener=MM.SimulatedMeasurer(MESH),
+                    verifier=verifier, k=5)
+    assert res.policy == "staged"
+    assert verifier.n_measures <= 5
+    assert res.measured == verifier.n_measures
+    assert res.peak_bytes <= ST.plan_budget(HW.TPU_V5E)
+    # the screen covered the whole lattice, the verifier only the shortlist
+    assert res.considered == len(space.candidates(cfg, shape))
+    assert res.considered > res.measured
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "mixtral-8x7b",
+                                  "xlstm-1.3b"])
+@pytest.mark.parametrize("gib", [0.25, 2.0, 16.0])
+def test_staged_never_returns_unfitting_when_fitting_exists(arch, gib):
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    hw = _hbm(gib)
+    space = SP.paper_space(cfg, shape, MESH)
+    sim = MM.SimulatedMeasurer(MESH)
+    res = ST.staged(space, cfg, shape, screener=sim, verifier=sim, k=5,
+                    hw=hw)
+    budget = ST.plan_budget(hw)
+    any_fits = any(sim.measure_peak(cfg, shape, c.plan) <= budget
+                   for c in space.candidates(cfg, shape))
+    got_peak = sim.measure_peak(cfg, shape, res.plan)
+    if any_fits:
+        assert res.policy == "staged"
+        assert got_peak <= budget
+    else:
+        assert res.policy == "staged_overflow"
+
+
+def test_staged_agrees_with_exhaustive_simulated():
+    """Same verifier => same decision, at a fraction of the verify calls."""
+    cfg = get_config("mixtral-8x7b")
+    shape = SHAPES["train_4k"]
+    hw = _hbm(2.0)
+    space = SP.paper_space(cfg, shape, MESH)
+    sim = MM.SimulatedMeasurer(MESH)
+    st = ST.staged(space, cfg, shape, screener=sim, verifier=sim, k=5, hw=hw)
+    ex = ST.exhaustive_verified(space, cfg, shape, measurer=sim, hw=hw)
+    assert st.plan == ex.plan
+    assert st.measured <= ex.measured
+
+
+@pytest.mark.slow
+def test_staged_agrees_with_exhaustive_compile():
+    """Slow-tier pin: with the real compile backend as verifier, staged
+    reaches the oracle's decision in ≤ k compiles."""
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    shape = ShapeConfig("t", TRAIN, 128, 4)
+    space = SP.paper_space(cfg, shape, {"data": 1, "model": 1})
+    st = ST.staged(space, cfg, shape,
+                   screener=MM.SimulatedMeasurer({"data": 1, "model": 1}),
+                   verifier=MM.CompileMeasurer(mesh), k=5)
+    ex = ST.exhaustive_verified(space, cfg, shape,
+                                measurer=MM.CompileMeasurer(mesh))
+    assert st.plan == ex.plan
+    assert st.measured <= 5
+    assert st.peak_bytes == pytest.approx(ex.peak_bytes)
+
+
+# --- greedy coordinate descent ----------------------------------------------
+
+def test_greedy_coordinate_reaches_feasibility():
+    cfg = get_config("mixtral-8x7b")
+    shape = SHAPES["train_4k"]
+    # 4 GiB: the baseline (remat none, micro 1, adamw_f32) is far over
+    # budget but the lattice contains fitting plans (best ~1.96 GiB peak)
+    hw = _hbm(4.0)
+    space = SP.hillclimb_space(MESH)
+    scorer = ST.CandidateScorer(measurer=MM.SimulatedMeasurer(MESH))
+    score = ST.feasibility_score(scorer, cfg, shape, hw)
+
+    start = space.point(cfg)
+    res = ST.greedy_coordinate(space, cfg, shape, score=score, start=start,
+                               scorer=scorer)
+    assert res.policy == "greedy"
+    assert res.measured == scorer.calls > 0
+    assert score(res.candidate) <= score(start)
+    # the baseline doesn't fit 2 GiB but the space contains plans that do —
+    # greedy must land on one, examining far fewer points than the lattice
+    assert score(start)[0] == 1
+    assert score(res.candidate)[0] == 0
+    assert res.considered < len(space)
+
+
+def test_greedy_respects_constraints():
+    """Moves that violate a constraint (microbatches not dividing the
+    batch) are never taken."""
+    cfg = get_config("h2o-danube-1.8b")
+    shape = ShapeConfig("odd", TRAIN, 512, 6)     # batch 6: micro 4, 8 invalid
+    space = SP.hillclimb_space(MESH)
+    seen = []
+
+    def score(cand):
+        seen.append(cand)
+        return cand.step_time_penalty()
+
+    res = ST.greedy_coordinate(space, cfg, shape, score=score)
+    assert all(shape.global_batch % c.plan.microbatches == 0 for c in seen)
+    assert shape.global_batch % res.plan.microbatches == 0
+
+
+# --- plan_for façade ---------------------------------------------------------
+
+def test_plan_for_strategies_agree_on_fitting():
+    cfg = get_config("h2o-danube-1.8b")
+    shape = SHAPES["train_4k"]
+    sim = MM.SimulatedMeasurer(MESH)
+    budget = ST.plan_budget(HW.TPU_V5E)
+    for strategy in ("staged", "exhaustive", "greedy"):
+        res = ST.plan_for(cfg, shape, None, MESH, strategy=strategy,
+                          measurer=sim)
+        assert sim.measure_peak(cfg, shape, res.plan) <= budget, strategy
+    res = ST.plan_for(cfg, shape, _cls(), MESH, strategy="fastest")
+    assert res.policy in ("wsmc", "wsmc_overflow")
+
+
+def test_plan_for_unknown_strategy():
+    cfg = get_config("h2o-danube-1.8b")
+    with pytest.raises(KeyError):
+        ST.plan_for(cfg, SHAPES["train_4k"], None, MESH, strategy="magic")
+
+
+# --- pipe / EP mesh dimensions (simulator + predictor) -----------------------
+
+def test_mesh_factors_pipe_shards_weights():
+    shards, dp, model = PR.mesh_factors({"data": 4, "model": 2, "pipe": 2})
+    assert shards == 16 and dp == 4 and model == 2
+    # pipe absent => unchanged legacy behaviour
+    assert PR.mesh_factors({"data": 4, "model": 2}) == (8, 4, 2)
+
+
+def test_simulator_pipe_axis_shards_residents():
+    cfg = get_config("h2o-danube-1.8b")          # 24 layers
+    shape = SHAPES["train_4k"]
+    plan = PR.MemoryPlan(microbatches=8)
+    flat = MM.SimulatedMeasurer({"data": 4, "model": 2}).measure(
+        cfg, shape, plan)
+    piped = MM.SimulatedMeasurer({"data": 4, "model": 2, "pipe": 2}).measure(
+        cfg, shape, plan)
+    assert piped.argument_bytes < flat.argument_bytes
+    assert piped.transient_bytes <= flat.transient_bytes
+
+
+def test_simulator_pipe_decode_cache_split():
+    cfg = get_config("mistral-nemo-12b")
+    shape = SHAPES["decode_32k"]
+    plan = PR.MemoryPlan(kv_shard="seq")
+    c1 = PR.cache_bytes_per_device(cfg, shape, plan, {"data": 4, "model": 2})
+    c2 = PR.cache_bytes_per_device(cfg, shape, plan,
+                                   {"data": 4, "model": 2, "pipe": 2})
+    assert c2 == pytest.approx(c1 / 2)
+
+
+def test_simulator_ep_adds_alltoall_buffers():
+    cfg = get_config("mixtral-8x7b")
+    shape = SHAPES["train_4k"]
+    t_tp = MM.SimulatedMeasurer(MESH).measure(cfg, shape).transient_bytes
+    t_ep = MM.SimulatedMeasurer(MESH, ep=True).measure(
+        cfg, shape).transient_bytes
+    assert t_ep > t_tp
+    # dense archs are EP-indifferent
+    dense = get_config("h2o-danube-1.8b")
+    d_tp = MM.SimulatedMeasurer(MESH).measure(dense, shape).transient_bytes
+    d_ep = MM.SimulatedMeasurer(MESH, ep=True).measure(
+        dense, shape).transient_bytes
+    assert d_ep == pytest.approx(d_tp)
+
+
+def test_ep_discriminates_profile_cache_key(tmp_path):
+    cache = MM.ProfileCache(str(tmp_path / "p.json"))
+    cfg = get_config("mixtral-8x7b")
+    shape = SHAPES["train_4k"]
+    MM.SimulatedMeasurer(MESH, cache=cache).measure(cfg, shape)
+    MM.SimulatedMeasurer(MESH, cache=cache, ep=True).measure(cfg, shape)
+    assert len(cache) == 2
+
+
+def test_ep_none_resolves_like_default_strategy():
+    """ep=None means "the default_strategy auto-rule decides": for a MoE
+    arch whose expert count tiles the model axis the launch layer will run
+    EP, so scoring must model EP too (and distinguish it from ep=False)."""
+    cfg = get_config("llama4-scout-17b-a16e")          # 16 experts
+    shape = SHAPES["train_4k"]
+    auto = SP.Candidate(plan=PR.MemoryPlan())          # ep unset -> auto
+    off = SP.Candidate(plan=PR.MemoryPlan(), extras=(("ep", False),))
+    assert ST.resolved_ep(cfg, auto, MESH) is True     # 16 % 16 == 0
+    assert ST.resolved_ep(cfg, off, MESH) is False
+    assert ST.measure_key(auto, cfg, MESH) != ST.measure_key(off, cfg, MESH)
+    scorer = ST.CandidateScorer(measurer=MM.SimulatedMeasurer(MESH))
+    assert scorer.peak(cfg, shape, auto) > scorer.peak(cfg, shape, off)
+    # dense arch: auto resolves to no-EP
+    dense = get_config("h2o-danube-1.8b")
+    assert ST.resolved_ep(dense, auto, MESH) is False
+
+
+def test_scorer_builds_per_candidate_simulators():
+    """The CandidateScorer resolves each candidate's own mesh/EP — what lets
+    one strategy search across meshes."""
+    cfg = get_config("mixtral-8x7b")
+    shape = SHAPES["train_4k"]
+    scorer = ST.CandidateScorer(measurer=MM.SimulatedMeasurer(MESH))
+    small = SP.Candidate(plan=PR.MemoryPlan(),
+                         mesh=(("data", 2), ("model", 2)))
+    big = SP.Candidate(plan=PR.MemoryPlan(),
+                       mesh=(("data", 16), ("model", 16)))
+    assert scorer.peak(cfg, shape, small) > scorer.peak(cfg, shape, big)
+    ep = SP.Candidate(plan=PR.MemoryPlan(), mesh=big.mesh,
+                      extras=(("ep", True),))
+    assert scorer.peak(cfg, shape, ep) > scorer.peak(cfg, shape, big)
+    # 4 peak() calls but only 3 distinct measure keys — the repeated `big`
+    # is a memo hit, not a backend invocation
+    assert scorer.calls == 3

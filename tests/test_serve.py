@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import get_config
 from repro.models import ModelSettings, apply, init_params
 from repro.models.attention import AttnSettings
 from repro.runtime.serve_step import (greedy_generate, make_decode_step,
