@@ -403,19 +403,42 @@ def simulated_transient_bytes(cfg: ModelConfig, shape: ShapeConfig,
                               mesh_shape: Dict[str, int],
                               ep: bool = False) -> float:
     """Per-device XLA-temp estimate for (cfg, shape) under `plan`."""
-    toks = _tokens_per_device(cfg, shape, mesh_shape)
+    toks_full = _tokens_per_device(cfg, shape, mesh_shape)
+    toks = toks_full
     if shape.kind == TRAIN:
         toks /= max(plan.microbatches, 1)
     per_block = [block_transient_bytes(cfg, b, toks, shape, mesh_shape, ep)
                  for b in cfg.blocks()]
+    toks_head = toks
     if shape.kind == TRAIN:
-        live = (sum(per_block) * PR.REMAT_SCALE[plan.remat]
-                * TRAIN_BWD_SCALE)
         pipe = int(mesh_shape.get("pipe", 1))
-        if pipe > 1:
-            # each stage holds 1/pipe of the layer stack, with up to `pipe`
-            # in-flight microbatches (1F1B) keeping their activations live
-            live *= min(max(plan.microbatches, 1), pipe) / pipe
+        if PR.pipeline_would_execute(cfg, plan, mesh_shape,
+                                     shape.global_batch):
+            # the executed 1F1B schedule (runtime.schedule) remats each
+            # stage body per tick, so what stays live is ONE stage's
+            # recompute set (1/pipe of the UNIT stack) plus the scan-saved
+            # boundary carries (one inter-stage activation per tick) —
+            # validated against the compiled pipeline step on fake devices.
+            # Tail blocks, norm, head and the loss run OUTSIDE the stages
+            # on the FULL batch (runtime.schedule.make_pipeline_loss_fn),
+            # so they keep full-batch token scaling.
+            micro = max(plan.microbatches, 1)
+            n_unit = len(cfg.unit) * cfg.repeats
+            unit_live = (sum(per_block[:n_unit])
+                         * PR.REMAT_SCALE[plan.remat] * TRAIN_BWD_SCALE
+                         / pipe)
+            tail_live = sum(
+                block_transient_bytes(cfg, b, toks_full, shape, mesh_shape,
+                                      ep)
+                for b in cfg.tail) * TRAIN_BWD_SCALE
+            live = (unit_live + tail_live
+                    + (micro + pipe - 1) * toks * cfg.d_model * E.BYTES_ACT)
+            toks_head = toks_full
+        else:
+            # flat scan/single schedule (also the compile fallback for
+            # probe plans a pipe mesh cannot pipeline)
+            live = (sum(per_block) * PR.REMAT_SCALE[plan.remat]
+                    * TRAIN_BWD_SCALE)
         # plus the remat-recompute scratch of the block currently in bwd
         live += max(per_block, default=0.0)
     else:
@@ -424,7 +447,8 @@ def simulated_transient_bytes(cfg: ModelConfig, shape: ShapeConfig,
             # ring-cache update: XLA materializes the updated cache before
             # the donation alias kicks in — a transient copy of the cache.
             live += PR.cache_bytes_per_device(cfg, shape, plan, mesh_shape)
-    return live + head_transient_bytes(cfg, toks, mesh_shape, shape.kind)
+    return live + head_transient_bytes(cfg, toks_head, mesh_shape,
+                                       shape.kind)
 
 
 def simulated_output_bytes(cfg: ModelConfig, shape: ShapeConfig,

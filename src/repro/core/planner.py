@@ -93,3 +93,18 @@ def oracle_plan(cfg: ModelConfig, shape: ShapeConfig,
                                  measure=measure, hw=hw,
                                  max_candidates=max_candidates)
     return res.plan, res.peak_bytes, res.measured
+
+
+def plan_deployment(cfg: ModelConfig, shape: ShapeConfig,
+                    cls: Optional[Classification], *, n_devices: int,
+                    strategy: str = "fastest", measurer=None,
+                    factors: Optional[dict] = None,
+                    hw: HW.HardwareSpec = HW.TPU_V5E):
+    """Beyond the paper: plan the MESH too, and promote the decision to a
+    runnable `search.execplan.ExecutionPlan` (plan + mesh + EP + runtime
+    schedule, with a `build(devices)` that constructs the real mesh). This
+    is the `--mesh auto` decision step shared by train/serve/dryrun."""
+    from repro.search import execplan as XP
+    return XP.plan_execution(cfg, shape, cls, n_devices=n_devices,
+                             strategy=strategy, measurer=measurer,
+                             factors=factors, hw=hw)

@@ -16,7 +16,7 @@ from typing import Optional, Tuple
 
 from repro import hw as HW
 from repro.configs.base import (DECODE, TRAIN, ModelConfig, ShapeConfig,
-                                param_count)
+                                block_param_count, param_count)
 from repro.core.classifier import Classification
 from repro.core.expansion import BYTES_ACT, embedded_input_bytes
 
@@ -114,17 +114,52 @@ def cache_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig,
     return total / max(int(mesh_shape.get("pipe", 1)), 1)
 
 
+def sharded_param_count(cfg: ModelConfig, mesh_shape: dict) -> float:
+    """Per-device parameter count under the mesh. The pipe axis splits only
+    the stacked unit layers (what the 1F1B runtime's split_stages owns);
+    embedding, head, final norm and tail blocks are replicated across
+    stages — validated against the executed pipeline's compile-measured
+    residents."""
+    shards, _, _ = mesh_factors(mesh_shape)      # data * model * pipe
+    n = param_count(cfg)
+    pipe = max(int(mesh_shape.get("pipe", 1)), 1)
+    if pipe == 1:
+        return n / shards
+    unit_n = sum(block_param_count(cfg, b) for b in cfg.unit) * cfg.repeats
+    return unit_n / shards + (n - unit_n) / (shards // pipe)
+
+
+def pipeline_would_execute(cfg: ModelConfig, plan: MemoryPlan,
+                           mesh_shape: dict,
+                           global_batch: Optional[int] = None) -> bool:
+    """Whether a pipe>1 mesh actually runs the 1F1B schedule for this
+    (cfg, plan, batch). Shares runtime.schedule_kinds.pipeline_executable
+    with validate_pipeline and launch.compile's fallback: non-executable
+    probes (micro < pipe, MoE units, indivisible repeats, prefix embeds,
+    TP in play, batch/dp indivisible) fall back to scan/single on the same
+    mesh, and the memory model must follow. schedule_kinds is jax-free, so
+    this import keeps the compile-free planning path light."""
+    from repro.runtime.schedule_kinds import pipeline_executable
+    return pipeline_executable(cfg, plan.microbatches, mesh_shape,
+                               global_batch)
+
+
 def resident_bytes(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan,
                    mesh_shape: dict) -> float:
     """Eq. 7 analogue: everything that must sit in HBM before the first
     'stage' runs — params, optimizer state, grad accumulator, inputs, caches."""
-    shards, dp, _ = mesh_factors(mesh_shape)
-    n = param_count(cfg)
-    total = n * BYTES_PARAM / shards
+    _, dp, _ = mesh_factors(mesh_shape)
+    n_per = sharded_param_count(cfg, mesh_shape)
+    total = n_per * BYTES_PARAM
     if shape.kind == TRAIN:
-        total += n * plan.opt_state_bytes / shards
-        if plan.microbatches > 1:
-            total += n * BYTES_GRAD_ACC / shards
+        total += n_per * plan.opt_state_bytes
+        if (plan.microbatches > 1
+                and not pipeline_would_execute(cfg, plan, mesh_shape,
+                                               shape.global_batch)):
+            # the scan schedule carries an f32 gradient accumulator; the
+            # 1F1B pipeline schedule accumulates inside the pipelined
+            # backward instead, so no extra resident
+            total += n_per * BYTES_GRAD_ACC
     batch_per = max(shape.global_batch // dp, 1)
     toks = batch_per * (1 if shape.kind == DECODE else shape.seq_len)
     total += toks * BYTES_TOKEN * (2 if shape.kind == TRAIN else 1)

@@ -22,7 +22,8 @@ from repro.models import model as M
 from repro.optim import optimizers as opt
 from repro.parallel import sharding as S
 from repro.parallel.axes import axis_rules
-from repro.runtime.train_step import TrainStepConfig, make_train_step
+from repro.runtime.schedule import fallback_schedule, make_train_step
+from repro.runtime.train_step import TrainStepConfig
 from repro.runtime.serve_step import make_decode_step, make_prefill_step
 
 
@@ -85,7 +86,15 @@ def build(cfg: ModelConfig, shape: ShapeConfig, mesh, *,
             tcfg = dataclasses.replace(tcfg, settings=settings)
         opt_abs = abstract_opt_state(tcfg.optimizer, params_abs)
         o_sh = _named(mesh, opt.state_specs(tcfg.optimizer, pspecs))
-        step_fn = make_train_step(cfg, tcfg)
+        # schedule-aware: a mesh with a pipe axis > 1 lowers the 1F1B
+        # pipeline step, so compile-backed measurement (and the oracle
+        # planner) scores the schedule that will actually run; probe plans
+        # the pipeline cannot execute (baseline ladder, micro < pipe) fall
+        # back to scan/single on the same mesh instead of erroring
+        step_fn = make_train_step(
+            cfg, tcfg, mesh=mesh,
+            schedule=fallback_schedule(cfg, tcfg, mesh,
+                                       global_batch=shape.global_batch))
         step_abs = jax.ShapeDtypeStruct((), jnp.int32)
         return Bundle(
             fn=step_fn,

@@ -38,6 +38,7 @@ from repro.launch import compile as LC
 from repro.launch.mesh import make_production_mesh
 from repro.models.model import ModelSettings
 from repro.roofline import analysis as RA
+from repro.search import execplan as XP
 from repro.search import strategies as ST
 
 # Mesh shapes the driver sweeps; under --backend simulate no jax Mesh (and
@@ -76,7 +77,9 @@ def run_cell(arch: str, shape: ShapeConfig,
              measurers: Dict[str, MM.MemoryMeasurer],
              kb: Dict, do_roofline: bool = True,
              plan_override=None, settings_fn=ModelSettings,
-             strategy: str = "fastest") -> dict:
+             strategy: str = "fastest", *, auto_mesh: bool = False,
+             backend: str = "simulate", cache=None,
+             max_devices: int = 256) -> dict:
     cfg = get_config(arch)
     result = {"arch": arch, "shape": shape.name, "kind": shape.kind}
     ok, reason = shape_applicable(cfg, shape)
@@ -88,12 +91,41 @@ def run_cell(arch: str, shape: ShapeConfig,
     # The single-pod measurer anchors profiling/roofline; a multi-only
     # sweep (--mesh multi) profiles on the multi-pod mesh instead.
     single_m = measurers.get("single") or next(iter(measurers.values()))
-    result["backend"] = single_m.backend
+    result["backend"] = backend if auto_mesh else single_m.backend
     # --- WSMC online phase (profiling ladder on the single-pod mesh) ----
     t0 = time.time()
     cls = classification_for(cfg, shape, single_m, kb)
     plan = plan_override
-    if plan is None:
+    if auto_mesh:
+        # plan the mesh, then build it: the measurement target IS the
+        # planned mesh (pipe included), not a CLI-fixed one
+        sim = (single_m if single_m.backend == "simulate"
+               else MM.SimulatedMeasurer(single_m.mesh_shape))
+        if backend == "compile":
+            # the planned mesh must be buildable on this host's (fake)
+            # devices, not just within the abstract budget
+            import jax
+            max_devices = min(max_devices, len(jax.devices()))
+        eplan = XP.plan_execution(cfg, shape, cls, n_devices=max_devices,
+                                  strategy=strategy, measurer=sim,
+                                  factors=PF.calibrated_factors(kb))
+        plan = eplan.plan
+        result["execution_plan"] = {
+            "mesh": eplan.mesh_shape, "schedule": eplan.schedule,
+            "ep": eplan.ep, "plan": dataclasses.asdict(eplan.plan),
+            "policy": eplan.policy, "n_devices": eplan.n_devices,
+            "strategy": strategy,
+        }
+        print(f"[{arch} × {shape.name}] planned: {eplan.describe()}",
+              flush=True)
+        if backend == "simulate":
+            planned_m = MM.SimulatedMeasurer(eplan.mesh_shape, cache=cache,
+                                             ep=eplan.ep)
+        else:
+            mesh, _ = eplan.build()
+            planned_m = MM.CompileMeasurer(mesh, cache=cache)
+        measurers = {"planned": planned_m}
+    elif plan is None:
         factors = PF.calibrated_factors(kb)
         decision = ST.plan_for(cfg, shape, cls, single_m.mesh_shape,
                                strategy=strategy, measurer=single_m,
@@ -121,12 +153,13 @@ def run_cell(arch: str, shape: ShapeConfig,
     for mesh_name, measurer in measurers.items():
         t0 = time.time()
         # re-plan per mesh: microbatch divisibility depends on the dp size
-        if plan_override is None:
+        # (auto mode already planned plan + mesh together)
+        if plan_override is None and not auto_mesh:
             mesh_plan = ST.plan_for(cfg, shape, cls, measurer.mesh_shape,
                                     strategy=strategy, measurer=measurer,
                                     factors=PF.calibrated_factors(kb)).plan
         else:
-            mesh_plan = plan_override
+            mesh_plan = plan
         st = settings_fn(scan_layers=True)
         prof = measurer.measure(cfg, shape, mesh_plan, settings=st)
         entry = {
@@ -189,7 +222,11 @@ def main(argv=None):
     ap.add_argument("--arch", default="all")
     ap.add_argument("--shape", default="all")
     ap.add_argument("--mesh", default="both",
-                    choices=["single", "multi", "both"])
+                    choices=["single", "multi", "both", "auto"],
+                    help="'auto' = plan the mesh per cell (mesh_space "
+                         "search) and measure on the planned mesh")
+    ap.add_argument("--max-devices", type=int, default=256,
+                    help="device budget for --mesh auto planning")
     ap.add_argument("--out", default="artifacts/dryrun")
     ap.add_argument("--kb", default="artifacts/kb.json")
     ap.add_argument("--no-roofline", action="store_true")
@@ -218,6 +255,11 @@ def main(argv=None):
 
     cache = MM.ProfileCache(args.profile_cache) if args.profile_cache else None
     measurers = {}
+    if args.mesh == "auto":
+        # classification screen: always the compile-free simulator; the
+        # measurement mesh is planned per cell inside run_cell
+        measurers["screen"] = MM.SimulatedMeasurer(MESH_SHAPES["single"],
+                                                   cache=cache)
     for name in ("single", "multi"):
         if args.mesh not in (name, "both"):
             continue
@@ -253,7 +295,10 @@ def main(argv=None):
                 result = run_cell(arch, shape, measurers, kb,
                                   do_roofline=not args.no_roofline,
                                   settings_fn=settings_fn,
-                                  strategy=args.strategy)
+                                  strategy=args.strategy,
+                                  auto_mesh=args.mesh == "auto",
+                                  backend=args.backend, cache=cache,
+                                  max_devices=args.max_devices)
             except Exception as e:  # noqa: BLE001 — record and continue
                 result = {"arch": arch, "shape": shape_name,
                           "status": "failed", "error": str(e),

@@ -14,7 +14,11 @@ The driver always runs a *planning phase* first: the selected --strategy
 searches the space through the --backend measurer. Under the default
 `--backend simulate` that phase does zero XLA compiles (ROADMAP: plan
 screening before the compile-verified pass). With no --variants the driver
-stops there; listing variants lowers + compiles each one as before.
+stops there. Listing variants no longer compiles variant-by-variant: the
+measurement phase first scores every requested variant with the
+simulate-backed feasibility score (the same ordering greedy_coordinate
+climbs on) and compiles only the --compile-budget best, plus the first
+listed variant as the delta baseline.
 """
 import os
 
@@ -173,6 +177,31 @@ def plan_phase(cfg, shape, base_cand: SP.Candidate, strategy: str,
     return res
 
 
+def prune_variants(cfg, shape, named_cands, keep: int):
+    """The measurement-phase shortlist (ROADMAP open item): score every
+    requested variant through the compile-free simulator with the same
+    feasibility ordering greedy_coordinate uses, and compile only the
+    `keep` best. The first listed variant (the delta baseline) always
+    survives. Extras-only twins (ordering-neutral levers the memory screen
+    cannot tell apart) tie; ties break by LISTING ORDER — put the variants
+    whose roofline deltas you care about most first, or raise
+    --compile-budget (0 = compile all). Pruned names are printed, never
+    silently skipped. Returns the kept names in their original order."""
+    names = list(named_cands)
+    if keep <= 0 or len(names) <= keep:
+        return names
+    scorer = ST.CandidateScorer(measurer=MM.SimulatedMeasurer(PLAN_MESH_SHAPE))
+    score = ST.feasibility_score(scorer, cfg, shape)
+    ranked = sorted(names[1:],
+                    key=lambda n: (score(named_cands[n]), names.index(n)))
+    kept = {names[0], *ranked[:max(keep - 1, 0)]}
+    dropped = [n for n in names if n not in kept]
+    print(f"prune[simulate]: compiling {len(kept)}/{len(names)} variants "
+          f"(budget {keep}; ties break by listing order); pruned: "
+          f"{','.join(dropped)}", flush=True)
+    return [n for n in names if n in kept]
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -180,6 +209,9 @@ def main(argv=None):
     ap.add_argument("--variants", default="",
                     help="comma-separated named variants to lower + compile; "
                          "empty = planning phase only")
+    ap.add_argument("--compile-budget", type=int, default=5,
+                    help="max variants to compile after the simulate-backed "
+                         "shortlist screen (0 = compile all)")
     ap.add_argument("--plan", default="",
                     help="remat,microbatches,optimizer,kv_shard")
     ap.add_argument("--strategy", default="greedy",
@@ -207,13 +239,17 @@ def main(argv=None):
     if not args.variants:
         return 0
 
+    named_cands = {vname: SPACE.point(cfg, base=base_cand, **VARIANTS[vname])
+                   for vname in args.variants.split(",")}
+    shortlist = prune_variants(cfg, shape, named_cands, args.compile_budget)
+
     from repro.launch.mesh import make_production_mesh
     mesh = make_production_mesh(multi_pod=False)
     os.makedirs(args.out, exist_ok=True)
     results = {}
     base = None
-    for vname in args.variants.split(","):
-        cand = SPACE.point(cfg, base=base_cand, **VARIANTS[vname])
+    for vname in shortlist:
+        cand = named_cands[vname]
         try:
             r = run_variant(cfg, shape, mesh, cand, args.memory)
         except Exception as e:  # noqa: BLE001

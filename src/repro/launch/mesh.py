@@ -2,18 +2,25 @@
 touches jax device state (the dry-run sets XLA_FLAGS before first init)."""
 from __future__ import annotations
 
+from typing import Mapping, Optional, Sequence
+
 import jax
 
+# Physical placement order for planned meshes: the weakest links go
+# outermost (pipelining tolerates them; DESIGN.md §5), TP innermost.
+CANONICAL_AXES = ("pod", "pipe", "data", "model")
 
-def _make_mesh(shape, axes):
+
+def _make_mesh(shape, axes, devices=None):
     """jax.make_mesh across JAX versions: `axis_types` (and the
     jax.sharding.AxisType enum backing it) only exists on newer releases;
     older ones default every axis to Auto anyway, which is what we want."""
+    kw = {} if devices is None else {"devices": devices}
     axis_type = getattr(jax.sharding, "AxisType", None)
     if axis_type is not None:
         return jax.make_mesh(shape, axes,
-                             axis_types=(axis_type.Auto,) * len(axes))
-    return jax.make_mesh(shape, axes)
+                             axis_types=(axis_type.Auto,) * len(axes), **kw)
+    return jax.make_mesh(shape, axes, **kw)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -27,9 +34,23 @@ def make_mesh(shape, axes):
     return _make_mesh(tuple(shape), tuple(axes))
 
 
-def host_mesh_for(n_devices: int, model_parallel: int = 1):
-    """Elastic helper: best-effort (data, model) mesh over surviving devices."""
-    model = max(1, model_parallel)
-    while n_devices % model:
-        model -= 1
-    return make_mesh((n_devices // model, model), ("data", "model"))
+def build_mesh(mesh_shape: Mapping[str, int],
+               devices: Optional[Sequence] = None):
+    """Build a *planned* mesh from an {axis: size} dict (the ExecutionPlan
+    output): axes ordered canonically (pod, pipe, data, model — unknown
+    axes last), over the first prod(sizes) of `devices` (default
+    jax.devices()), so a plan smaller than the host still builds."""
+    items = sorted(mesh_shape.items(),
+                   key=lambda kv: (CANONICAL_AXES.index(kv[0])
+                                   if kv[0] in CANONICAL_AXES
+                                   else len(CANONICAL_AXES), kv[0]))
+    axes = tuple(a for a, _ in items)
+    sizes = tuple(int(n) for _, n in items)
+    n = 1
+    for s in sizes:
+        n *= s
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if n > len(devices):
+        raise ValueError(f"planned mesh {dict(mesh_shape)} needs {n} "
+                         f"devices; only {len(devices)} available")
+    return _make_mesh(sizes, axes, devices=devices[:n])

@@ -23,10 +23,11 @@ from repro.configs import get_config
 from repro.configs.base import DECODE, ShapeConfig
 from repro.core import measure as MM
 from repro.core import profiler as PF
-from repro.launch.mesh import host_mesh_for
+from repro.core.predictor import MemoryPlan
 from repro.models import init_params
 from repro.parallel.axes import axis_rules
 from repro.runtime.serve_step import make_decode_step, make_prefill_step
+from repro.search import execplan as XP
 from repro.search import strategies as ST
 
 
@@ -37,6 +38,10 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--mesh", default="", choices=["", "auto"],
+                    help="'' = (data, model) host mesh from "
+                         "--model-parallel; 'auto' = search mesh_space and "
+                         "build the planned mesh")
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", default="simulate",
@@ -51,28 +56,37 @@ def main(argv=None):
     if args.reduced:
         cfg = cfg.reduced()
     context = args.prompt_len + args.gen
-    mesh = host_mesh_for(len(jax.devices()), args.model_parallel)
-    mesh_shape = dict(mesh.shape)
-
+    devices = jax.devices()
     shape = ShapeConfig("serve_cli", DECODE, context, args.batch)
-    if args.backend == "simulate":
-        measurer = MM.SimulatedMeasurer(mesh_shape)
+
+    if args.mesh == "auto":
+        # plan the serving mesh (decode pins pipe=1), then build it
+        if args.backend == "compile":
+            print("note: --mesh auto plans with the compile-free simulator; "
+                  "--backend compile only affects fixed-mesh planning")
+        cls, eplan = XP.auto_plan(cfg, shape, n_devices=len(devices),
+                                  strategy=args.strategy)
+        print(f"WSMC[auto/{args.strategy}]: {cls.category.value} -> "
+              f"{eplan.describe()}")
+        mesh, strategy = eplan.build(devices)
     else:
-        measurer = MM.CompileMeasurer(mesh)
-    cls = PF.classify_workload(cfg, shape, mesh, n_points=2, base_seq=64,
-                               measurer=measurer)
-    res = ST.plan_for(cfg, shape, cls, mesh_shape, strategy=args.strategy,
-                      measurer=measurer)
-    if res.prediction is not None:
-        cap = f"capacity={res.prediction.capacity_bytes / 2**20:.0f} MiB"
-    elif res.peak_bytes is not None:
-        cap = (f"verified_peak={res.peak_bytes / 2**20:.0f} MiB "
-               f"measured={res.measured}")
-    else:
-        cap = f"considered={res.considered}"
-    print(f"WSMC[{args.strategy}/{args.backend}]: {cls.category.value} -> "
-          f"kv_shard={res.plan.kv_shard} policy={res.policy} {cap}")
-    strategy = PF.strategy_for(cfg, res.plan, mesh)
+        eplan = XP.host_execution(cfg, shape, MemoryPlan(),
+                                  len(devices), args.model_parallel)
+        mesh, _ = eplan.build(devices)
+        mesh_shape = eplan.mesh_shape
+        if args.backend == "simulate":
+            measurer = MM.SimulatedMeasurer(mesh_shape)
+        else:
+            measurer = MM.CompileMeasurer(mesh)
+        cls = PF.classify_workload(cfg, shape, mesh, n_points=2, base_seq=64,
+                                   measurer=measurer)
+        res = ST.plan_for(cfg, shape, cls, mesh_shape,
+                          strategy=args.strategy, measurer=measurer)
+        print(f"WSMC[{args.strategy}/{args.backend}]: {cls.category.value} "
+              f"-> kv_shard={res.plan.kv_shard} policy={res.policy} "
+              f"{res.describe_outcome()}")
+        eplan = XP.from_search_result(cfg, shape, res, mesh_shape)
+        strategy = eplan.strategy()
 
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     prompt = jax.random.randint(jax.random.PRNGKey(args.seed + 1),

@@ -112,8 +112,7 @@ def block_apply(params, cfg: ModelConfig, blk: BlockSpec, x, positions,
                 cache=None, decode: bool = False, context: int = 0,
                 settings: ModelSettings = ModelSettings()):
     """Returns (x', new_cache, aux)."""
-    aux = {"lb_loss": jnp.zeros((), jnp.float32),
-           "z_loss": jnp.zeros((), jnp.float32)}
+    aux = _zero_aux()
     building = settings.build_cache and not decode and cache is None
     if blk.mixer == ATTN:
         cache_arg = cache if cache is not None else ("build" if building
@@ -201,6 +200,64 @@ def init_cache(cfg: ModelConfig, batch: int, context: int,
 
 
 # ---------------------------------------------------------------------------
+# Staged forward pieces (pipeline runtime): embed | unit stack | tail + head
+# ---------------------------------------------------------------------------
+
+def _zero_aux():
+    return {"lb_loss": jnp.zeros((), jnp.float32),
+            "z_loss": jnp.zeros((), jnp.float32)}
+
+
+def unit_stack_forward(units_params, cfg: ModelConfig, x, pos, *,
+                       settings: ModelSettings = ModelSettings(),
+                       context: int = 0,
+                       unit_wrapper: Callable = lambda f: f):
+    """Forward through a slice of the stacked unit pattern (train path, no
+    caches) — the 1F1B pipeline-stage body. `units_params` is the params
+    layout of params["units"] (one tree per unit position, each stacked on a
+    leading repeats dim, here the stage's own slice). Returns (x, aux_sum).
+    """
+    ctx = context or x.shape[1]
+
+    def unit_body(x, unit_params):
+        aux_sum = _zero_aux()
+        for i, blk in enumerate(cfg.unit):
+            x, _, aux = block_apply(unit_params[i], cfg, blk, x, pos,
+                                    cache=None, decode=False, context=ctx,
+                                    settings=settings)
+            aux_sum = {k: aux_sum[k] + aux[k] for k in aux_sum}
+        return x, aux_sum
+
+    unit_body = unit_wrapper(unit_body)
+
+    def scan_body(carry, xs):
+        x, aux_acc = carry
+        x, aux = unit_body(x, list(xs))
+        return (x, {k: aux_acc[k] + aux[k] for k in aux_acc}), ()
+
+    (x, aux_acc), _ = jax.lax.scan(scan_body, (x, _zero_aux()),
+                                   tuple(units_params))
+    return x, aux_acc
+
+
+def tail_head_forward(params, cfg: ModelConfig, x, pos, *,
+                      settings: ModelSettings = ModelSettings(),
+                      context: int = 0):
+    """The post-pipeline remainder: tail blocks -> final norm -> LM head.
+    Returns (logits, aux_sum)."""
+    ctx = context or x.shape[1]
+    aux_acc = _zero_aux()
+    for i, blk in enumerate(cfg.tail):
+        x, _, aux = block_apply(params["tail"][i], cfg, blk, x, pos,
+                                cache=None, decode=False, context=ctx,
+                                settings=settings)
+        aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}
+    x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["head"]
+    return layers.lm_head(head, cfg, x), aux_acc
+
+
+# ---------------------------------------------------------------------------
 # Forward
 # ---------------------------------------------------------------------------
 
@@ -227,8 +284,7 @@ def apply(params, cfg: ModelConfig, tokens, *, positions=None,
         pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     ctx = context or s
 
-    zero_aux = {"lb_loss": jnp.zeros((), jnp.float32),
-                "z_loss": jnp.zeros((), jnp.float32)}
+    zero_aux = _zero_aux()
     want_cache = decode or settings.build_cache
     have_cache = cache is not None
 
@@ -246,7 +302,16 @@ def apply(params, cfg: ModelConfig, tokens, *, positions=None,
 
     unit_body = unit_wrapper(unit_body)
 
-    if cfg.unit and settings.scan_layers:
+    if cfg.unit and settings.scan_layers and not have_cache \
+            and not want_cache:
+        # cache-free training forward: the same unit-stack scan the 1F1B
+        # pipeline stages run (one implementation, so pipeline parity can
+        # never drift from the sequential path)
+        x, aux_acc = unit_stack_forward(params["units"], cfg, x, pos,
+                                        settings=settings, context=ctx,
+                                        unit_wrapper=unit_wrapper)
+        new_unit_caches = None
+    elif cfg.unit and settings.scan_layers:
         def scan_body(carry, xs):
             x, aux_acc = carry
             unit_params = xs[:len(cfg.unit)]

@@ -72,6 +72,27 @@ def current_mesh() -> Optional[Mesh]:
 
 
 @contextlib.contextmanager
+def suspend_annotations():
+    """Disable shard()/gather_fsdp() for code traced inside this context.
+
+    Needed for manual-parallelism regions (shard_map bodies, e.g. the 1F1B
+    pipeline stage): the per-device code is already local, and a
+    with_sharding_constraint naming a manual mesh axis is an error there.
+    Trace-time only — the flag is read while jax traces, not at run time.
+    """
+    old = getattr(_state, "suspended", False)
+    _state.suspended = True
+    try:
+        yield
+    finally:
+        _state.suspended = old
+
+
+def annotations_suspended() -> bool:
+    return getattr(_state, "suspended", False)
+
+
+@contextlib.contextmanager
 def axis_rules(rules: Dict[str, Axis], mesh: Optional[Mesh] = None):
     old_rules = getattr(_state, "rules", None)
     old_mesh = getattr(_state, "mesh", None)
@@ -142,6 +163,8 @@ def np_prod(xs):
 
 def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
     """Annotate an activation with logical axes (no-op outside a mesh)."""
+    if annotations_suspended():
+        return x
     mesh = current_mesh()
     if mesh is None:
         return x
@@ -153,6 +176,8 @@ def gather_fsdp(w: jax.Array, *logical: Optional[str]) -> jax.Array:
     """ZeRO-3 gather-on-use: re-constrain a weight with its FSDP ("embed_w")
     axis dropped, so GSPMD all-gathers the (small) weight over "data" instead
     of psum-ing the (large) activation partials — EXPERIMENTS §Perf iter 2."""
+    if annotations_suspended():
+        return w
     mesh = current_mesh()
     if mesh is None:
         return w

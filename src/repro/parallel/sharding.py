@@ -31,6 +31,8 @@ class Strategy:
     kv_shard: str = "heads"          # heads | seq
     fsdp: bool = True                # False => pure DP + TP (weights replicated
                                      # over "data"; small models)
+    pipeline: bool = False           # layer stack split over the "pipe" axis
+                                     # (1F1B runtime schedule owns the stages)
 
     def rules(self) -> Dict[str, Any]:
         rules = dict(pax.DEFAULT_RULES)
@@ -43,19 +45,24 @@ class Strategy:
             rules["kv_heads"] = None
         if not self.fsdp:
             rules["embed_w"] = None
+        if self.pipeline:
+            rules["layers"] = "pipe"
         return rules
 
 
 def default_strategy(cfg: ModelConfig, mesh: Optional[Mesh] = None) -> Strategy:
-    """Pick kv layout and EP from divisibility against the model axis."""
+    """Pick kv layout, EP and pipelining from the mesh axes."""
     model_size = 16
+    pipeline = False
     if mesh is not None and "model" in mesh.axis_names:
         model_size = mesh.shape["model"]
+    if mesh is not None and "pipe" in mesh.axis_names:
+        pipeline = mesh.shape["pipe"] > 1
     kv = "heads" if cfg.n_kv_heads % model_size == 0 else "seq"
     # EP when the expert count tiles the axis (EXPERIMENTS §Perf llama4:
     # -56% compute vs intra-expert TP); otherwise dense TP inside experts.
     ep = cfg.is_moe and cfg.n_experts % model_size == 0
-    return Strategy(kv_shard=kv, ep=ep)
+    return Strategy(kv_shard=kv, ep=ep, pipeline=pipeline)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,255 @@
+"""Schedule-aware train-step factory: HOW a step executes its microbatches.
+
+The WSMC planner decides the memory plan (remat x microbatches x optimizer)
+and, since mesh search, the mesh itself — including a "pipe" axis. This
+module turns that decision into the runnable step:
+
+  single        — one forward/backward over the whole batch.
+  scan          — microbatch accumulation via lax.scan (the plan's
+                  transient-shrinking knob on a flat mesh).
+  pipeline_1f1b — the pipe-axis runtime: the stacked unit layers are split
+                  into mesh.shape["pipe"] contiguous stages
+                  (parallel.pipeline.split_stages) and driven through
+                  parallel.pipeline.pipeline_apply; loss and gradients flow
+                  through the pipelined forward. Each stage keeps at most
+                  its in-flight boundary carries resident (stage bodies are
+                  rematerialized in the backward), which is the in-flight
+                  transient model core.predictor assumes for pipe > 1.
+
+`make_train_step(cfg, tcfg, mesh=..., schedule="auto")` dispatches; the
+legacy `runtime.train_step.make_train_step(cfg, tcfg)` facade delegates
+here with schedule resolution from tcfg alone (no pipe).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import TRAIN, ModelConfig
+from repro.models import model as M
+from repro.models.layers import cross_entropy
+from repro.optim import optimizers as opt
+from repro.optim.compress import compress_roundtrip
+from repro.optim.schedule import warmup_cosine
+from repro.parallel import axes as pax
+from repro.parallel import pipeline as PPL
+from repro.runtime.schedule_kinds import (  # noqa: F401 — re-exported vocabulary
+    SCHEDULE_PIPELINE, SCHEDULE_SCAN, SCHEDULE_SINGLE, SCHEDULES,
+    pipeline_problems, schedule_kind)
+from repro.runtime.train_step import (TrainStepConfig, make_loss_fn,
+                                      remat_wrapper)
+
+
+def pipe_size_of(mesh) -> int:
+    """Pipeline-stage count of a jax Mesh or {axis: size} dict (1 = none)."""
+    if mesh is None:
+        return 1
+    shape = mesh if isinstance(mesh, dict) else dict(mesh.shape)
+    return int(shape.get("pipe", 1))
+
+
+def validate_pipeline(cfg: ModelConfig, tcfg: TrainStepConfig, mesh) -> int:
+    """Check (cfg, tcfg, mesh) is executable by the 1F1B schedule; returns
+    the stage count. One predicate (schedule_kinds.pipeline_problems) is
+    shared with the search space's PIPE_EXECUTABLE constraint and the
+    predictor, so a planned candidate is exactly a runnable one."""
+    pipe = pipe_size_of(mesh)
+    shape = mesh if isinstance(mesh, dict) else dict(mesh.shape)
+    problems = []
+    if pipe <= 1:
+        problems.append("mesh has no pipe axis of size > 1")
+    problems += pipeline_problems(cfg, tcfg.microbatches, shape)
+    if problems:
+        raise ValueError("pipeline_1f1b schedule not executable: "
+                         + "; ".join(problems))
+    return pipe
+
+
+def fallback_schedule(cfg: ModelConfig, tcfg: TrainStepConfig, mesh,
+                      global_batch: Optional[int] = None) -> str:
+    """Best-effort schedule for measurement probes (launch.compile): the
+    pipeline kind when (cfg, tcfg, mesh) is executable, else scan/single on
+    the same mesh — the profiling ladder measures the BASELINE_PLAN
+    (microbatches=1) on whatever mesh it is handed, including pipe ones,
+    and exhaustive/staged search enumerates microbatch counts the pipeline
+    batch sharding cannot take. Drivers executing a planned schedule stay
+    strict (validate_pipeline raises)."""
+    kind = schedule_kind(TRAIN, tcfg.microbatches, pipe_size_of(mesh))
+    if kind == SCHEDULE_PIPELINE:
+        shape = mesh if isinstance(mesh, dict) else dict(mesh.shape)
+        if pipeline_problems(cfg, tcfg.microbatches, shape, global_batch):
+            return (SCHEDULE_SCAN if tcfg.microbatches > 1
+                    else SCHEDULE_SINGLE)
+    return kind
+
+
+def _batch_spec(mesh) -> P:
+    """Spec of the microbatched activations [n_micro, mb, ...]: batch dim
+    sharded over the data axes, microbatch dim local."""
+    bd = tuple(a for a in ("pod", "data")
+               if a in mesh.axis_names and mesh.shape[a] > 1)
+    return P(None, bd) if bd else P()
+
+
+def make_pipeline_loss_fn(cfg: ModelConfig, tcfg: TrainStepConfig, mesh,
+                          axis: str = "pipe"):
+    """loss_fn(params, batch) whose forward runs the unit stack as a
+    pipeline over mesh axis `axis`. Embedding and tail/norm/head stay
+    outside the shard_map (they are not depth-split); the stage body is
+    rematerialized so the scan carries (boundary activations) are the only
+    stashed state — the 1F1B in-flight memory shape."""
+    n_stages = validate_pipeline(cfg, tcfg, mesh)
+    n_micro = tcfg.microbatches
+    settings = tcfg.settings
+    wrapper = remat_wrapper(tcfg.remat)
+    x_spec = _batch_spec(mesh)
+
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= int(mesh.shape[a])
+
+    def loss_fn(params, batch):
+        tokens, targets = batch["tokens"], batch["targets"]
+        b, s = tokens.shape
+        if b % n_micro:
+            raise ValueError(f"global batch {b} not divisible by "
+                             f"microbatches={n_micro}")
+        mb = b // n_micro
+        if mb % dp:
+            raise ValueError(
+                f"per-microbatch batch {mb} not divisible by the data axes "
+                f"(dp={dp}): the pipeline shards the microbatch batch dim; "
+                "lower microbatches or the data axis")
+        x = M.layers.embed_lookup(params["embed"], cfg, tokens,
+                                  onehot=settings.embed_onehot)
+        x_micro = x.reshape((n_micro, mb, s, x.shape[-1]))
+        x_micro = jax.lax.with_sharding_constraint(
+            x_micro, NamedSharding(mesh, x_spec))
+        stage_units = PPL.split_stages(tuple(params["units"]), n_stages)
+
+        def stage_fn(units_one, xmb):
+            pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                   (xmb.shape[0], s))
+            # per-device code: logical-axis annotations would name manual
+            # mesh axes inside shard_map — suspend them for this trace
+            with pax.suspend_annotations():
+                y, _ = M.unit_stack_forward(list(units_one), cfg, xmb, pos,
+                                            settings=settings, context=s,
+                                            unit_wrapper=wrapper)
+            return y
+
+        # Rematerialize the whole stage per tick: backward re-runs one
+        # stage body at a time, so only the boundary carries stay resident
+        # (GPipe full-stash would keep every microbatch's activations).
+        stage_fn = jax.checkpoint(
+            stage_fn, policy=jax.checkpoint_policies.nothing_saveable)
+        y = PPL.pipeline_apply(stage_fn, stage_units, x_micro, mesh=mesh,
+                               axis=axis, x_spec=x_spec)
+        x = y.reshape((b, s, y.shape[-1])).astype(x.dtype)
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        logits, aux = M.tail_head_forward(params, cfg, x, pos,
+                                          settings=settings, context=s)
+        loss = cross_entropy(logits, targets)
+        total = (loss + tcfg.lb_coef * aux["lb_loss"]
+                 + tcfg.z_coef * aux["z_loss"])
+        return total, {"loss": loss, "lb_loss": aux["lb_loss"],
+                       "z_loss": aux["z_loss"]}
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Gradient schedules
+# ---------------------------------------------------------------------------
+
+def _single_shot(grad_fn):
+    def compute(params, batch):
+        (_, metrics), grads = grad_fn(params, batch)
+        return grads, metrics
+    return compute
+
+
+def _scan_accum(grad_fn, n_micro: int):
+    def compute(params, batch):
+        def reshape(x):
+            b = x.shape[0]
+            assert b % n_micro == 0, (b, n_micro)
+            return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+        micro = jax.tree.map(reshape, batch)
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            params)
+        met0 = {"loss": jnp.zeros((), jnp.float32),
+                "lb_loss": jnp.zeros((), jnp.float32),
+                "z_loss": jnp.zeros((), jnp.float32)}
+
+        def body(carry, mb):
+            gacc, macc = carry
+            (_, met), g = grad_fn(params, mb)
+            gacc = jax.tree.map(
+                lambda a, b_: a + b_.astype(jnp.float32), gacc, g)
+            macc = {k: macc[k] + met[k] for k in macc}
+            return (gacc, macc), None
+
+        (gacc, macc), _ = jax.lax.scan(body, (acc0, met0), micro)
+        grads = jax.tree.map(lambda g: (g / n_micro), gacc)
+        metrics = {k: v / n_micro for k, v in macc.items()}
+        return grads, metrics
+    return compute
+
+
+# ---------------------------------------------------------------------------
+# The factory
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainStepConfig, *,
+                    mesh=None, schedule: str = "auto"):
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics). Pure; jit/pjit-ready.
+
+    schedule: "auto" resolves from (tcfg.microbatches, mesh pipe axis);
+    or one of SCHEDULES explicitly. The pipeline schedule needs `mesh`.
+    The chosen kind is exposed as `train_step.schedule`.
+    """
+    if schedule == "auto":
+        schedule = schedule_kind(TRAIN, tcfg.microbatches, pipe_size_of(mesh))
+    if schedule not in SCHEDULES:
+        raise ValueError(f"unknown schedule {schedule!r}; known: {SCHEDULES}")
+
+    if schedule == SCHEDULE_PIPELINE:
+        if mesh is None or isinstance(mesh, dict):
+            raise ValueError("pipeline_1f1b schedule needs a real jax Mesh")
+        loss_fn = make_pipeline_loss_fn(cfg, tcfg, mesh)
+        compute_grads = _single_shot(jax.value_and_grad(loss_fn,
+                                                        has_aux=True))
+    else:
+        grad_fn = jax.value_and_grad(make_loss_fn(cfg, tcfg), has_aux=True)
+        if schedule == SCHEDULE_SCAN:
+            if tcfg.microbatches <= 1:
+                raise ValueError("scan schedule needs microbatches > 1")
+            compute_grads = _scan_accum(grad_fn, tcfg.microbatches)
+        else:
+            compute_grads = _single_shot(grad_fn)
+
+    def train_step(params, opt_state, batch, step):
+        grads, metrics = compute_grads(params, batch)
+
+        if tcfg.compress_grads:
+            key = jax.random.fold_in(jax.random.PRNGKey(17), step)
+            grads = compress_roundtrip(grads, key)
+
+        grads, gnorm = opt.clip_by_global_norm(grads, tcfg.max_grad_norm)
+        lr = warmup_cosine(step, tcfg.optimizer.lr, tcfg.warmup_steps,
+                           tcfg.total_steps)
+        params, opt_state = opt.apply_updates(tcfg.optimizer, params, grads,
+                                              opt_state, lr)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = lr
+        return params, opt_state, metrics
+
+    train_step.schedule = schedule
+    return train_step

@@ -1,8 +1,12 @@
-"""Train-step factory: remat policy × microbatch accumulation × optimizer.
+"""Train-step configuration and loss assembly.
 
-These three knobs are exactly the WSMC planner's configuration surface
-(core/planner.py): they trade transient memory ("shuffle data") against
-step time, the way spark.executor.memory traded caching against spills.
+The remat / microbatches / optimizer knobs are exactly the WSMC planner's
+configuration surface (core/planner.py): they trade transient memory
+("shuffle data") against step time, the way spark.executor.memory traded
+caching against spills. HOW the microbatches execute (single shot, scan
+accumulation, or the 1F1B pipe-axis pipeline) is the schedule's business:
+`runtime.schedule.make_train_step` is the factory; the `make_train_step`
+here is a back-compat facade that resolves the schedule from tcfg alone.
 """
 from __future__ import annotations
 
@@ -10,14 +14,11 @@ import dataclasses
 from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.models.layers import cross_entropy
 from repro.optim import optimizers as opt
-from repro.optim.compress import compress_roundtrip
-from repro.optim.schedule import warmup_cosine
 
 REMAT_POLICIES = ("none", "dots", "full")
 
@@ -67,52 +68,15 @@ def make_loss_fn(cfg: ModelConfig, tcfg: TrainStepConfig):
     return loss_fn
 
 
-def make_train_step(cfg: ModelConfig, tcfg: TrainStepConfig):
+def make_train_step(cfg: ModelConfig, tcfg: TrainStepConfig, *,
+                    mesh=None, schedule: str = "auto"):
     """Returns train_step(params, opt_state, batch, step) ->
-    (params, opt_state, metrics). Pure; jit/pjit-ready."""
-    loss_fn = make_loss_fn(cfg, tcfg)
-    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
-    n_micro = tcfg.microbatches
+    (params, opt_state, metrics). Pure; jit/pjit-ready.
 
-    def train_step(params, opt_state, batch, step):
-        if n_micro == 1:
-            (_, metrics), grads = grad_fn(params, batch)
-        else:
-            def reshape(x):
-                b = x.shape[0]
-                assert b % n_micro == 0, (b, n_micro)
-                return x.reshape((n_micro, b // n_micro) + x.shape[1:])
-            micro = jax.tree.map(reshape, batch)
-            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                                params)
-            met0 = {"loss": jnp.zeros((), jnp.float32),
-                    "lb_loss": jnp.zeros((), jnp.float32),
-                    "z_loss": jnp.zeros((), jnp.float32)}
-
-            def body(carry, mb):
-                gacc, macc = carry
-                (_, met), g = grad_fn(params, mb)
-                gacc = jax.tree.map(
-                    lambda a, b_: a + b_.astype(jnp.float32), gacc, g)
-                macc = {k: macc[k] + met[k] for k in macc}
-                return (gacc, macc), None
-
-            (gacc, macc), _ = jax.lax.scan(body, (acc0, met0), micro)
-            grads = jax.tree.map(lambda g: (g / n_micro), gacc)
-            metrics = {k: v / n_micro for k, v in macc.items()}
-
-        if tcfg.compress_grads:
-            key = jax.random.fold_in(jax.random.PRNGKey(17), step)
-            grads = compress_roundtrip(grads, key)
-
-        grads, gnorm = opt.clip_by_global_norm(grads, tcfg.max_grad_norm)
-        lr = warmup_cosine(step, tcfg.optimizer.lr, tcfg.warmup_steps,
-                           tcfg.total_steps)
-        params, opt_state = opt.apply_updates(tcfg.optimizer, params, grads,
-                                              opt_state, lr)
-        metrics = dict(metrics)
-        metrics["grad_norm"] = gnorm
-        metrics["lr"] = lr
-        return params, opt_state, metrics
-
-    return train_step
+    Facade over `runtime.schedule.make_train_step` (lazy import so the two
+    modules stay a one-way dependency): without a mesh this resolves to the
+    legacy single/scan schedules; a mesh with a pipe axis > 1 dispatches to
+    the 1F1B pipeline schedule.
+    """
+    from repro.runtime import schedule as SCH
+    return SCH.make_train_step(cfg, tcfg, mesh=mesh, schedule=schedule)

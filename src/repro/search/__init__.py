@@ -12,3 +12,7 @@ from repro.search.strategies import (  # noqa: F401
     fastest_first, get_strategy, greedy_coordinate, plan_budget, plan_for,
     staged,
 )
+from repro.search.execplan import (  # noqa: F401
+    ExecutionPlan, auto_mesh_space, auto_plan, for_mesh, from_search_result,
+    host_execution, plan_execution,
+)

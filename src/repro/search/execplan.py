@@ -1,0 +1,190 @@
+"""Execution plans: the bridge from a SearchResult to something you RUN.
+
+The paper's point (§III-E) is that the *predicted* memory requirement drives
+the *actual* deployment configuration — Crispy (Will et al., 2022) showed
+memory models only pay off when they emit runnable allocations. Before this
+module the search subsystem could plan a pipe-axis mesh no driver could
+execute; an `ExecutionPlan` closes that loop:
+
+  plan       — the WSMC memory plan (remat x microbatches x optimizer x kv)
+  mesh_axes  — the planned mesh as {axis: size}, a search OUTPUT
+  ep         — the resolved expert-parallel mode (strategy-level knob)
+  schedule   — the runtime schedule kind (single | scan | pipeline_1f1b)
+
+`build(devices)` turns it into a live (jax Mesh, sharding.Strategy) pair via
+launch.mesh.build_mesh; `plan_execution` is the one-call `--mesh auto`
+entry: search a runnable mesh_space, promote the winner.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Optional, Sequence, Tuple
+
+from repro import hw as HW
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import measure as MM
+from repro.core.classifier import Classification
+from repro.core.predictor import MemoryPlan
+from repro.runtime.schedule_kinds import (SCHEDULE_PIPELINE, SCHEDULE_SCAN,  # noqa: F401 — re-exported schedule vocabulary
+                                          SCHEDULE_SINGLE, SCHEDULES,
+                                          schedule_kind)
+from repro.search import space as SP
+from repro.search import strategies as ST
+from repro.search.strategies import SearchResult
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """A runnable deployment configuration: memory plan + planned mesh +
+    sharding mode + runtime schedule. The thing `--mesh auto` executes."""
+    plan: MemoryPlan = MemoryPlan()
+    mesh_axes: Tuple[Tuple[str, int], ...] = (("data", 1),)
+    ep: bool = False
+    schedule: str = SCHEDULE_SINGLE
+    policy: str = ""                 # which search policy emitted it
+
+    @property
+    def mesh_shape(self) -> Dict[str, int]:
+        return dict(self.mesh_axes)
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for _, size in self.mesh_axes:
+            n *= int(size)
+        return n
+
+    @property
+    def pipe(self) -> int:
+        return int(self.mesh_shape.get("pipe", 1))
+
+    def describe(self) -> str:
+        p = self.plan
+        mesh = "x".join(f"{a}:{n}" for a, n in self.mesh_axes)
+        return (f"mesh={mesh} schedule={self.schedule} remat={p.remat} "
+                f"micro={p.microbatches} opt={p.optimizer} kv={p.kv_shard} "
+                f"ep={self.ep}"
+                + (f" policy={self.policy}" if self.policy else ""))
+
+    def strategy(self):
+        """The matching sharding.Strategy (lazy import: keep this module
+        usable without touching jax device state)."""
+        from repro.parallel import sharding as S
+        return S.Strategy(kv_shard=self.plan.kv_shard, ep=self.ep,
+                          pipeline=self.pipe > 1)
+
+    def build(self, devices: Optional[Sequence] = None):
+        """Construct the planned mesh (over the first n_devices of
+        `devices`) and the matching sharding Strategy. Returns
+        (mesh, strategy)."""
+        from repro.launch.mesh import build_mesh
+        return build_mesh(self.mesh_shape, devices), self.strategy()
+
+
+def from_search_result(cfg: ModelConfig, shape: ShapeConfig,
+                       res: SearchResult,
+                       mesh_shape: Optional[Mapping[str, int]] = None
+                       ) -> ExecutionPlan:
+    """Promote a SearchResult to an ExecutionPlan. `mesh_shape` is the
+    fallback for results from fixed-mesh spaces whose candidates carry no
+    mesh of their own."""
+    ms = dict(res.mesh_shape or mesh_shape or {"data": 1})
+    ep = ST.resolved_ep(cfg, res.candidate, ms)
+    sched = schedule_kind(shape.kind, res.plan.microbatches,
+                          int(ms.get("pipe", 1)))
+    return ExecutionPlan(plan=res.plan,
+                         mesh_axes=tuple(sorted(ms.items())),
+                         ep=ep, schedule=sched, policy=res.policy)
+
+
+def for_mesh(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan,
+             mesh_shape: Mapping[str, int],
+             policy: str = "") -> ExecutionPlan:
+    """Promote a plan onto a FIXED mesh (forced CLI spec, legacy host
+    mesh): EP by the default divisibility rule, schedule from the plan +
+    pipe axis. The single promotion path the drivers share."""
+    ms = dict(mesh_shape)
+    ep = ST.resolved_ep(cfg, SP.Candidate(plan=plan), ms)
+    sched = schedule_kind(shape.kind, plan.microbatches,
+                          int(ms.get("pipe", 1)))
+    return ExecutionPlan(plan=plan, mesh_axes=tuple(sorted(ms.items())),
+                         ep=ep, schedule=sched, policy=policy)
+
+
+def host_execution(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan,
+                   n_devices: int, model_parallel: int = 1,
+                   policy: str = "host") -> ExecutionPlan:
+    """The legacy (data, model) host mesh as an ExecutionPlan (what
+    `host_mesh_for` used to build): best-effort model axis over the
+    surviving device count."""
+    model = max(1, model_parallel)
+    while n_devices % model:
+        model -= 1
+    return for_mesh(cfg, shape, plan,
+                    {"data": n_devices // model, "model": model},
+                    policy=policy)
+
+
+def _axis_values(n_devices: int, cap: Optional[int] = None) -> Tuple[int, ...]:
+    """1, 2, 4, ... up to n_devices (plus n_devices itself for non-powers)."""
+    limit = min(n_devices, cap) if cap else n_devices
+    vals = []
+    v = 1
+    while v <= limit:
+        vals.append(v)
+        v *= 2
+    if limit not in vals:
+        vals.append(limit)
+    return tuple(vals)
+
+
+def auto_mesh_space(cfg: ModelConfig, shape: ShapeConfig,
+                    n_devices: int) -> SP.ConfigSpace:
+    """The `--mesh auto` search space: every mesh axis searchable within the
+    host's device budget, pipe candidates restricted to what the 1F1B
+    runtime executes (executable=True)."""
+    return SP.mesh_space(cfg, shape, max_devices=n_devices,
+                         data=_axis_values(n_devices),
+                         model=_axis_values(n_devices),
+                         pipe=_axis_values(n_devices, cap=4),
+                         executable=True)
+
+
+def auto_plan(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
+              strategy: str = "fastest", base_seq: int = 64,
+              n_points: int = 2, factors: Optional[dict] = None,
+              cache: Optional[MM.ProfileCache] = None):
+    """The `--mesh auto` preamble shared by the train and serve drivers:
+    classify the workload compile-free (simulator ladder over the host's
+    data axis) and plan a runnable execution. Returns
+    (Classification, ExecutionPlan)."""
+    from repro.core import profiler as PF
+    sim = MM.SimulatedMeasurer({"data": n_devices}, cache=cache)
+    cls = PF.classify_workload(cfg, shape, None, n_points=n_points,
+                               base_seq=base_seq, measurer=sim)
+    eplan = plan_execution(cfg, shape, cls, n_devices=n_devices,
+                           strategy=strategy, measurer=sim, cache=cache,
+                           factors=factors)
+    return cls, eplan
+
+
+def plan_execution(cfg: ModelConfig, shape: ShapeConfig,
+                   cls: Optional[Classification], *, n_devices: int,
+                   strategy: str = "fastest",
+                   measurer: Optional[MM.MemoryMeasurer] = None,
+                   cache: Optional[MM.ProfileCache] = None,
+                   factors: Optional[dict] = None,
+                   hw: HW.HardwareSpec = HW.TPU_V5E, k: int = 5
+                   ) -> ExecutionPlan:
+    """`--mesh auto` in one call: search the runnable mesh_space with the
+    named strategy and promote the winner to an ExecutionPlan. The measured
+    strategies default to the compile-free simulator, so planning performs
+    zero XLA compiles."""
+    space = auto_mesh_space(cfg, shape, n_devices)
+    if measurer is None and strategy not in ("fastest", "fastest_first",
+                                             "wsmc"):
+        measurer = MM.SimulatedMeasurer({"data": n_devices}, cache=cache)
+    res = ST.plan_for(cfg, shape, cls, {"data": n_devices},
+                      strategy=strategy, measurer=measurer, cache=cache,
+                      k=k, hw=hw, factors=factors, space=space)
+    return from_search_result(cfg, shape, res)

@@ -82,9 +82,14 @@ class Candidate:
 
     def step_time_penalty(self) -> float:
         """Fastest-first ordering key. The plan's roofline-validated penalty,
-        a GPipe bubble term when the pipe axis is in play, and a light
+        a pipeline bubble term when the pipe axis is in play, a light
         TP-collective term so mesh search prefers the smallest model axis
-        that fits. Extras are ordering-neutral (ties keep lattice order)."""
+        that fits, and — on spaces where the mesh is searchable — a
+        compute-parallel speedup (1/dp, 1/pipe: more devices over the batch
+        or the depth means less work per device), so mesh search fills the
+        host before shrinking. On fixed-mesh spaces every candidate shares
+        the mesh term, so plan ordering is unchanged. Extras are
+        ordering-neutral (ties keep lattice order)."""
         pen = self.plan.step_time_penalty()
         ms = self.mesh_shape
         pipe = int(ms.get("pipe", 1))
@@ -94,6 +99,8 @@ class Candidate:
         model = int(ms.get("model", 1))
         if model > 1:
             pen *= 1.0 + 0.02 * math.log2(model)
+        dp = int(ms.get("pod", 1)) * int(ms.get("data", 1))
+        pen /= dp * pipe
         return pen
 
     def describe(self) -> str:
@@ -175,12 +182,29 @@ def _check_pipe(cfg, shape, cand) -> bool:
         return True
     if shape.kind != TRAIN:           # serving runtime has no pipe schedule
         return False
-    if cfg.n_layers % pipe:
+    # stages split the stacked unit REPEATS (tail blocks run outside the
+    # pipeline) — the same quantity runtime.schedule.validate_pipeline tests
+    if cfg.repeats <= 0 or cfg.repeats % pipe:
         return False
     return cand.plan.microbatches >= pipe    # else the pipeline never fills
 
-PIPE_LEGAL = Constraint("pipe divides layers and microbatches fill it",
+PIPE_LEGAL = Constraint("pipe divides unit repeats and microbatches fill it",
                         _check_pipe)
+
+
+def _check_pipe_executable(cfg, shape, cand) -> bool:
+    """What the 1F1B runtime can actually execute today — the SAME
+    predicate validate_pipeline raises on (runtime.schedule_kinds, jax-free
+    so the compile-free planning path stays light), so a planned candidate
+    IS a runnable one."""
+    if int(cand.mesh_shape.get("pipe", 1)) <= 1:
+        return True
+    from repro.runtime.schedule_kinds import pipeline_executable
+    return pipeline_executable(cfg, cand.plan.microbatches, cand.mesh_shape,
+                               None if shape is None else shape.global_batch)
+
+PIPE_EXECUTABLE = Constraint("pipe schedule executable by the 1F1B runtime",
+                             _check_pipe_executable)
 
 
 def mesh_budget(max_devices: int) -> Constraint:
@@ -356,10 +380,14 @@ def mesh_space(cfg: ModelConfig, shape: ShapeConfig, *,
                max_devices: int = 256,
                data: Sequence[int] = (1, 2, 4, 8, 16, 32),
                model: Sequence[int] = (1, 2, 4, 8, 16),
-               pipe: Sequence[int] = (1, 2, 4)) -> ConfigSpace:
+               pipe: Sequence[int] = (1, 2, 4),
+               executable: bool = False) -> ConfigSpace:
     """Beyond-paper: the mesh axes are searchable dimensions, so the planner
     emits the mesh instead of taking it as a CLI input. kv_shard resolves
-    per candidate ('auto') against the candidate's own model-axis size."""
+    per candidate ('auto') against the candidate's own model-axis size.
+    `executable=True` additionally restricts pipe candidates to what the
+    1F1B runtime schedule can run today (the `--mesh auto` drivers set it:
+    the plan must be the thing you run)."""
     if shape.kind != TRAIN:
         plan_knobs = [Knob("remat", ("none",)), Knob("microbatches", (1,)),
                       Knob("optimizer", ("adamw_f32",)),
@@ -372,10 +400,13 @@ def mesh_space(cfg: ModelConfig, shape: ShapeConfig, *,
     mesh_knobs = [Knob("data", tuple(data), group="mesh"),
                   Knob("model", tuple(model), group="mesh"),
                   Knob("pipe", tuple(pipe), group="mesh")]
+    constraints = [MICRO_DIVIDES_BATCH, DP_DIVIDES_BATCH, KV_HEADS_DIVISIBLE,
+                   PIPE_LEGAL, mesh_budget(max_devices)]
+    if executable:
+        constraints.append(PIPE_EXECUTABLE)
     return ConfigSpace(
         f"mesh[{cfg.name}|{shape.name}]", plan_knobs + mesh_knobs,
-        (MICRO_DIVIDES_BATCH, DP_DIVIDES_BATCH, KV_HEADS_DIVISIBLE,
-         PIPE_LEGAL, mesh_budget(max_devices)))
+        tuple(constraints))
 
 
 def hillclimb_space(

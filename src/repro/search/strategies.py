@@ -52,6 +52,17 @@ class SearchResult:
     def mesh_shape(self) -> Dict[str, int]:
         return self.candidate.mesh_shape
 
+    def describe_outcome(self) -> str:
+        """One-line cost summary for driver logs: predicted capacity,
+        verified peak, or just the candidates examined."""
+        if self.prediction is not None:
+            return (f"capacity="
+                    f"{self.prediction.capacity_bytes / 2**20:.0f} MiB")
+        if self.peak_bytes is not None:
+            return (f"verified_peak={self.peak_bytes / 2**20:.0f} MiB "
+                    f"measured={self.measured}")
+        return f"considered={self.considered}"
+
 
 def plan_budget(hw: HW.HardwareSpec = HW.TPU_V5E) -> float:
     """Peak bytes/device a plan may measure at and still be configurable
@@ -362,14 +373,17 @@ def plan_for(cfg: ModelConfig, shape: ShapeConfig,
              measurer: Optional[MM.MemoryMeasurer] = None,
              cache: Optional[MM.ProfileCache] = None, k: int = 5,
              mode: str = "paper", hw: HW.HardwareSpec = HW.TPU_V5E,
-             factors: Optional[dict] = None) -> SearchResult:
+             factors: Optional[dict] = None,
+             space: Optional[ConfigSpace] = None) -> SearchResult:
     """One-call façade for the entry points (serve / dryrun / benchmarks):
-    build the paper space over the given fixed mesh and run the named
+    build the paper space over the given fixed mesh (or walk a caller-built
+    `space`, e.g. a mesh_space for `--mesh auto`) and run the named
     strategy. `measurer` is the verify backend for the measured strategies
     (defaults to the free simulator); `staged` always screens with the
     simulator regardless."""
     fn = get_strategy(strategy)
-    space = SP.paper_space(cfg, shape, mesh_shape)
+    if space is None:
+        space = SP.paper_space(cfg, shape, mesh_shape)
     if fn is fastest_first:
         return fastest_first(space, cfg, shape, cls, mode=mode, hw=hw,
                              factors=factors)

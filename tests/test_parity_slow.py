@@ -62,6 +62,41 @@ def test_transient_grows_with_input_on_both_backends(mesh):
         assert big.transient_bytes > small.transient_bytes, m.backend
 
 
+def test_simulator_matches_executed_1f1b_pipeline():
+    """The predictor's 1F1B in-flight transient model validated against the
+    EXECUTED pipeline: the compile backend lowers the actual
+    pipeline_1f1b train step (launch.compile routes through
+    runtime.schedule on a pipe mesh) on fake host devices, and the
+    simulator's peak must land inside a band of memory_analysis(). Bands
+    are CPU-compile smoke-scale derived (XLA scratch the simulator does
+    not model dominates the lower edge)."""
+    from conftest import run_in_subprocess
+    code = """
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig, TRAIN, depth_variant
+from repro.core import measure as MM
+from repro.core.predictor import MemoryPlan
+from repro.launch.mesh import build_mesh
+
+cfg = depth_variant(get_config("h2o-danube-1.8b").reduced(), 4)
+shape = ShapeConfig("t", TRAIN, 64, 8)
+for ms, micro, remat in (({"data": 2, "pipe": 2}, 4, "none"),
+                         ({"data": 2, "pipe": 4}, 4, "none")):
+    plan = MemoryPlan(remat=remat, microbatches=micro)
+    comp = MM.CompileMeasurer(build_mesh(ms)).measure(cfg, shape, plan)
+    sim = MM.SimulatedMeasurer(ms).measure(cfg, shape, plan)
+    r = sim.argument_bytes / max(comp.argument_bytes, 1.0)
+    assert 0.85 <= r <= 1.15, ("resident", ms, r)
+    t = sim.transient_bytes / max(comp.transient_bytes, 1.0)
+    assert 0.15 <= t <= 4.00, ("transient", ms, t)
+    p = sim.peak_bytes / max(comp.peak_bytes, 1.0)
+    assert 0.20 <= p <= 2.50, ("peak", ms, p)
+    print("PIPE_PARITY_OK", ms, round(r, 3), round(t, 3), round(p, 3))
+"""
+    out = run_in_subprocess(code, devices=8)
+    assert out.count("PIPE_PARITY_OK") == 2
+
+
 def test_compile_measurer_populates_shared_cache(tmp_path, mesh):
     cache = MM.ProfileCache(str(tmp_path / "p.json"))
     m = MM.CompileMeasurer(mesh, cache=cache)
