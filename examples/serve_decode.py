@@ -1,47 +1,38 @@
-"""Batched serving example: prefill a batch of prompts, stream greedy
-decode against the ring KV cache (sliding-window + global layers).
+"""Serving-engine example: replay a deterministic mixed-length trace
+through continuous batching over the slotted ring-KV pool, then compare
+against the fixed-batch baseline.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models import ModelSettings, init_params
 from repro.models.attention import AttnSettings
-from repro.runtime.serve_step import make_decode_step, make_prefill_step
+from repro.serving import Engine, describe_trace, synthetic_trace, trace_context
+from repro.serving.executor import JaxExecutor
 
 cfg = get_config("mistral-nemo-12b").reduced()
 settings = ModelSettings(attn=AttnSettings(backend="blocked",
                                            q_block=32, kv_block=32))
-B, PROMPT, GEN = 4, 24, 12
-CONTEXT = PROMPT + GEN
+SLOTS = 3
 
 params = init_params(jax.random.PRNGKey(0), cfg)
-prompts = jax.random.randint(jax.random.PRNGKey(1), (B, PROMPT), 2,
-                             cfg.vocab_size)
+trace = synthetic_trace(8, vocab_size=cfg.vocab_size, seed=1,
+                        prompt_lens=(8, 16), gen_lens=(4, 12),
+                        mean_interarrival=1.0)
+context = trace_context(trace)
+print("trace:", describe_trace(trace))
 
-prefill = make_prefill_step(cfg, settings)
-decode = make_decode_step(cfg, settings)
+for policy in ("continuous", "static"):
+    executor = JaxExecutor(params, cfg, n_slots=SLOTS, context=context,
+                           settings=settings)
+    engine = Engine(executor, SLOTS, policy=policy)
+    t0 = time.time()
+    report = engine.run(trace)
+    print(report.describe() + f" wall={time.time() - t0:.2f}s")
 
-t0 = time.time()
-last_logits, cache = prefill(params, prompts, context=CONTEXT)
-print(f"prefill {B}×{PROMPT} tokens: {time.time()-t0:.2f}s "
-      f"(cache built for {CONTEXT} positions)")
-
-tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
-stream = [tok]
-t0 = time.time()
-for t in range(GEN - 1):
-    pos = jnp.full((B,), PROMPT + t, jnp.int32)
-    logits, cache = decode(params, tok[:, None], pos, cache, context=CONTEXT)
-    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    stream.append(tok)
-dt = time.time() - t0
-gen = jnp.stack(stream, axis=1)
-print(f"decoded {GEN-1} steps × {B} seqs in {dt:.2f}s "
-      f"({dt/(GEN-1)*1e3:.0f} ms/step)")
-for b in range(B):
-    print(f"  seq{b}: {gen[b].tolist()}")
+first = report.completions[0]
+print(f"  req{first.rid} tokens: {list(first.tokens)}")

@@ -218,6 +218,48 @@ def predict(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan,
                               hbm_bytes=hw.hbm_bytes)
 
 
+def serving_capacity(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan,
+                     cls: Classification, mesh_shape: dict,
+                     mode: str = "paper", hw: HW.HardwareSpec = HW.TPU_V5E,
+                     hbm_budget: Optional[float] = None,
+                     factors: Optional[dict] = None,
+                     max_per_device: int = 1 << 16) -> int:
+    """Eq. 11 run backwards: the serving-side inverse of `predict`.
+
+    The forward model answers "how much memory does a workload of batch B
+    need?"; online serving asks the inverse — "given this HBM budget, how
+    many concurrent sequences can be admitted?". Because every batch-scaled
+    term (KV/recurrent caches via cache_bytes_per_device, token inputs,
+    decode transients) is monotone in the per-device batch, the inverse is
+    an exact search over whole per-device sequence slots: the largest
+    `per` whose predicted capacity (resident + transient, Eq. 11 headroom
+    included) still fits `hbm_budget`. Returns the GLOBAL concurrent
+    sequence count (per-device slots x dp); 0 if even one sequence per
+    device does not fit.
+    """
+    budget = hw.hbm_bytes if hbm_budget is None else float(hbm_budget)
+    _, dp, _ = mesh_factors(mesh_shape)
+
+    def fits(per: int) -> bool:
+        sh = dataclasses.replace(shape, kind=DECODE, global_batch=per * dp)
+        pred = predict(cfg, sh, plan, cls, mesh_shape, mode, hw, factors)
+        return pred.capacity_bytes <= budget
+
+    if not fits(1):
+        return 0
+    lo, hi = 1, 2
+    while hi < max_per_device and fits(hi):
+        lo, hi = hi, hi * 2
+    if hi >= max_per_device:
+        if fits(max_per_device):             # saturated: report the cap
+            return max_per_device * dp
+        hi = max_per_device
+    while hi - lo > 1:                       # invariant: fits(lo), not fits(hi)
+        mid = (lo + hi) // 2
+        lo, hi = (mid, hi) if fits(mid) else (lo, mid)
+    return lo * dp
+
+
 def min_devices(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan,
                 cls: Classification, mode: str = "paper",
                 hw: HW.HardwareSpec = HW.TPU_V5E,

@@ -1,14 +1,20 @@
-"""Serving driver: batched prefill + decode with WSMC-planned cache layout.
+"""Serving driver: replay a deterministic synthetic trace through the
+memory-governed engine.
 
-Plan selection goes through the pluggable `repro.search` subsystem: the
-default `--backend simulate` screens candidates with the analytical
-MemoryMeasurer, so serving startup performs zero throwaway compiles (the
-only compiles are the prefill/decode steps that actually serve).
+The driver is deliberately thin — all scheduling lives in
+`repro.serving.Engine`, all capacity governance in
+`search.execplan.plan_serving` (which inverts the WSMC requirement model:
+`predictor.serving_capacity` turns the per-device HBM budget into a
+maximum concurrent-sequence count, and the engine's slot pool is sized
+from it; everything beyond queues). Planning defaults to the compile-free
+simulator, so the only compiles in a run are the prefill/decode steps that
+actually serve traffic; `--backend compile` classifies and verifies with
+real compiles instead (honored on the `--mesh auto` path too).
 
 Example (CPU, reduced config):
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-12b --reduced \
-      --prompt-len 32 --gen 16 --batch 4 [--backend simulate|compile] \
-      [--strategy fastest|staged|exhaustive|greedy]
+      --requests 8 --prompt-lens 4,8 --gen-lens 2,4,8 [--mesh auto] \
+      [--backend simulate|compile] [--policy continuous|static|both]
 """
 from __future__ import annotations
 
@@ -16,107 +22,150 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import DECODE, ShapeConfig
 from repro.core import measure as MM
-from repro.core import profiler as PF
 from repro.core.predictor import MemoryPlan
 from repro.models import init_params
 from repro.parallel.axes import axis_rules
-from repro.runtime.serve_step import make_decode_step, make_prefill_step
 from repro.search import execplan as XP
-from repro.search import strategies as ST
+from repro.search import space as SP
+from repro.serving import Engine, describe_trace, synthetic_trace, trace_context
+from repro.serving.executor import JaxExecutor
+
+
+def _int_list(s: str):
+    return tuple(int(v) for v in s.split(",") if v)
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--mesh", default="", choices=["", "auto"],
-                    help="'' = (data, model) host mesh from "
-                         "--model-parallel; 'auto' = search mesh_space and "
-                         "build the planned mesh")
-    ap.add_argument("--model-parallel", type=int, default=1)
+    # trace knobs (deterministic: same seed + knobs => same trace)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-lens", type=_int_list, default=(4, 8))
+    ap.add_argument("--gen-lens", type=_int_list, default=(2, 4, 8))
+    ap.add_argument("--arrival-mean", type=float, default=1.0,
+                    help="mean inter-arrival ticks; <=0 = burst at tick 0")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--context", type=int, default=0,
+                    help="ring-cache extent; 0 = max prompt+gen in the trace")
+    # planning knobs
+    ap.add_argument("--mesh", default="", choices=["", "auto"],
+                    help="'' = (data, model) host mesh from --model-parallel; "
+                         "'auto' = search the serving lattice for the mesh "
+                         "that maximizes admitted concurrency")
+    ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--backend", default="simulate",
                     choices=["simulate", "compile"],
-                    help="memory-measurement backend for plan selection; "
+                    help="measurement backend for workload classification; "
                          "simulate = zero throwaway compiles at startup")
-    ap.add_argument("--strategy", default="fastest",
-                    choices=list(ST.CLI_STRATEGIES))
+    ap.add_argument("--hbm-budget-gb", type=float, default=0.0,
+                    help="per-device HBM budget for admission; 0 = the "
+                         "target hardware's full HBM")
+    ap.add_argument("--max-slots", type=int, default=8,
+                    help="cap on the engine's slot pool (the WSMC capacity "
+                         "is the bound; this caps it for small hosts)")
+    ap.add_argument("--policy", default="continuous",
+                    choices=["continuous", "static", "both"])
+    ap.add_argument("--forbid-plan-compiles", action="store_true",
+                    help="fail if planning attempts an XLA compile (CI "
+                         "guard; incompatible with --backend compile)")
     args = ap.parse_args(argv)
+
+    if args.forbid_plan_compiles and args.backend == "compile":
+        ap.error("--forbid-plan-compiles contradicts --backend compile")
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    context = args.prompt_len + args.gen
+    trace = synthetic_trace(args.requests, vocab_size=cfg.vocab_size,
+                            seed=args.seed, prompt_lens=args.prompt_lens,
+                            gen_lens=args.gen_lens,
+                            mean_interarrival=args.arrival_mean)
+    context = args.context or trace_context(trace)
     devices = jax.devices()
-    shape = ShapeConfig("serve_cli", DECODE, context, args.batch)
+    shape = ShapeConfig("serve_trace", DECODE, context,
+                        max(args.max_slots, 1))
+    budget = (args.hbm_budget_gb * 2**30) if args.hbm_budget_gb else None
 
-    if args.mesh == "auto":
-        # plan the serving mesh (decode pins pipe=1), then build it
-        if args.backend == "compile":
-            print("note: --mesh auto plans with the compile-free simulator; "
-                  "--backend compile only affects fixed-mesh planning")
-        cls, eplan = XP.auto_plan(cfg, shape, n_devices=len(devices),
-                                  strategy=args.strategy)
-        print(f"WSMC[auto/{args.strategy}]: {cls.category.value} -> "
-              f"{eplan.describe()}")
-        mesh, strategy = eplan.build(devices)
-    else:
-        eplan = XP.host_execution(cfg, shape, MemoryPlan(),
-                                  len(devices), args.model_parallel)
-        mesh, _ = eplan.build(devices)
-        mesh_shape = eplan.mesh_shape
-        if args.backend == "simulate":
-            measurer = MM.SimulatedMeasurer(mesh_shape)
+    # -- plan: mesh + kv sharding + admission bound -------------------------
+    # The compile guard is scoped to planning only (restored after), so a
+    # later call in the same process can still compile legitimately.
+    guard = None
+    if args.forbid_plan_compiles:
+        from repro.launch import compile as LC
+
+        def _forbidden(*a, **k):
+            raise AssertionError(
+                "throwaway XLA compile during serve planning "
+                "(--forbid-plan-compiles)")
+        guard, LC.build = (LC, LC.build), _forbidden
+    try:
+        if args.mesh == "auto":
+            measurer = None
+            if args.backend == "compile":
+                from repro.launch.mesh import build_mesh
+                measurer = MM.CompileMeasurer(
+                    build_mesh({"data": len(devices)}, devices))
+            cls, splan = XP.plan_serving(cfg, shape, n_devices=len(devices),
+                                         hbm_budget=budget,
+                                         measurer=measurer)
         else:
-            measurer = MM.CompileMeasurer(mesh)
-        cls = PF.classify_workload(cfg, shape, mesh, n_points=2, base_seq=64,
-                                   measurer=measurer)
-        res = ST.plan_for(cfg, shape, cls, mesh_shape,
-                          strategy=args.strategy, measurer=measurer)
-        print(f"WSMC[{args.strategy}/{args.backend}]: {cls.category.value} "
-              f"-> kv_shard={res.plan.kv_shard} policy={res.policy} "
-              f"{res.describe_outcome()}")
-        eplan = XP.from_search_result(cfg, shape, res, mesh_shape)
-        strategy = eplan.strategy()
+            host = XP.host_execution(cfg, shape, MemoryPlan(),
+                                     len(devices), args.model_parallel)
+            if args.backend == "compile":
+                measurer = MM.CompileMeasurer(host.build(devices)[0])
+            else:
+                measurer = MM.SimulatedMeasurer(host.mesh_shape)
+            pinned = SP.serving_space(
+                cfg, shape, max_devices=len(devices),
+                data=(host.mesh_shape.get("data", 1),),
+                model=(host.mesh_shape.get("model", 1),))
+            cls, splan = XP.plan_serving(cfg, shape, n_devices=len(devices),
+                                         hbm_budget=budget,
+                                         measurer=measurer, space=pinned)
+    finally:
+        if guard is not None:
+            guard[0].build = guard[1]
+    print(f"WSMC[serving/{args.backend}]: {cls.category.value} -> "
+          f"{splan.describe()}")
+    print("trace:", describe_trace(trace))
 
+    n_slots = splan.slots(cap=min(args.max_slots, len(trace)))
+    if n_slots < 1:
+        print("no serving capacity under the budget; nothing admitted")
+        return 1
+    mesh, strategy = splan.execution.build(devices)
+
+    # -- serve --------------------------------------------------------------
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
-    prompt = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
-                                (args.batch, args.prompt_len), 2,
-                                cfg.vocab_size)
-
-    prefill = jax.jit(make_prefill_step(cfg), static_argnames=("context",))
-    decode = jax.jit(make_decode_step(cfg), static_argnames=("context",),
-                     donate_argnums=(3,))
-
+    policies = (["continuous", "static"] if args.policy == "both"
+                else [args.policy])
+    reports = []
     with mesh, axis_rules(strategy.rules(), mesh=mesh):
-        t0 = time.time()
-        logits, cache = prefill(params, prompt, context=context)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        t_prefill = time.time() - t0
-        out = [tok]
-        t0 = time.time()
-        for t in range(args.gen - 1):
-            pos = jnp.full((args.batch,), args.prompt_len + t, jnp.int32)
-            logits, cache = decode(params, tok[:, None], pos, cache,
+        for policy in policies:
+            executor = JaxExecutor(params, cfg, n_slots=n_slots,
                                    context=context)
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            out.append(tok)
-        gen = np.asarray(jnp.stack(out, axis=1))
-        t_decode = time.time() - t0
+            engine = Engine(executor, n_slots, policy=policy)
+            t0 = time.time()
+            report = engine.run(trace)
+            dt = time.time() - t0
+            print(report.describe() + f" wall={dt:.2f}s "
+                  f"compiles={executor.compile_counts()}")
+            reports.append(report)
 
-    print(f"prefill: {args.batch}x{args.prompt_len} in {t_prefill:.2f}s; "
-          f"decode: {args.gen - 1} steps in {t_decode:.2f}s "
-          f"({t_decode / max(args.gen - 1, 1) * 1e3:.1f} ms/tok/batch)")
-    print("generated tokens (first row):", gen[0].tolist())
+    if args.policy == "both" and len(reports) == 2:
+        cont, stat = reports
+        print(f"occupancy: continuous={cont.occupancy():.3f} vs "
+              f"static={stat.occupancy():.3f} "
+              f"(+{(cont.occupancy() - stat.occupancy()) * 100:.1f} pts)")
+    completed = min(len(r.completions) for r in reports)
+    if completed != len(trace):
+        print(f"ERROR: {completed}/{len(trace)} requests completed")
+        return 1
     return 0
 
 

@@ -247,9 +247,24 @@ def cache_spec(cfg: ModelConfig, blk: BlockSpec, batch: int, context: int,
 
 
 def _cache_from_prefill(k, v, positions, blk: BlockSpec, context: int):
-    """Build a ring cache holding the last cache_len positions of a prefill."""
+    """Build a ring cache holding the last cache_len positions of a prefill.
+
+    Always emits the FULL cache_len(context) ring: a prompt shorter than the
+    ring pads the empty slots with pos=-1 (masked). Without the padding a
+    short-prompt prefill would hand decode a ring of length prompt_len whose
+    slot = pos % prompt_len mapping evicts live context early (a global
+    layer's ring must only wrap at cache_len); it also gives every sequence
+    the same cache shapes, which is what lets the serving engine write any
+    prefill into a pool slot (runtime.serve_step.write_cache_slot)."""
     L = blk.cache_len(context)
     k_t, v_t, p_t = k[:, -L:], v[:, -L:], positions[:, -L:]
+    pad = L - k_t.shape[1]
+    if pad > 0:
+        # prefill positions start at 0, so occupied slots are already at
+        # pos % L = 0..p-1; empty tail slots stay invalid
+        k_t = jnp.pad(k_t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_t = jnp.pad(v_t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        p_t = jnp.pad(p_t, ((0, 0), (0, pad)), constant_values=-1)
     # Ring layout: slot = pos % L. For contiguous positions that's a roll.
     shift = p_t[0, 0] % L  # uniform across batch (packed sequences)
     return {

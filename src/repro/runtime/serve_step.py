@@ -1,10 +1,16 @@
 """Serving steps: prefill (builds the ring KV / recurrent caches, returns
-last-token logits) and decode (one token per sequence against the cache)."""
+last-token logits), decode (one token per sequence against the cache), and
+the slot-pool operations the serving engine's continuous batching uses
+(claim a slot by overwriting it with a fresh prefill; batched decode over
+heterogeneous per-slot positions rides the ring cache's slot = pos % L
+layout unchanged)."""
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
@@ -40,18 +46,105 @@ def make_decode_step(cfg: ModelConfig,
     return decode_step
 
 
+# ---------------------------------------------------------------------------
+# Slot pool: a batch of independent ring caches the engine claims/frees
+# ---------------------------------------------------------------------------
+
+def init_slot_pool(cfg: ModelConfig, n_slots: int, context: int):
+    """The engine's KV/recurrent slot pool: one cache tree whose batch dim
+    is the slot index. Freshly initialized slots hold pos=-1 everywhere
+    (every ring entry masked)."""
+    return M.init_cache(cfg, n_slots, context)
+
+
+def write_cache_slot(cfg: ModelConfig, pool, one, slot):
+    """Overwrite slot `slot` of a pool cache with a single-sequence cache
+    (batch=1). Unit caches are stacked over repeats (batch is axis 1); tail
+    caches lead with batch (axis 0). Prefill rings always span the full
+    cache_len (attention._cache_from_prefill pads short prompts), so this
+    is a whole-slot overwrite: whatever a freed slot accumulated while
+    riding along in batched decode is wiped on claim."""
+    def upd(axis):
+        return lambda P, o: jax.lax.dynamic_update_slice_in_dim(
+            P, o.astype(P.dtype), slot, axis=axis)
+
+    return {
+        "units": [jax.tree.map(upd(1), pool["units"][i], one["units"][i])
+                  for i in range(len(cfg.unit))],
+        "tail": [jax.tree.map(upd(0), pool["tail"][i], one["tail"][i])
+                 for i in range(len(cfg.tail))],
+    }
+
+
+def make_slot_prefill_step(cfg: ModelConfig,
+                           settings: Optional[M.ModelSettings] = None):
+    """Prefill ONE sequence (tokens [1, p]) directly into slot `slot` of a
+    donated pool cache. Returns (last-token logits [1, V], new pool). One
+    compile per distinct prompt length (bucketed traces keep that small);
+    the decode step stays a single compile at pool width."""
+    settings = settings or M.ModelSettings()
+    psettings = dataclasses.replace(settings, build_cache=True)
+
+    def prefill_into_slot(params, tokens, slot, pool, context: int):
+        logits, one, _ = M.apply(params, cfg, tokens, settings=psettings,
+                                 context=context, logits_last_only=True)
+        return logits[:, -1], write_cache_slot(cfg, pool, one, slot)
+
+    return prefill_into_slot
+
+
+def _sharding_ctx_key():
+    """The ambient sharding context shard()/gather_fsdp bake into a trace
+    (parallel.axes thread-locals). jax.jit's own cache does not key on it,
+    so the memoized steps below must — otherwise a run under different
+    axis_rules/mesh would reuse a trace with the wrong constraints."""
+    from repro.parallel import axes as pax
+    mesh = pax.current_mesh()
+    return (mesh, tuple(sorted(pax.current_rules().items())))
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_serve_steps(cfg, settings, slot: bool, ctx_key):
+    prefill_fn = (make_slot_prefill_step if slot
+                  else make_prefill_step)(cfg, settings)
+    prefill = jax.jit(prefill_fn, static_argnames=("context",),
+                      donate_argnums=(3,) if slot else ())
+    decode = jax.jit(make_decode_step(cfg, settings),
+                     static_argnames=("context",), donate_argnums=(3,))
+    return prefill, decode
+
+
+def serve_steps(cfg: ModelConfig,
+                settings: Optional[M.ModelSettings] = None):
+    """Jitted (prefill, decode) pair, memoized per (cfg, settings, ambient
+    sharding context): repeated greedy_generate calls (tests, examples)
+    reuse the compiled steps instead of re-tracing per call. `context` is
+    static and the decode cache is donated in place."""
+    return _jitted_serve_steps(cfg, settings, False, _sharding_ctx_key())
+
+
+def slot_serve_steps(cfg: ModelConfig,
+                     settings: Optional[M.ModelSettings] = None):
+    """Jitted (prefill-into-slot, decode) pair for the engine's slot pool,
+    memoized like serve_steps so successive executors (e.g. the serve
+    driver's --policy both runs) share compiled steps instead of paying
+    the whole compile set again. Pool arguments are donated."""
+    return _jitted_serve_steps(cfg, settings, True, _sharding_ctx_key())
+
+
 def greedy_generate(params, cfg: ModelConfig, prompt_tokens, n_steps: int,
                     context: int, settings: Optional[M.ModelSettings] = None):
-    """Python-loop greedy decoding (tests/examples; drivers jit the steps)."""
+    """Greedy decoding with jitted, cache-donating steps (serve_steps):
+    the engine's per-request reference path."""
     b, p = prompt_tokens.shape
-    prefill = make_prefill_step(cfg, settings)
-    decode = make_decode_step(cfg, settings)
-    last_logits, cache = prefill(params, prompt_tokens, context)
+    prefill, decode = serve_steps(cfg, settings)
+    last_logits, cache = prefill(params, prompt_tokens, context=context)
     out = []
     tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
     for t in range(n_steps):
         out.append(tok)
         pos = jnp.full((b,), p + t, jnp.int32)
-        logits, cache = decode(params, tok[:, None], pos, cache, context)
+        logits, cache = decode(params, tok[:, None], pos, cache,
+                               context=context)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     return jnp.stack(out, axis=1)

@@ -5,7 +5,7 @@ hillclimbing). The planner, hillclimb, serve, dryrun and the benchmarks all
 search through this one API."""
 from repro.search.space import (  # noqa: F401
     AUTO, Candidate, ConfigSpace, Constraint, Knob, candidate_overrides,
-    hillclimb_space, kv_auto, mesh_space, paper_space,
+    hillclimb_space, kv_auto, mesh_space, paper_space, serving_space,
 )
 from repro.search.strategies import (  # noqa: F401
     CLI_STRATEGIES, CandidateScorer, SearchResult, exhaustive_verified,
@@ -13,6 +13,6 @@ from repro.search.strategies import (  # noqa: F401
     staged,
 )
 from repro.search.execplan import (  # noqa: F401
-    ExecutionPlan, auto_mesh_space, auto_plan, for_mesh, from_search_result,
-    host_execution, plan_execution,
+    ExecutionPlan, ServingPlan, auto_mesh_space, auto_plan, for_mesh,
+    from_search_result, host_execution, plan_execution, plan_serving,
 )

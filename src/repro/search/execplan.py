@@ -153,19 +153,99 @@ def auto_mesh_space(cfg: ModelConfig, shape: ShapeConfig,
 def auto_plan(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
               strategy: str = "fastest", base_seq: int = 64,
               n_points: int = 2, factors: Optional[dict] = None,
-              cache: Optional[MM.ProfileCache] = None):
+              cache: Optional[MM.ProfileCache] = None,
+              measurer: Optional[MM.MemoryMeasurer] = None):
     """The `--mesh auto` preamble shared by the train and serve drivers:
-    classify the workload compile-free (simulator ladder over the host's
-    data axis) and plan a runnable execution. Returns
-    (Classification, ExecutionPlan)."""
+    classify the workload and plan a runnable execution. Returns
+    (Classification, ExecutionPlan).
+
+    `measurer` is the measurement backend for BOTH the classification
+    ladder and the measured strategies — the drivers thread their
+    `--backend` choice through here, so `--mesh auto --backend compile`
+    classifies and verifies with real compiles instead of silently falling
+    back to the simulator. Default (None) stays the compile-free simulator
+    over the host's data axis."""
     from repro.core import profiler as PF
-    sim = MM.SimulatedMeasurer({"data": n_devices}, cache=cache)
+    if measurer is None:
+        measurer = MM.SimulatedMeasurer({"data": n_devices}, cache=cache)
     cls = PF.classify_workload(cfg, shape, None, n_points=n_points,
-                               base_seq=base_seq, measurer=sim)
+                               base_seq=base_seq, measurer=measurer)
     eplan = plan_execution(cfg, shape, cls, n_devices=n_devices,
-                           strategy=strategy, measurer=sim, cache=cache,
+                           strategy=strategy, measurer=measurer, cache=cache,
                            factors=factors)
     return cls, eplan
+
+
+# ---------------------------------------------------------------------------
+# Serving: plan for maximum admitted concurrency under an HBM budget
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingPlan:
+    """A deployment configuration for the serving engine: the runnable
+    ExecutionPlan plus the WSMC-predicted admission bound. `capacity` is
+    the GLOBAL number of concurrent sequences `predictor.serving_capacity`
+    says fit the per-device budget — the engine sizes its KV slot pool
+    from it and queues everything beyond."""
+    execution: ExecutionPlan
+    capacity: int
+    hbm_budget: float
+    considered: int = 0              # serving candidates scored
+
+    def slots(self, cap: Optional[int] = None) -> int:
+        """Engine slot-pool size: the predicted capacity, optionally capped
+        (CLI --max-slots, trace size)."""
+        return self.capacity if cap is None else min(self.capacity, int(cap))
+
+    def describe(self) -> str:
+        return (f"{self.execution.describe()} capacity={self.capacity} "
+                f"(budget={self.hbm_budget / 2**30:.1f} GiB, "
+                f"considered={self.considered})")
+
+
+def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
+                 hbm_budget: Optional[float] = None,
+                 cls: Optional[Classification] = None,
+                 measurer: Optional[MM.MemoryMeasurer] = None,
+                 cache: Optional[MM.ProfileCache] = None,
+                 base_seq: int = 64, n_points: int = 2, mode: str = "paper",
+                 factors: Optional[dict] = None,
+                 hw: HW.HardwareSpec = HW.TPU_V5E,
+                 space: Optional[SP.ConfigSpace] = None):
+    """The serving-engine planning entry: walk the serving lattice
+    (kv_shard x data x model, pipe pinned — space.serving_space) and pick
+    the candidate that maximizes `predictor.serving_capacity` under the
+    per-device HBM budget, tie-broken fastest-first. This is the paper's
+    configuration loop run in reverse: instead of sizing memory to a fixed
+    workload, it sizes the admissible workload to a fixed memory budget.
+    Returns (Classification, ServingPlan)."""
+    from repro.core import predictor as PR   # lazy, like profiler below
+    from repro.core import profiler as PF
+    if measurer is None:
+        measurer = MM.SimulatedMeasurer({"data": n_devices}, cache=cache)
+    if cls is None:
+        cls = PF.classify_workload(cfg, shape, None, n_points=n_points,
+                                   base_seq=base_seq, measurer=measurer)
+    budget = hw.hbm_bytes if hbm_budget is None else float(hbm_budget)
+    if space is None:
+        space = SP.serving_space(cfg, shape, max_devices=n_devices,
+                                 data=_axis_values(n_devices),
+                                 model=_axis_values(n_devices))
+    cands = space.candidates(cfg, shape)
+    if not cands:
+        raise ValueError(f"{space.name}: no valid serving candidates")
+    best, best_cap = None, -1
+    for cand in cands:                       # fastest-first => ties keep speed
+        cap = PR.serving_capacity(cfg, shape, cand.plan, cls,
+                                  cand.mesh_shape, mode=mode, hw=hw,
+                                  hbm_budget=budget, factors=factors)
+        if cap > best_cap:
+            best, best_cap = cand, cap
+    eplan = for_mesh(cfg, shape, best.plan, best.mesh_shape,
+                     policy="max_concurrency")
+    return cls, ServingPlan(execution=eplan, capacity=best_cap,
+                            hbm_budget=budget, considered=len(cands))
 
 
 def plan_execution(cfg: ModelConfig, shape: ShapeConfig,

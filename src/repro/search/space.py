@@ -409,6 +409,27 @@ def mesh_space(cfg: ModelConfig, shape: ShapeConfig, *,
         tuple(constraints))
 
 
+def serving_space(cfg: ModelConfig, shape: ShapeConfig, *,
+                  max_devices: int = 256,
+                  data: Sequence[int] = (1, 2, 4, 8, 16, 32),
+                  model: Sequence[int] = (1, 2, 4, 8, 16)) -> ConfigSpace:
+    """The serving-engine planning lattice: mesh axes searchable (pipe
+    pinned to 1 — the serving runtime is single-shot) and kv_shard a REAL
+    knob rather than auto-resolved, because the admission controller cares:
+    `heads` replicates the ring cache when kv heads don't divide the model
+    axis, while `seq` shards its length — different per-sequence bytes,
+    hence different admitted concurrency. `plan_serving` scores each
+    candidate by `predictor.serving_capacity` instead of step time."""
+    knobs = [Knob("remat", ("none",)), Knob("microbatches", (1,)),
+             Knob("optimizer", ("adamw_f32",)),
+             Knob("kv_shard", ("heads", "seq")),
+             Knob("data", tuple(data), group="mesh"),
+             Knob("model", tuple(model), group="mesh"),
+             Knob("pipe", (1,), group="mesh")]
+    return ConfigSpace(f"serving[{cfg.name}|{shape.name}]", knobs,
+                       (KV_HEADS_DIVISIBLE, mesh_budget(max_devices)))
+
+
 def hillclimb_space(
         mesh_shape: Optional[Mapping[str, int]] = None) -> ConfigSpace:
     """The perf-hillclimbing lattice: the WSMC plan knobs plus the

@@ -1,0 +1,20 @@
+"""Memory-governed serving: WSMC capacity prediction drives continuous
+batching over a slotted KV pool.
+
+`trace` and `engine` are jax-free (the scheduler is a deterministic state
+machine); the jax-backed executor lives in `repro.serving.executor` and is
+imported lazily so planning/metrics code never touches device state.
+"""
+from repro.serving.engine import (  # noqa: F401
+    Completion, Engine, POLICIES, ScriptedExecutor, ServeReport,
+)
+from repro.serving.trace import (  # noqa: F401
+    Request, describe_trace, synthetic_trace, trace_context,
+)
+
+
+def __getattr__(name):
+    if name == "JaxExecutor":
+        from repro.serving.executor import JaxExecutor
+        return JaxExecutor
+    raise AttributeError(name)

@@ -1,0 +1,239 @@
+"""The serving engine: WSMC-governed continuous batching over a slotted
+KV pool.
+
+The scheduler is deliberately jax-free: it speaks to the model through an
+executor protocol (``prefill(slot, prompt) -> first_token``,
+``decode(tokens, positions) -> next_tokens``) so the admission /
+claim-free / accounting core is a deterministic state machine the hermetic
+test tier can drive with a scripted executor, while the real
+`serving.executor.JaxExecutor` runs jitted prefill-into-slot and batched
+heterogeneous-position decode over the ring-cache pool.
+
+Memory governance (the paper's loop run backwards): the engine never holds
+more concurrent sequences than its slot count, and the slot count is
+derived from `predictor.serving_capacity` — the capacity model's
+prediction of how many sequences fit the per-device HBM budget
+(`search.execplan.plan_serving`). Oversubscribed requests wait in the
+queue; admission is the memory model acting as the runtime's admission
+controller rather than an offline advisor.
+
+Two admission policies share every other line of the loop:
+
+  continuous — claim any free slot the moment a queued request can take it
+               (per-slot backfill; this is continuous batching).
+  static     — the fixed-batch baseline: admit a full batch only when the
+               pool is completely idle, then run it to completion. Mixed
+               generation lengths leave stragglers pinning idle slots,
+               which is exactly the occupancy gap the benchmark reports.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Deque, List, Optional, Sequence, Tuple
+
+from repro.serving.trace import Request
+
+POLICIES = ("continuous", "static")
+
+
+@dataclasses.dataclass
+class _Active:
+    """One claimed slot: the request plus its decode cursor."""
+    req: Request
+    admitted: int                # engine tick of admission
+    pos: int                     # next decode position (== tokens emitted + prompt)
+    remaining: int               # decode steps still owed
+    tokens: List[int]            # generated so far (first from prefill)
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    rid: int
+    tokens: Tuple[int, ...] = ()
+    arrival: int = 0
+    admitted: int = 0
+    finished: int = 0
+
+    @property
+    def latency(self) -> int:
+        """Ticks from arrival to last token (queueing + decode)."""
+        return self.finished - self.arrival
+
+    @property
+    def queue_delay(self) -> int:
+        return self.admitted - self.arrival
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Deterministic step-counted serving metrics for one trace replay."""
+    policy: str
+    n_slots: int
+    completions: List[Completion]
+    ticks: int                   # total engine ticks elapsed
+    decode_ticks: int            # ticks that executed a batched decode step
+    useful_slot_tokens: int      # sum over decode ticks of active slots
+    idle_ticks: int              # ticks that neither admitted nor decoded
+    peak_queue: int
+    max_concurrent: int
+    prefills: int
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(len(c.tokens) for c in self.completions)
+
+    def occupancy(self) -> float:
+        """Useful-token fraction of decode-step slots: of all the slot
+        positions the batched decode steps computed, how many produced a
+        token a request actually wanted."""
+        denom = self.decode_ticks * self.n_slots
+        return self.useful_slot_tokens / denom if denom else 0.0
+
+    def throughput(self) -> float:
+        """Generated tokens per engine tick."""
+        return self.generated_tokens / self.ticks if self.ticks else 0.0
+
+    def mean_latency(self) -> float:
+        if not self.completions:
+            return 0.0
+        return sum(c.latency for c in self.completions) / len(self.completions)
+
+    def describe(self) -> str:
+        return (f"[{self.policy}] slots={self.n_slots} "
+                f"completed={len(self.completions)} "
+                f"tokens={self.generated_tokens} ticks={self.ticks} "
+                f"occupancy={self.occupancy():.3f} "
+                f"throughput={self.throughput():.2f} tok/tick "
+                f"mean_latency={self.mean_latency():.1f} ticks "
+                f"peak_queue={self.peak_queue} "
+                f"max_concurrent={self.max_concurrent}")
+
+
+class ScriptedExecutor:
+    """Deterministic jax-free executor: closed-form token functions stand in
+    for the model so the scheduler core (admission, claim/free, metrics)
+    can be pinned by the hermetic test tier and compared across policies
+    without a single compile."""
+
+    def __init__(self, vocab_size: int = 97):
+        self.vocab_size = vocab_size
+        self.prefills = 0
+        self.decodes = 0
+
+    def prefill(self, slot: int, prompt: Sequence[int]) -> int:
+        self.prefills += 1
+        return (sum(prompt) + 31 * len(prompt)) % self.vocab_size
+
+    def decode(self, tokens: Sequence[int], positions: Sequence[int]
+               ) -> List[int]:
+        self.decodes += 1
+        return [(17 * t + 7 * p + 13) % self.vocab_size
+                for t, p in zip(tokens, positions)]
+
+
+class Engine:
+    """Continuous-batching serving engine over a slotted KV pool.
+
+    `n_slots` is the admission bound — by construction the engine never
+    runs more concurrent sequences than slots, so sizing it from
+    `ServingPlan.slots()` makes `predictor.serving_capacity` the admission
+    controller. One `run()` call replays one trace to completion.
+    """
+
+    def __init__(self, executor, n_slots: int, policy: str = "continuous"):
+        if n_slots < 1:
+            raise ValueError(f"Engine needs n_slots >= 1, got {n_slots} "
+                             "(serving_capacity said nothing fits — lower "
+                             "the context or raise the budget)")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
+        self.executor = executor
+        self.n_slots = int(n_slots)
+        self.policy = policy
+
+    # -- scheduling core ---------------------------------------------------
+
+    def _admit(self, queue: Deque[Request], slots: List[Optional[_Active]],
+               tick: int) -> int:
+        """Claim free slots for queued requests under the active policy.
+        Returns the number of admissions (each one a prefill)."""
+        if self.policy == "static" and any(s is not None for s in slots):
+            return 0                      # fixed batch: wait for the pool
+        admitted = 0
+        for i in range(self.n_slots):
+            if not queue:
+                break
+            if slots[i] is not None:
+                continue
+            req = queue.popleft()
+            first = int(self.executor.prefill(i, req.prompt))
+            slots[i] = _Active(req=req, admitted=tick, pos=len(req.prompt),
+                               remaining=req.max_new - 1, tokens=[first])
+            admitted += 1
+        return admitted
+
+    def run(self, trace: Sequence[Request],
+            max_ticks: int = 1_000_000) -> ServeReport:
+        for r in trace:                      # fail fast, not at max_ticks
+            if r.max_new < 1 or not r.prompt:
+                raise ValueError(f"request {r.rid}: needs a non-empty "
+                                 f"prompt and max_new >= 1 (got "
+                                 f"prompt_len={len(r.prompt)}, "
+                                 f"max_new={r.max_new})")
+        pending: Deque[Request] = collections.deque(
+            sorted(trace, key=lambda r: (r.arrival, r.rid)))
+        queue: Deque[Request] = collections.deque()
+        slots: List[Optional[_Active]] = [None] * self.n_slots
+        completions: List[Completion] = []
+        tick = decode_ticks = useful = idle = 0
+        peak_queue = max_concurrent = prefills = 0
+
+        def finish(i: int, when: int) -> None:
+            a = slots[i]
+            completions.append(Completion(
+                rid=a.req.rid, tokens=tuple(a.tokens),
+                arrival=a.req.arrival, admitted=a.admitted, finished=when))
+            slots[i] = None
+
+        while pending or queue or any(s is not None for s in slots):
+            if tick >= max_ticks:
+                raise RuntimeError(f"engine exceeded max_ticks={max_ticks}")
+            while pending and pending[0].arrival <= tick:
+                queue.append(pending.popleft())
+            prefills += self._admit(queue, slots, tick)
+            peak_queue = max(peak_queue, len(queue))
+            concurrent = sum(s is not None for s in slots)
+            max_concurrent = max(max_concurrent, concurrent)
+            # single-token requests complete at admission (prefill emitted
+            # their only token)
+            for i in range(self.n_slots):
+                if slots[i] is not None and slots[i].remaining == 0:
+                    finish(i, tick)
+            active = [i for i in range(self.n_slots) if slots[i] is not None]
+            if active:
+                tokens = [slots[i].tokens[-1] if slots[i] is not None else 0
+                          for i in range(self.n_slots)]
+                positions = [slots[i].pos if slots[i] is not None else 0
+                             for i in range(self.n_slots)]
+                nxt = self.executor.decode(tokens, positions)
+                decode_ticks += 1
+                useful += len(active)
+                for i in active:
+                    a = slots[i]
+                    a.tokens.append(int(nxt[i]))
+                    a.pos += 1
+                    a.remaining -= 1
+                    if a.remaining == 0:
+                        finish(i, tick)
+            elif concurrent == 0:
+                idle += 1        # nothing admitted or decoding this tick
+            tick += 1
+
+        completions.sort(key=lambda c: c.rid)
+        return ServeReport(policy=self.policy, n_slots=self.n_slots,
+                           completions=completions, ticks=tick,
+                           decode_ticks=decode_ticks,
+                           useful_slot_tokens=useful, idle_ticks=idle,
+                           peak_queue=peak_queue,
+                           max_concurrent=max_concurrent, prefills=prefills)

@@ -1,0 +1,69 @@
+"""Deterministic synthetic serving traces.
+
+A trace is a list of `Request`s ordered by arrival tick. Everything is
+drawn from a seeded `random.Random`, so the same (seed, knobs) always
+replays the same workload — the engine tests and the CI smoke job pin
+their metrics against that determinism. Prompt/generation lengths are
+drawn from small caller-chosen bucket sets (mixed-length traffic with a
+bounded number of prefill compile shapes); arrivals are exponential
+inter-arrival gaps rounded to whole engine ticks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import List, Sequence, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One serving request: `prompt` token ids arriving at engine tick
+    `arrival`, asking for `max_new` greedily decoded tokens."""
+    rid: int
+    arrival: int
+    prompt: Tuple[int, ...]
+    max_new: int
+
+    @property
+    def context(self) -> int:
+        """Ring-cache extent this request needs: prompt + generation."""
+        return len(self.prompt) + self.max_new
+
+
+def synthetic_trace(n_requests: int, *, vocab_size: int, seed: int = 0,
+                    prompt_lens: Sequence[int] = (4, 8, 16),
+                    gen_lens: Sequence[int] = (2, 4, 8),
+                    mean_interarrival: float = 1.0) -> List[Request]:
+    """The deterministic mixed-length trace the serve driver replays.
+
+    Token ids stay in [2, vocab_size) (0/1 reserved, matching the other
+    drivers' prompt generation). `mean_interarrival` <= 0 makes every
+    request arrive at tick 0 (a closed-loop burst)."""
+    if n_requests < 1:
+        raise ValueError("synthetic_trace needs n_requests >= 1")
+    if min(prompt_lens) < 1 or min(gen_lens) < 1:
+        raise ValueError("prompt/gen length buckets must be >= 1")
+    rng = random.Random(seed)
+    t = 0
+    out = []
+    for rid in range(n_requests):
+        p = rng.choice(tuple(prompt_lens))
+        g = rng.choice(tuple(gen_lens))
+        prompt = tuple(rng.randrange(2, vocab_size) for _ in range(p))
+        out.append(Request(rid=rid, arrival=t, prompt=prompt, max_new=g))
+        if mean_interarrival > 0:
+            t += int(rng.expovariate(1.0 / mean_interarrival))
+    return out
+
+
+def trace_context(trace: Sequence[Request]) -> int:
+    """The pool-wide ring extent: the largest prompt+gen in the trace."""
+    return max(r.context for r in trace)
+
+
+def describe_trace(trace: Sequence[Request]) -> str:
+    p = sorted({len(r.prompt) for r in trace})
+    g = sorted({r.max_new for r in trace})
+    span = trace[-1].arrival - trace[0].arrival if trace else 0
+    return (f"{len(trace)} requests over {span + 1} ticks, "
+            f"prompt_lens={p} gen_lens={g} context={trace_context(trace)}")
