@@ -16,6 +16,7 @@ MESH_BENCHES = [
     "benchmarks.fig3_mem_across_workloads",
     "benchmarks.table4_planned_configs",
     "benchmarks.fig7_fig8_policies",
+    "benchmarks.serve_throughput",
 ]
 LOCAL_BENCHES = [
     "benchmarks.kernels_micro",

@@ -38,6 +38,10 @@ class MemoryPlan:
     microbatches: int = 1
     optimizer: str = "adamw_f32"     # adamw_f32 | adamw_bf16 | adafactor
     kv_shard: str = "heads"          # heads | seq
+    # Paged-KV serving: positions per KV block (0 = whole-sequence ring
+    # slots). Only full-context attention layers page; the block size is the
+    # allocation granule the serving engine's BlockAllocator hands out.
+    kv_block_size: int = 0
 
     @property
     def opt_state_bytes(self) -> float:
@@ -79,39 +83,93 @@ def mesh_factors(mesh_shape: dict) -> Tuple[int, int, int]:
     return data * model * pipe, pod * data, model
 
 
+def _attn_ring_bytes(cfg: ModelConfig, plan: MemoryPlan, L: int,
+                     model: int) -> float:
+    """One sequence's ring-cache bytes for an attention layer of ring
+    length L, per device under the plan's kv sharding."""
+    hd = cfg.resolved_head_dim
+    if plan.kv_shard == "seq":
+        L = -(-L // model)
+        kvh = cfg.n_kv_heads
+    else:
+        kvh = -(-cfg.n_kv_heads // model)      # padded uneven sharding
+    return 2 * L * kvh * hd * BYTES_ACT + L * 4           # K/V + pos buffer
+
+
+def _seq_cache_terms(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan,
+                     mesh_shape: dict) -> Tuple[float, float]:
+    """(paged_bytes, lane_bytes) for ONE decoding sequence, per device.
+
+    `paged_bytes` is the full-context attention state the paged KV pool can
+    allocate block-by-block (layers whose ring spans the whole context);
+    `lane_bytes` is everything a sequence pins for its whole lifetime
+    regardless of progress: recurrent states and short windowed/chunked
+    rings (cheap, fixed-size — paging them would buy nothing).
+    """
+    _, _, model = mesh_factors(mesh_shape)
+    paged = lane = 0.0
+    for blk in cfg.blocks():
+        if blk.is_attn:
+            L = blk.cache_len(shape.context)
+            bytes_ = _attn_ring_bytes(cfg, plan, L, model)
+            if L == shape.context:
+                paged += bytes_
+            else:
+                lane += bytes_
+        elif blk.mixer == "mlstm":
+            inner = int(cfg.mlstm_proj_factor * cfg.d_model)
+            dh = inner // cfg.n_heads
+            lane += cfg.n_heads * (dh * dh + dh + 1) * 4
+            lane += (cfg.mlstm_conv_width - 1) * inner * BYTES_ACT
+        elif blk.mixer == "slstm":
+            lane += 4 * cfg.d_model * 4
+        elif blk.mixer == "rglru":
+            w = cfg.lru_width or cfg.d_model
+            lane += w * 4
+            lane += (cfg.conv_width - 1) * w * BYTES_ACT
+    # pipeline stages each hold the caches of their own 1/pipe of the layers
+    pipe = max(int(mesh_shape.get("pipe", 1)), 1)
+    return paged / pipe, lane / pipe
+
+
 def cache_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig,
                            plan: MemoryPlan, mesh_shape: dict) -> float:
     """Decode-resident state: ring KV caches + recurrent states (Eq. 7's
     'data kept in Storage Memory' for the serving stages)."""
     if shape.kind != DECODE:
         return 0.0
-    _, dp, model = mesh_factors(mesh_shape)
+    _, dp, _ = mesh_factors(mesh_shape)
     batch_per = max(shape.global_batch // dp, 1)
-    hd = cfg.resolved_head_dim
+    paged, lane = _seq_cache_terms(cfg, shape, plan, mesh_shape)
+    return batch_per * (paged + lane)
+
+
+def kv_block_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig,
+                              plan: MemoryPlan, mesh_shape: dict) -> float:
+    """Bytes of ONE paged KV block per device: `kv_block_size` positions of
+    K/V (+ the pos stripe) across every full-context attention layer, under
+    the plan's kv sharding. The block-size term of the paper's requirement
+    model made first-class: a sequence's paged footprint is
+    ceil(written_positions / kv_block_size) of these, instead of a
+    whole-context ring."""
+    if plan.kv_block_size < 1:
+        raise ValueError("kv_block_bytes_per_device needs "
+                         f"plan.kv_block_size >= 1, got {plan.kv_block_size}")
+    _, _, model = mesh_factors(mesh_shape)
+    pipe = max(int(mesh_shape.get("pipe", 1)), 1)
     total = 0.0
     for blk in cfg.blocks():
-        if blk.is_attn:
-            L = blk.cache_len(shape.context)
-            if plan.kv_shard == "seq":
-                L = -(-L // model)
-                kvh = cfg.n_kv_heads
-            else:
-                kvh = -(-cfg.n_kv_heads // model)  # padded uneven sharding
-            total += 2 * batch_per * L * kvh * hd * BYTES_ACT
-            total += batch_per * L * 4                      # pos buffer
-        elif blk.mixer == "mlstm":
-            inner = int(cfg.mlstm_proj_factor * cfg.d_model)
-            dh = inner // cfg.n_heads
-            total += batch_per * cfg.n_heads * (dh * dh + dh + 1) * 4
-            total += batch_per * (cfg.mlstm_conv_width - 1) * inner * BYTES_ACT
-        elif blk.mixer == "slstm":
-            total += 4 * batch_per * cfg.d_model * 4
-        elif blk.mixer == "rglru":
-            w = cfg.lru_width or cfg.d_model
-            total += batch_per * w * 4
-            total += batch_per * (cfg.conv_width - 1) * w * BYTES_ACT
-    # pipeline stages each hold the caches of their own 1/pipe of the layers
-    return total / max(int(mesh_shape.get("pipe", 1)), 1)
+        if blk.is_attn and blk.cache_len(shape.context) == shape.context:
+            total += _attn_ring_bytes(cfg, plan, plan.kv_block_size, model)
+    return total / pipe
+
+
+def lane_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig,
+                          plan: MemoryPlan, mesh_shape: dict) -> float:
+    """Per-active-sequence fixed bytes under paged KV: the non-paged cache
+    state one decode lane pins (recurrent states, short windowed rings)."""
+    _, lane = _seq_cache_terms(cfg, shape, plan, mesh_shape)
+    return lane
 
 
 def sharded_param_count(cfg: ModelConfig, mesh_shape: dict) -> float:
@@ -245,6 +303,76 @@ def serving_capacity(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan,
         pred = predict(cfg, sh, plan, cls, mesh_shape, mode, hw, factors)
         return pred.capacity_bytes <= budget
 
+    if not fits(1):
+        return 0
+    lo, hi = 1, 2
+    while hi < max_per_device and fits(hi):
+        lo, hi = hi, hi * 2
+    if hi >= max_per_device:
+        if fits(max_per_device):             # saturated: report the cap
+            return max_per_device * dp
+        hi = max_per_device
+    while hi - lo > 1:                       # invariant: fits(lo), not fits(hi)
+        mid = (lo + hi) // 2
+        lo, hi = (mid, hi) if fits(mid) else (lo, mid)
+    return lo * dp
+
+
+def serving_block_capacity(cfg: ModelConfig, shape: ShapeConfig,
+                           plan: MemoryPlan, cls: Classification,
+                           mesh_shape: dict, *, lanes: int = 1,
+                           mode: str = "paper",
+                           hw: HW.HardwareSpec = HW.TPU_V5E,
+                           hbm_budget: Optional[float] = None,
+                           factors: Optional[dict] = None,
+                           avg_context: Optional[int] = None,
+                           max_per_device: int = 1 << 22) -> int:
+    """Eq. 11 run backwards over KV BLOCKS instead of whole-sequence slots.
+
+    `serving_capacity` answers "how many worst-case sequences fit?" — every
+    admitted sequence is charged a full-context ring. Under paged KV the
+    question splits: `lanes` decode lanes pin their fixed per-sequence state
+    (recurrent caches, short windowed rings, token buffers, decode
+    transients at batch = lanes), and the remaining budget holds KV blocks
+    of `plan.kv_block_size` positions each. Because the block term is
+    monotone, the inverse is an exact doubling + bisection search over
+    whole per-device blocks. Returns the GLOBAL block count (per-device
+    blocks x dp); 0 if the lanes alone do not fit.
+
+    `avg_context` is the expected attended context per lane (the trace's
+    mean written length): paged decode reads the cache THROUGH block
+    tables, so a lane's transient working set is the blocks it actually
+    allocated, not the pool-wide max context the ring engine's padded
+    decode streams. Defaults to worst-case `shape.context`.
+    """
+    if plan.kv_block_size < 1:
+        raise ValueError("serving_block_capacity needs a paged plan "
+                         f"(kv_block_size >= 1, got {plan.kv_block_size})")
+    if lanes < 1:
+        raise ValueError(f"serving_block_capacity needs lanes >= 1 "
+                         f"(got {lanes})")
+    budget = hw.hbm_bytes if hbm_budget is None else float(hbm_budget)
+    _, dp, _ = mesh_factors(mesh_shape)
+    sh = dataclasses.replace(shape, kind=DECODE, global_batch=lanes * dp)
+    # resident minus the ring-cache term the block pool replaces
+    base = (resident_bytes(cfg, sh, plan, mesh_shape)
+            - cache_bytes_per_device(cfg, sh, plan, mesh_shape))
+    base += lanes * lane_bytes_per_device(cfg, sh, plan, mesh_shape)
+    sh_t = sh
+    if avg_context is not None:
+        # block-align the expected reach; never beyond the worst case
+        b = plan.kv_block_size
+        reach = min(-(-max(int(avg_context), 1) // b) * b, shape.context)
+        sh_t = dataclasses.replace(sh, seq_len=reach)
+    tra = transient_bytes(cfg, sh_t, plan, cls, mesh_shape, mode, factors)
+    per_block = kv_block_bytes_per_device(cfg, sh, plan, mesh_shape)
+
+    def fits(nb: int) -> bool:
+        cap = HW.capacity_from_requirement(base + nb * per_block, tra, hw)
+        return cap <= budget
+
+    if per_block <= 0.0:                     # no full-context attn layers
+        return (max_per_device * dp) if fits(0) else 0
     if not fits(1):
         return 0
     lo, hi = 1, 2

@@ -23,6 +23,7 @@ try:
     from jax.experimental.pallas import tpu as pltpu
     _SCRATCH = lambda shape: pltpu.VMEM(shape, jnp.float32)
 except Exception:  # pragma: no cover
+    pltpu = None
     _SCRATCH = lambda shape: pl.MemorySpace.ANY(shape, jnp.float32)
 
 NEG_INF = -1e30
@@ -99,3 +100,103 @@ def decode_attention_fwd(q, k_cache, v_cache, cache_pos, positions, *,
         ],
         interpret=interpret,
     )(positions.reshape(b, 1), cache_pos, q, k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# Paged decode: read the KV pool through per-sequence block tables
+# ---------------------------------------------------------------------------
+#
+# The pool stores KV in fixed-size position blocks shared across sequences
+# ([n_blocks, block, K, hd]); each sequence maps logical block j to a
+# physical block via its table row. The tables ride in as SCALAR PREFETCH
+# (pltpu.PrefetchScalarGridSpec) so the index_map itself can chase the
+# indirection — grid cell (b, j) DMAs exactly the physical block sequence b
+# needs, which is what makes decode traffic proportional to the blocks a
+# sequence actually wrote instead of the pool-wide max context. Unassigned
+# table entries (-1) clamp to physical block 0 (the serving engine's
+# scratch block) and are masked out in-kernel.
+
+def _paged_kernel(tbl_ref, pos_ref, cpos_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *,
+                  scale: float, window: Optional[int], chunk: Optional[int],
+                  nl: int):
+    bi = pl.program_id(0)
+    li = pl.program_id(1)
+
+    @pl.when(li == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale         # [K, G, hd]
+    k = k_ref[0].astype(jnp.float32)                 # [bs, K, hd]
+    v = v_ref[0].astype(jnp.float32)
+    pos = pos_ref[0, 0]                              # scalar
+    cpos = cpos_ref[0, :]                            # [bs]
+    s = jnp.einsum("kgh,lkh->kgl", q, k)             # [K, G, bs]
+    mask = (cpos <= pos) & (cpos >= 0) & (tbl_ref[bi, li] >= 0)
+    if window is not None:
+        mask &= cpos > pos - window
+    if chunk is not None:
+        mask &= (cpos // chunk) == (pos // chunk)
+    s = jnp.where(mask[None, None, :], s, NEG_INF)
+    m_prev = m_ref[...]                              # [K, G]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.where(mask[None, None, :], jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+        "kgl,lkh->kgh", p, v)
+    m_ref[...] = m_new
+
+    @pl.when(li == nl - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[..., None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_fwd(q, k_pool, v_pool, pool_pos, block_tables,
+                               positions, *,
+                               window: Optional[int] = None,
+                               chunk: Optional[int] = None,
+                               interpret: bool = False):
+    """q [b,K,G,hd]; pools [n_blocks,block,K,hd]; pool_pos [n_blocks,block];
+    block_tables [b,max_blocks] int32 (-1 = unassigned); positions [b]."""
+    if pltpu is None:  # pragma: no cover
+        raise NotImplementedError("paged decode needs pallas TPU grid specs")
+    b, K, G, hd = q.shape
+    m_blocks = block_tables.shape[1]
+    bs = pool_pos.shape[1]
+    scale = 1.0 / np.sqrt(hd)
+    kernel = functools.partial(_paged_kernel, scale=scale, window=window,
+                               chunk=chunk, nl=m_blocks)
+
+    def physical(bi, li, tbl):
+        return jnp.maximum(tbl[bi, li], 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, m_blocks),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda bi, li, tbl: (bi, 0)),
+            pl.BlockSpec((1, bs), lambda bi, li, tbl: (physical(bi, li, tbl), 0)),
+            pl.BlockSpec((1, K, G, hd), lambda bi, li, tbl: (bi, 0, 0, 0)),
+            pl.BlockSpec((1, bs, K, hd),
+                         lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0, 0)),
+            pl.BlockSpec((1, bs, K, hd),
+                         lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, K, G, hd), lambda bi, li, tbl: (bi, 0, 0, 0)),
+        scratch_shapes=[
+            _SCRATCH((K, G)),
+            _SCRATCH((K, G)),
+            _SCRATCH((K, G, hd)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, K, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, positions.reshape(b, 1), pool_pos, q, k_pool, v_pool)

@@ -26,7 +26,8 @@ import functools
 from repro.kernels import ref as kref
 from repro.kernels.flash_attention import flash_attention_fwd
 from repro.kernels.flash_attention_bwd import flash_attention_bwd
-from repro.kernels.decode_attention import decode_attention_fwd
+from repro.kernels.decode_attention import (decode_attention_fwd,
+                                            paged_decode_attention_fwd)
 from repro.kernels.mlstm_scan import mlstm_scan_fwd
 
 NEG_INF = -1e30
@@ -133,6 +134,23 @@ def decode_attention(q, k_cache, v_cache, cache_pos, positions, *,
             interpret=(backend == "interpret"))
     return kref.decode_attention_ref(q, k_cache, v_cache, cache_pos,
                                      positions, window=window, chunk=chunk)
+
+
+def paged_decode_attention(q, k_pool, v_pool, pool_pos, block_tables,
+                           positions, *, window: Optional[int] = None,
+                           chunk: Optional[int] = None,
+                           backend: Optional[str] = None):
+    """Decode through a paged KV pool: q [b,K,G,hd]; pools
+    [n_blocks,block,K,hd]; pool_pos [n_blocks,block]; block_tables
+    [b,max_blocks] (-1 = unassigned) -> [b,K,G,hd]. Compiled Pallas on
+    TPU; interpret-mode kernel everywhere else (the CPU test tiers drive
+    the same block-table indirection the TPU kernel runs)."""
+    backend = backend or default_backend()
+    if backend not in ("pallas", "interpret"):
+        backend = "interpret"       # no jnp twin: the kernel IS the gather
+    return paged_decode_attention_fwd(
+        q, k_pool, v_pool, pool_pos, block_tables, positions,
+        window=window, chunk=chunk, interpret=(backend == "interpret"))
 
 
 # ---------------------------------------------------------------------------

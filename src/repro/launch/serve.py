@@ -31,8 +31,9 @@ from repro.models import init_params
 from repro.parallel.axes import axis_rules
 from repro.search import execplan as XP
 from repro.search import space as SP
-from repro.serving import Engine, describe_trace, synthetic_trace, trace_context
-from repro.serving.executor import JaxExecutor
+from repro.serving import (BlockAllocator, Engine, describe_trace,
+                           synthetic_trace, trace_context)
+from repro.serving.executor import JaxExecutor, PagedJaxExecutor
 
 
 def _int_list(s: str):
@@ -65,9 +66,19 @@ def main(argv=None):
     ap.add_argument("--hbm-budget-gb", type=float, default=0.0,
                     help="per-device HBM budget for admission; 0 = the "
                          "target hardware's full HBM")
+    ap.add_argument("--kv", default="ring", choices=["ring", "paged"],
+                    help="KV pool layout: 'ring' = worst-case whole-"
+                         "sequence slots (baseline); 'paged' = block pool "
+                         "with per-sequence block tables — admission "
+                         "charges actual footprint, so short requests "
+                         "stop paying max-context bytes")
+    ap.add_argument("--kv-block", type=int, default=0,
+                    help="paged KV block size in positions; 0 = search "
+                         "the serving lattice for it")
     ap.add_argument("--max-slots", type=int, default=8,
-                    help="cap on the engine's slot pool (the WSMC capacity "
-                         "is the bound; this caps it for small hosts)")
+                    help="cap on the engine's slot pool / decode lanes "
+                         "(the WSMC capacity is the bound; this caps it "
+                         "for small hosts)")
     ap.add_argument("--policy", default="continuous",
                     choices=["continuous", "static", "both"])
     ap.add_argument("--forbid-plan-compiles", action="store_true",
@@ -103,6 +114,16 @@ def main(argv=None):
                 "throwaway XLA compile during serve planning "
                 "(--forbid-plan-compiles)")
         guard, LC.build = (LC, LC.build), _forbidden
+    kv_blocks = ((args.kv_block,) if args.kv_block
+                 else tuple(b for b in XP.DEFAULT_KV_BLOCKS if b <= context)
+                 or (context,))
+    paged_kw = {}
+    if args.kv == "paged":
+        # the planner maximizes EXPECTED admitted concurrency under the
+        # trace's own length distribution (written positions per request)
+        paged_kw = dict(kv="paged", kv_blocks=kv_blocks,
+                        seq_lens=[len(r.prompt) + r.max_new - 1
+                                  for r in trace])
     try:
         if args.mesh == "auto":
             measurer = None
@@ -112,7 +133,7 @@ def main(argv=None):
                     build_mesh({"data": len(devices)}, devices))
             cls, splan = XP.plan_serving(cfg, shape, n_devices=len(devices),
                                          hbm_budget=budget,
-                                         measurer=measurer)
+                                         measurer=measurer, **paged_kw)
         else:
             host = XP.host_execution(cfg, shape, MemoryPlan(),
                                      len(devices), args.model_parallel)
@@ -123,10 +144,12 @@ def main(argv=None):
             pinned = SP.serving_space(
                 cfg, shape, max_devices=len(devices),
                 data=(host.mesh_shape.get("data", 1),),
-                model=(host.mesh_shape.get("model", 1),))
+                model=(host.mesh_shape.get("model", 1),),
+                kv_blocks=kv_blocks if args.kv == "paged" else (0,))
             cls, splan = XP.plan_serving(cfg, shape, n_devices=len(devices),
                                          hbm_budget=budget,
-                                         measurer=measurer, space=pinned)
+                                         measurer=measurer, space=pinned,
+                                         **paged_kw)
     finally:
         if guard is not None:
             guard[0].build = guard[1]
@@ -138,6 +161,7 @@ def main(argv=None):
     if n_slots < 1:
         print("no serving capacity under the budget; nothing admitted")
         return 1
+    n_blocks = splan.pool_blocks(n_slots, context)
     mesh, strategy = splan.execution.build(devices)
 
     # -- serve --------------------------------------------------------------
@@ -147,9 +171,17 @@ def main(argv=None):
     reports = []
     with mesh, axis_rules(strategy.rules(), mesh=mesh):
         for policy in policies:
-            executor = JaxExecutor(params, cfg, n_slots=n_slots,
-                                   context=context)
-            engine = Engine(executor, n_slots, policy=policy)
+            if args.kv == "paged":
+                executor = PagedJaxExecutor(
+                    params, cfg, n_lanes=n_slots, n_blocks=n_blocks,
+                    kv_block=splan.kv_block, context=context)
+                allocator = BlockAllocator(n_blocks, splan.kv_block)
+            else:
+                executor = JaxExecutor(params, cfg, n_slots=n_slots,
+                                       context=context)
+                allocator = None
+            engine = Engine(executor, n_slots, policy=policy,
+                            allocator=allocator)
             t0 = time.time()
             report = engine.run(trace)
             dt = time.time() - t0

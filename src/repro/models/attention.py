@@ -287,13 +287,82 @@ def _decode_attend(q, cache, blk: BlockSpec, positions):
 
 
 # ---------------------------------------------------------------------------
+# Paged KV pool (serving decode)
+# ---------------------------------------------------------------------------
+#
+# A paged layer cache is {"kb": [n_blocks, block, K, hd], "vb": ...,
+# "pos": [n_blocks, block]} — storage is a POOL of fixed-size position
+# blocks shared by every sequence, and each sequence's logical layout is a
+# block table [max_blocks] mapping logical block j (positions j*block ..
+# (j+1)*block - 1) to a physical block id (-1 = not yet allocated).
+# Physical block 0 is the SCRATCH block: inactive decode lanes (table all
+# -1) read and write it harmlessly, so one batched decode serves any pool
+# occupancy with a single compile. Only full-context layers page; short
+# windowed/chunked rings stay per-lane (see runtime.serve_step).
+
+def is_paged_cache(cache) -> bool:
+    return isinstance(cache, dict) and "kb" in cache
+
+
+def _paged_write(cache, block_tables, k1, v1, pos1):
+    """Write one token per lane (k1/v1 [b,K,hd], pos1 [b]) into the pool at
+    (table[pos // block], pos % block). Lanes with no block mapped (table
+    entry -1) land in the scratch block."""
+    n_blocks, bsz = cache["pos"].shape
+    m_blocks = block_tables.shape[1]
+    lb = jnp.minimum(pos1 // bsz, m_blocks - 1)
+    off = pos1 % bsz
+    phys = jnp.take_along_axis(block_tables, lb[:, None], axis=1)[:, 0]
+    phys = jnp.where(phys >= 0, phys, 0)                 # scratch fallback
+    return {
+        "kb": cache["kb"].at[phys, off].set(k1.astype(cache["kb"].dtype)),
+        "vb": cache["vb"].at[phys, off].set(v1.astype(cache["vb"].dtype)),
+        "pos": cache["pos"].at[phys, off].set(pos1),
+    }
+
+
+def _paged_gather(cache, block_tables):
+    """Gather each lane's blocks into a contiguous virtual ring
+    ([b, max_blocks*block, ...]): unassigned table entries read the scratch
+    block with their positions masked to -1, so downstream masking treats
+    them as empty slots."""
+    b, m_blocks = block_tables.shape
+    bsz = cache["pos"].shape[1]
+    safe = jnp.where(block_tables >= 0, block_tables, 0)
+    pos = jnp.where(block_tables[..., None] >= 0, cache["pos"][safe], -1)
+    return {
+        "k": cache["kb"][safe].reshape(b, m_blocks * bsz, *cache["kb"].shape[2:]),
+        "v": cache["vb"][safe].reshape(b, m_blocks * bsz, *cache["vb"].shape[2:]),
+        "pos": pos.reshape(b, m_blocks * bsz),
+    }
+
+
+def _paged_decode(q, cache, blk: BlockSpec, pos1, k1, v1, block_tables,
+                  settings: AttnSettings):
+    """One decode step against the paged pool: scatter the new K/V entry,
+    then attend through the block table — via the Pallas paged kernel
+    (interpret-mode off-TPU) or the jnp gather fallback."""
+    new_cache = _paged_write(cache, block_tables, k1, v1, pos1)
+    if settings.backend == "pallas":
+        from repro.kernels import ops as kops
+        o = kops.paged_decode_attention(
+            q[:, 0], new_cache["kb"], new_cache["vb"], new_cache["pos"],
+            block_tables, pos1, window=blk.window, chunk=blk.chunk)
+        return o[:, None], new_cache
+    virt = _paged_gather(new_cache, block_tables)
+    return _decode_attend(q, virt, blk, pos1), new_cache
+
+
+# ---------------------------------------------------------------------------
 # Block entry point
 # ---------------------------------------------------------------------------
 
 def attn_apply(params, cfg: ModelConfig, blk: BlockSpec, x, positions,
                cache=None, decode: bool = False, context: int = 0,
-               settings: AttnSettings = AttnSettings()):
-    """x [b, s, d]; positions [b, s] (s=1 for decode).
+               settings: AttnSettings = AttnSettings(), block_tables=None):
+    """x [b, s, d]; positions [b, s] (s=1 for decode). `block_tables`
+    [b, max_blocks] routes decode through a paged pool cache (see the
+    paged-KV section above) when the layer's cache is paged.
 
     Returns (y [b, s, d], new_cache or None).
     """
@@ -330,16 +399,22 @@ def attn_apply(params, cfg: ModelConfig, blk: BlockSpec, x, positions,
 
     if decode:
         assert cache is not None and s == 1
-        L = cache["pos"].shape[1]
         pos1 = positions.reshape(b)              # accept [b] or [b, 1]
-        slot = pos1 % L
-        bidx = jnp.arange(b)
-        new_cache = {
-            "k": cache["k"].at[bidx, slot].set(k[:, 0]),
-            "v": cache["v"].at[bidx, slot].set(v[:, 0]),
-            "pos": cache["pos"].at[bidx, slot].set(pos1),
-        }
-        o = _decode_attend(q, new_cache, blk, pos1)
+        if is_paged_cache(cache):
+            assert block_tables is not None, \
+                "paged cache needs block_tables at decode"
+            o, new_cache = _paged_decode(q, cache, blk, pos1, k[:, 0],
+                                         v[:, 0], block_tables, settings)
+        else:
+            L = cache["pos"].shape[1]
+            slot = pos1 % L
+            bidx = jnp.arange(b)
+            new_cache = {
+                "k": cache["k"].at[bidx, slot].set(k[:, 0]),
+                "v": cache["v"].at[bidx, slot].set(v[:, 0]),
+                "pos": cache["pos"].at[bidx, slot].set(pos1),
+            }
+            o = _decode_attend(q, new_cache, blk, pos1)
     else:
         kpos = positions
         if use_repeat:

@@ -110,7 +110,8 @@ def block_cache_init(cfg: ModelConfig, blk: BlockSpec, batch: int,
 
 def block_apply(params, cfg: ModelConfig, blk: BlockSpec, x, positions,
                 cache=None, decode: bool = False, context: int = 0,
-                settings: ModelSettings = ModelSettings()):
+                settings: ModelSettings = ModelSettings(),
+                block_tables=None):
     """Returns (x', new_cache, aux)."""
     aux = _zero_aux()
     building = settings.build_cache and not decode and cache is None
@@ -119,7 +120,8 @@ def block_apply(params, cfg: ModelConfig, blk: BlockSpec, x, positions,
                                                      else None)
         delta, new_cache = attention.attn_apply(
             params["mixer"], cfg, blk, x, positions, cache=cache_arg,
-            decode=decode, context=context, settings=settings.attn)
+            decode=decode, context=context, settings=settings.attn,
+            block_tables=block_tables)
     else:
         if building:  # prefill: recurrent blocks start from zero state
             cache = block_cache_init(cfg, blk, x.shape[0], context)
@@ -264,11 +266,14 @@ def tail_head_forward(params, cfg: ModelConfig, x, pos, *,
 def apply(params, cfg: ModelConfig, tokens, *, positions=None,
           prefix_embeds=None, cache=None, decode: bool = False,
           settings: ModelSettings = ModelSettings(), context: int = 0,
-          unit_wrapper: Callable = lambda f: f, logits_last_only: bool = False):
+          unit_wrapper: Callable = lambda f: f, logits_last_only: bool = False,
+          block_tables=None):
     """Forward pass.
 
     tokens [b, s] (s=1 for decode); positions [b] for decode else implied
-    arange; prefix_embeds [b, p, d] for modality-stub archs.
+    arange; prefix_embeds [b, p, d] for modality-stub archs; block_tables
+    [b, max_blocks] maps each sequence's logical KV blocks to physical
+    blocks of a paged pool cache (serving decode; -1 = unassigned).
     Returns (logits, new_cache_or_None, aux).
     """
     b = tokens.shape[0]
@@ -295,7 +300,8 @@ def apply(params, cfg: ModelConfig, tokens, *, positions=None,
             c = unit_caches[i] if unit_caches is not None else None
             x, nc, aux = block_apply(unit_params[i], cfg, blk, x, pos,
                                      cache=c, decode=decode, context=ctx,
-                                     settings=settings)
+                                     settings=settings,
+                                     block_tables=block_tables)
             new_caches.append(nc)
             aux_sum = {k: aux_sum[k] + aux[k] for k in aux_sum}
         return x, new_caches, aux_sum
@@ -355,7 +361,8 @@ def apply(params, cfg: ModelConfig, tokens, *, positions=None,
         c = cache["tail"][i] if have_cache else None
         x, nc, aux = block_apply(params["tail"][i], cfg, blk, x, pos,
                                  cache=c, decode=decode, context=ctx,
-                                 settings=settings)
+                                 settings=settings,
+                                 block_tables=block_tables)
         new_tail_caches.append(nc)
         aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}
 

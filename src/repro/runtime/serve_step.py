@@ -57,6 +57,26 @@ def init_slot_pool(cfg: ModelConfig, n_slots: int, context: int):
     return M.init_cache(cfg, n_slots, context)
 
 
+def write_cache_slots(cfg: ModelConfig, pool, one, slots):
+    """Batched write_cache_slot: scatter a width-W prefill cache (batch=W)
+    into pool slots `slots` [W] in one step. Padding rows carry slot index
+    >= pool width and are DROPPED by the scatter (mode='drop'), which is
+    what lets the engine-level batched prefill pad every admission group to
+    the pool width and keep ONE compile per prompt bucket."""
+    def upd(axis):
+        def f(P, o):
+            idx = (slice(None),) * axis + (slots,)
+            return P.at[idx].set(o.astype(P.dtype), mode="drop")
+        return f
+
+    return {
+        "units": [jax.tree.map(upd(1), pool["units"][i], one["units"][i])
+                  for i in range(len(cfg.unit))],
+        "tail": [jax.tree.map(upd(0), pool["tail"][i], one["tail"][i])
+                 for i in range(len(cfg.tail))],
+    }
+
+
 def write_cache_slot(cfg: ModelConfig, pool, one, slot):
     """Overwrite slot `slot` of a pool cache with a single-sequence cache
     (batch=1). Unit caches are stacked over repeats (batch is axis 1); tail
@@ -93,6 +113,196 @@ def make_slot_prefill_step(cfg: ModelConfig,
     return prefill_into_slot
 
 
+def make_batch_prefill_step(cfg: ModelConfig,
+                            settings: Optional[M.ModelSettings] = None):
+    """Engine-level batched prefill: prefill tokens [W, p] (W = pool width,
+    padding rows filled with dummy prompts) and scatter each row into pool
+    slot `slots[w]` (index >= W drops the row). One compile per prompt
+    bucket p, shared by every admission tick that hits the bucket."""
+    settings = settings or M.ModelSettings()
+    psettings = dataclasses.replace(settings, build_cache=True)
+
+    def prefill_into_slots(params, tokens, slots, pool, context: int):
+        logits, one, _ = M.apply(params, cfg, tokens, settings=psettings,
+                                 context=context, logits_last_only=True)
+        return logits[:, -1], write_cache_slots(cfg, pool, one, slots)
+
+    return prefill_into_slots
+
+
+# ---------------------------------------------------------------------------
+# Paged KV pool: fixed-size position blocks + per-sequence block tables
+# ---------------------------------------------------------------------------
+#
+# Full-context attention layers store KV in a POOL of `block`-position
+# blocks ({"kb": [n_blocks, block, K, hd], "vb": ..., "pos": [n_blocks,
+# block]}; models.attention.is_paged_cache) indexed through per-sequence
+# block tables, so a short request holds ceil(written / block) blocks
+# instead of a whole max-context ring. Everything else — recurrent states,
+# short windowed/chunked rings — stays a per-lane slot exactly like the
+# ring pool. Physical block 0 is the scratch block (inactive decode lanes
+# and padded prefill rows read/write it harmlessly); the serving engine's
+# BlockAllocator therefore hands out ids 1..n_blocks-1.
+
+
+def is_paged_block(blk, context: int) -> bool:
+    """Which layers page: attention whose ring spans the full context (the
+    dominant KV cost). Short windowed/chunked rings stay per-lane."""
+    return blk.is_attn and blk.cache_len(context) == context
+
+
+def init_paged_pool(cfg: ModelConfig, n_lanes: int, n_blocks: int,
+                    block: int, context: int, abstract: bool = False):
+    """The paged serving pool: paged layers get block-pool leaves (shared
+    across lanes), everything else a per-lane cache like init_slot_pool.
+    `context` must be a multiple of `block` (the executor rounds up)."""
+    if context % block:
+        raise ValueError(f"paged pool context {context} must be a multiple "
+                         f"of the kv block size {block}")
+    hd = cfg.resolved_head_dim
+    K = cfg.n_kv_heads
+
+    def paged_leaf():
+        return {
+            "kb": jax.ShapeDtypeStruct((n_blocks, block, K, hd),
+                                       jnp.bfloat16),
+            "vb": jax.ShapeDtypeStruct((n_blocks, block, K, hd),
+                                       jnp.bfloat16),
+            "pos": jax.ShapeDtypeStruct((n_blocks, block), jnp.int32),
+        }
+
+    def one_cache(blk):
+        if is_paged_block(blk, context):
+            return paged_leaf()
+        return M.block_cache_init(cfg, blk, n_lanes, context, abstract=True)
+
+    def _materialize(s):
+        if s.dtype == jnp.int32:   # position buffers start invalid
+            return jnp.full(s.shape, -1, s.dtype)
+        return jnp.zeros(s.shape, s.dtype)
+
+    def stacked(blk):
+        one = one_cache(blk)
+        stack = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((cfg.repeats,) + s.shape, s.dtype),
+            one)
+        return stack if abstract else jax.tree.map(_materialize, stack)
+
+    pool = {"units": [stacked(blk) for blk in cfg.unit], "tail": []}
+    for blk in cfg.tail:
+        one = one_cache(blk)
+        pool["tail"].append(one if abstract
+                            else jax.tree.map(_materialize, one))
+    return pool
+
+
+def write_paged_prefill(cfg: ModelConfig, pool, one, lanes, tables,
+                        block: int):
+    """Scatter a width-W prefill cache into the paged pool: paged layers
+    split each row's full-context ring (identity layout: prefill positions
+    start at 0, so slot i <-> position i) into `context // block` logical
+    blocks and scatter them to the physical ids in `tables` [W, mB]
+    (entries -1 — unallocated logical blocks, i.e. ring padding beyond the
+    prompt, and whole padding rows — land in scratch block 0); per-lane
+    layers scatter to `lanes` [W] with pool-width padding dropped."""
+    def lane_upd(axis):
+        def f(P, o):
+            idx = (slice(None),) * axis + (lanes,)
+            return P.at[idx].set(o.astype(P.dtype), mode="drop")
+        return f
+
+    def paged_upd(P, o, batch_axis):
+        # o k/v: [..., W, L, K, hd] with L = mB * block; pos: [..., W, L]
+        W, mB = tables.shape
+        flat = jnp.where(tables >= 0, tables, 0).reshape(-1)      # [W*mB]
+        new = {}
+        for kk, pk in (("k", "kb"), ("v", "vb"), ("pos", "pos")):
+            o_l = o[kk]
+            shp = o_l.shape[:batch_axis] + (W * mB, block) \
+                + o_l.shape[batch_axis + 2:]
+            o_b = o_l.reshape(shp)
+            idx = (slice(None),) * batch_axis + (flat,)
+            new[pk] = P[pk].at[idx].set(o_b.astype(P[pk].dtype))
+        return new
+
+    units = []
+    for i, blk in enumerate(cfg.unit):
+        P, o = pool["units"][i], one["units"][i]
+        if isinstance(P, dict) and "kb" in P:
+            units.append(paged_upd(P, o, batch_axis=1))
+        else:
+            units.append(jax.tree.map(lane_upd(1), P, o))
+    tail = []
+    for i, blk in enumerate(cfg.tail):
+        P, o = pool["tail"][i], one["tail"][i]
+        if isinstance(P, dict) and "kb" in P:
+            tail.append(paged_upd(P, o, batch_axis=0))
+        else:
+            tail.append(jax.tree.map(lane_upd(0), P, o))
+    return {"units": units, "tail": tail}
+
+
+def make_paged_prefill_step(cfg: ModelConfig,
+                            settings: Optional[M.ModelSettings] = None):
+    """Batched prefill into the paged pool: tokens [W, p], lanes [W],
+    tables [W, context // block]. One compile per prompt bucket."""
+    settings = settings or M.ModelSettings()
+    psettings = dataclasses.replace(settings, build_cache=True)
+
+    def prefill_paged(params, tokens, lanes, tables, pool, context: int):
+        logits, one, _ = M.apply(params, cfg, tokens, settings=psettings,
+                                 context=context, logits_last_only=True)
+        block = pool_block_size(pool, default=1)
+        return logits[:, -1], write_paged_prefill(cfg, pool, one, lanes,
+                                                  tables, block)
+
+    return prefill_paged
+
+
+def make_paged_decode_step(cfg: ModelConfig,
+                           settings: Optional[M.ModelSettings] = None):
+    """One batched decode tick through the block tables: a single compile
+    at lane width regardless of pool occupancy."""
+    settings = settings or M.ModelSettings()
+
+    def decode_paged(params, tokens, positions, tables, pool, context: int):
+        logits, new_pool, _ = M.apply(params, cfg, tokens,
+                                      positions=positions, cache=pool,
+                                      decode=True, settings=settings,
+                                      context=context, block_tables=tables)
+        return logits[:, -1], new_pool
+
+    return decode_paged
+
+
+def pool_block_size(pool, default: int = 0) -> int:
+    """The kv block size a paged pool was built with (from any paged leaf).
+    `default` covers pools with nothing to page (all-recurrent or
+    short-window archs, where paged mode degenerates to per-lane slots)."""
+    for P in list(pool["units"]) + list(pool["tail"]):
+        if isinstance(P, dict) and "kb" in P:
+            return int(P["pos"].shape[-1])
+    return default
+
+
+def reset_pool_blocks(pool, ids):
+    """Invalidate physical blocks `ids` [W] (pos = -1) before a freed block
+    is re-linked into a new sequence's table mid-decode — without it the
+    block's stale positions from its previous owner would pass the decode
+    mask. Padding entries may point at scratch block 0 (reset is harmless
+    there)."""
+    def upd(P, lead):
+        idx = (slice(None),) * lead + (ids,)
+        return {**P, "pos": P["pos"].at[idx].set(-1)}
+
+    return {
+        "units": [upd(P, 1) if isinstance(P, dict) and "kb" in P else P
+                  for P in pool["units"]],
+        "tail": [upd(P, 0) if isinstance(P, dict) and "kb" in P else P
+                 for P in pool["tail"]],
+    }
+
+
 def _sharding_ctx_key():
     """The ambient sharding context shard()/gather_fsdp bake into a trace
     (parallel.axes thread-locals). jax.jit's own cache does not key on it,
@@ -104,14 +314,29 @@ def _sharding_ctx_key():
 
 
 @functools.lru_cache(maxsize=64)
-def _jitted_serve_steps(cfg, settings, slot: bool, ctx_key):
-    prefill_fn = (make_slot_prefill_step if slot
-                  else make_prefill_step)(cfg, settings)
-    prefill = jax.jit(prefill_fn, static_argnames=("context",),
-                      donate_argnums=(3,) if slot else ())
-    decode = jax.jit(make_decode_step(cfg, settings),
-                     static_argnames=("context",), donate_argnums=(3,))
-    return prefill, decode
+def _jitted_serve_steps(cfg, settings, mode: str, ctx_key):
+    if mode == "plain":
+        prefill = jax.jit(make_prefill_step(cfg, settings),
+                          static_argnames=("context",))
+        decode = jax.jit(make_decode_step(cfg, settings),
+                         static_argnames=("context",), donate_argnums=(3,))
+        return prefill, decode
+    if mode == "slot":
+        prefill = jax.jit(make_slot_prefill_step(cfg, settings),
+                          static_argnames=("context",), donate_argnums=(3,))
+        batch = jax.jit(make_batch_prefill_step(cfg, settings),
+                        static_argnames=("context",), donate_argnums=(3,))
+        decode = jax.jit(make_decode_step(cfg, settings),
+                         static_argnames=("context",), donate_argnums=(3,))
+        return prefill, batch, decode
+    if mode == "paged":
+        prefill = jax.jit(make_paged_prefill_step(cfg, settings),
+                          static_argnames=("context",), donate_argnums=(4,))
+        decode = jax.jit(make_paged_decode_step(cfg, settings),
+                         static_argnames=("context",), donate_argnums=(4,))
+        reset = jax.jit(reset_pool_blocks, donate_argnums=(0,))
+        return prefill, decode, reset
+    raise ValueError(mode)
 
 
 def serve_steps(cfg: ModelConfig,
@@ -120,16 +345,26 @@ def serve_steps(cfg: ModelConfig,
     sharding context): repeated greedy_generate calls (tests, examples)
     reuse the compiled steps instead of re-tracing per call. `context` is
     static and the decode cache is donated in place."""
-    return _jitted_serve_steps(cfg, settings, False, _sharding_ctx_key())
+    return _jitted_serve_steps(cfg, settings, "plain", _sharding_ctx_key())
 
 
 def slot_serve_steps(cfg: ModelConfig,
                      settings: Optional[M.ModelSettings] = None):
-    """Jitted (prefill-into-slot, decode) pair for the engine's slot pool,
-    memoized like serve_steps so successive executors (e.g. the serve
-    driver's --policy both runs) share compiled steps instead of paying
-    the whole compile set again. Pool arguments are donated."""
-    return _jitted_serve_steps(cfg, settings, True, _sharding_ctx_key())
+    """Jitted (prefill-into-slot, batched-prefill-into-slots, decode)
+    triple for the engine's slot pool, memoized like serve_steps so
+    successive executors (e.g. the serve driver's --policy both runs)
+    share compiled steps instead of paying the whole compile set again.
+    Pool arguments are donated."""
+    return _jitted_serve_steps(cfg, settings, "slot", _sharding_ctx_key())
+
+
+def paged_serve_steps(cfg: ModelConfig,
+                      settings: Optional[M.ModelSettings] = None):
+    """Jitted (batched-prefill, decode, reset-blocks) triple for the paged
+    block pool, memoized like slot_serve_steps. One decode compile at lane
+    width serves any pool occupancy; prefill compiles once per prompt
+    bucket (padded to lane width)."""
+    return _jitted_serve_steps(cfg, settings, "paged", _sharding_ctx_key())
 
 
 def greedy_generate(params, cfg: ModelConfig, prompt_tokens, n_steps: int,

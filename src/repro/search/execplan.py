@@ -185,23 +185,98 @@ def auto_plan(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
 class ServingPlan:
     """A deployment configuration for the serving engine: the runnable
     ExecutionPlan plus the WSMC-predicted admission bound. `capacity` is
-    the GLOBAL number of concurrent sequences `predictor.serving_capacity`
-    says fit the per-device budget — the engine sizes its KV slot pool
-    from it and queues everything beyond."""
+    the GLOBAL number of concurrent sequences the memory model says fit
+    the per-device budget — the engine sizes its KV pool from it and
+    queues everything beyond. Under paged KV (`kv_block > 0`) the budget
+    governs a BLOCK pool instead of whole-sequence slots: `blocks` is the
+    global block count `predictor.serving_block_capacity` admits at
+    `capacity` decode lanes, and capacity itself is the EXPECTED
+    concurrency under the trace's length distribution (short requests stop
+    paying max-context bytes)."""
     execution: ExecutionPlan
     capacity: int
     hbm_budget: float
     considered: int = 0              # serving candidates scored
+    kv_block: int = 0                # positions per KV block (0 = ring slots)
+    blocks: int = 0                  # global paged-pool block budget
 
     def slots(self, cap: Optional[int] = None) -> int:
-        """Engine slot-pool size: the predicted capacity, optionally capped
-        (CLI --max-slots, trace size)."""
+        """Engine slot-pool size (ring) / decode-lane count (paged): the
+        predicted capacity, optionally capped (CLI --max-slots, trace
+        size)."""
         return self.capacity if cap is None else min(self.capacity, int(cap))
 
+    def pool_blocks(self, lanes: int, context: int) -> int:
+        """Physical block-pool size for an engine running `lanes` decode
+        lanes over ring extent `context`: the planned block budget, capped
+        at what the lanes can ever hold (a --max-slots-capped engine
+        shouldn't allocate the full planned pool)."""
+        if not self.kv_block:
+            return 0
+        per_seq = -(-int(context) // self.kv_block)
+        return max(min(self.blocks, int(lanes) * per_seq), 1)
+
     def describe(self) -> str:
-        return (f"{self.execution.describe()} capacity={self.capacity} "
-                f"(budget={self.hbm_budget / 2**30:.1f} GiB, "
+        paged = (f" kv_block={self.kv_block} blocks={self.blocks}"
+                 if self.kv_block else "")
+        return (f"{self.execution.describe()} capacity={self.capacity}"
+                f"{paged} (budget={self.hbm_budget / 2**30:.1f} GiB, "
                 f"considered={self.considered})")
+
+
+DEFAULT_KV_BLOCKS = (8, 16, 32, 64, 128)
+
+
+def _expected_blocks(seq_lens: Sequence[int], block: int) -> float:
+    """Mean paged-block demand per sequence under the trace's length
+    distribution: `seq_lens` holds each request's written positions
+    (prompt + generated - 1)."""
+    lens = [max(int(s), 1) for s in seq_lens] or [1]
+    return sum(-(-s // block) for s in lens) / len(lens)
+
+
+def _paged_concurrency(cfg, shape, cand, cls, budget, mode, hw, factors,
+                       seq_lens, max_lanes: int = 1 << 14):
+    """Expected admitted concurrency for one paged serving candidate: the
+    largest per-device lane count whose block pool still covers the
+    EXPECTED per-sequence demand (blocks(lanes) >= lanes * E[blocks/seq]).
+    blocks() falls as lanes rise (lane-fixed state eats the budget) while
+    demand rises, so the balance point is an exact monotone search.
+    Returns (global_concurrency, global_blocks)."""
+    from repro.core import predictor as PR
+    _, dp, _ = PR.mesh_factors(cand.mesh_shape)
+    e_blocks = _expected_blocks(seq_lens, cand.plan.kv_block_size)
+    lens = [max(int(s), 1) for s in seq_lens] or [1]
+    avg_context = -(-sum(lens) // len(lens))
+    # the pool must also hold the LONGEST request outright, or the engine
+    # could never admit it (expected demand alone would undersize the pool
+    # on a short-heavy trace with a long tail)
+    max_seq_blocks = max(-(-s // cand.plan.kv_block_size) for s in lens)
+    _blocks_memo: dict = {}
+
+    def blocks_at(lanes: int) -> int:
+        if lanes not in _blocks_memo:
+            _blocks_memo[lanes] = PR.serving_block_capacity(
+                cfg, shape, cand.plan, cls, cand.mesh_shape, lanes=lanes,
+                mode=mode, hw=hw, hbm_budget=budget, factors=factors,
+                avg_context=avg_context) // dp
+        return _blocks_memo[lanes]
+
+    def feasible(lanes: int) -> bool:
+        return blocks_at(lanes) >= max(lanes * e_blocks, max_seq_blocks)
+
+    if not feasible(1):
+        return 0, 0
+    lo, hi = 1, 2
+    while hi < max_lanes and feasible(hi):
+        lo, hi = hi, hi * 2
+    if hi >= max_lanes and feasible(max_lanes):
+        lo = max_lanes
+    else:
+        while hi - lo > 1:          # invariant: feasible(lo), not feasible(hi)
+            mid = (lo + hi) // 2
+            lo, hi = (mid, hi) if feasible(mid) else (lo, mid)
+    return lo * dp, blocks_at(lo) * dp
 
 
 def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
@@ -212,16 +287,29 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
                  base_seq: int = 64, n_points: int = 2, mode: str = "paper",
                  factors: Optional[dict] = None,
                  hw: HW.HardwareSpec = HW.TPU_V5E,
-                 space: Optional[SP.ConfigSpace] = None):
+                 space: Optional[SP.ConfigSpace] = None,
+                 kv: str = "ring",
+                 kv_blocks: Sequence[int] = DEFAULT_KV_BLOCKS,
+                 seq_lens: Optional[Sequence[int]] = None):
     """The serving-engine planning entry: walk the serving lattice
-    (kv_shard x data x model, pipe pinned — space.serving_space) and pick
-    the candidate that maximizes `predictor.serving_capacity` under the
-    per-device HBM budget, tie-broken fastest-first. This is the paper's
-    configuration loop run in reverse: instead of sizing memory to a fixed
-    workload, it sizes the admissible workload to a fixed memory budget.
-    Returns (Classification, ServingPlan)."""
+    (kv_shard x kv_block_size x data x model, pipe pinned —
+    space.serving_space) and pick the candidate that maximizes admitted
+    concurrency under the per-device HBM budget, tie-broken fastest-first.
+    This is the paper's configuration loop run in reverse: instead of
+    sizing memory to a fixed workload, it sizes the admissible workload to
+    a fixed memory budget.
+
+    `kv="ring"` scores candidates by `predictor.serving_capacity`
+    (worst-case whole-sequence slots). `kv="paged"` makes `kv_block_size`
+    a searched knob and maximizes EXPECTED admitted concurrency under the
+    trace's length distribution (`seq_lens`: written positions per
+    request; defaults to worst-case `shape.context`), via
+    `predictor.serving_block_capacity` — admit by actual footprint, not
+    worst case. Returns (Classification, ServingPlan)."""
     from repro.core import predictor as PR   # lazy, like profiler below
     from repro.core import profiler as PF
+    if kv not in ("ring", "paged"):
+        raise ValueError(f"plan_serving: unknown kv mode {kv!r}")
     if measurer is None:
         measurer = MM.SimulatedMeasurer({"data": n_devices}, cache=cache)
     if cls is None:
@@ -229,23 +317,35 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
                                    base_seq=base_seq, measurer=measurer)
     budget = hw.hbm_bytes if hbm_budget is None else float(hbm_budget)
     if space is None:
-        space = SP.serving_space(cfg, shape, max_devices=n_devices,
-                                 data=_axis_values(n_devices),
-                                 model=_axis_values(n_devices))
+        space = SP.serving_space(
+            cfg, shape, max_devices=n_devices,
+            data=_axis_values(n_devices), model=_axis_values(n_devices),
+            kv_blocks=tuple(kv_blocks) if kv == "paged" else (0,))
+    if kv == "paged" and seq_lens is None:
+        seq_lens = (shape.context,)
     cands = space.candidates(cfg, shape)
+    if kv == "paged":
+        cands = [c for c in cands if c.plan.kv_block_size > 0]
     if not cands:
         raise ValueError(f"{space.name}: no valid serving candidates")
-    best, best_cap = None, -1
+    best, best_cap, best_blocks = None, -1, 0
     for cand in cands:                       # fastest-first => ties keep speed
-        cap = PR.serving_capacity(cfg, shape, cand.plan, cls,
-                                  cand.mesh_shape, mode=mode, hw=hw,
-                                  hbm_budget=budget, factors=factors)
+        if kv == "paged":
+            cap, blocks = _paged_concurrency(cfg, shape, cand, cls, budget,
+                                             mode, hw, factors, seq_lens)
+        else:
+            cap = PR.serving_capacity(cfg, shape, cand.plan, cls,
+                                      cand.mesh_shape, mode=mode, hw=hw,
+                                      hbm_budget=budget, factors=factors)
+            blocks = 0
         if cap > best_cap:
-            best, best_cap = cand, cap
+            best, best_cap, best_blocks = cand, cap, blocks
     eplan = for_mesh(cfg, shape, best.plan, best.mesh_shape,
                      policy="max_concurrency")
     return cls, ServingPlan(execution=eplan, capacity=best_cap,
-                            hbm_budget=budget, considered=len(cands))
+                            hbm_budget=budget, considered=len(cands),
+                            kv_block=best.plan.kv_block_size,
+                            blocks=best_blocks)
 
 
 def plan_execution(cfg: ModelConfig, shape: ShapeConfig,

@@ -207,6 +207,13 @@ PIPE_EXECUTABLE = Constraint("pipe schedule executable by the 1F1B runtime",
                              _check_pipe_executable)
 
 
+def _check_kv_block(cfg, shape, cand) -> bool:
+    b = cand.plan.kv_block_size
+    return b == 0 or 0 < b <= shape.context
+
+KV_BLOCK_LEGAL = Constraint("kv block size within the context", _check_kv_block)
+
+
 def mesh_budget(max_devices: int) -> Constraint:
     def check(cfg, shape, cand) -> bool:
         n = 1
@@ -412,22 +419,29 @@ def mesh_space(cfg: ModelConfig, shape: ShapeConfig, *,
 def serving_space(cfg: ModelConfig, shape: ShapeConfig, *,
                   max_devices: int = 256,
                   data: Sequence[int] = (1, 2, 4, 8, 16, 32),
-                  model: Sequence[int] = (1, 2, 4, 8, 16)) -> ConfigSpace:
+                  model: Sequence[int] = (1, 2, 4, 8, 16),
+                  kv_blocks: Sequence[int] = (0,)) -> ConfigSpace:
     """The serving-engine planning lattice: mesh axes searchable (pipe
     pinned to 1 — the serving runtime is single-shot) and kv_shard a REAL
     knob rather than auto-resolved, because the admission controller cares:
     `heads` replicates the ring cache when kv heads don't divide the model
     axis, while `seq` shards its length — different per-sequence bytes,
-    hence different admitted concurrency. `plan_serving` scores each
-    candidate by `predictor.serving_capacity` instead of step time."""
+    hence different admitted concurrency. `kv_block_size` is the paged-KV
+    allocation granule (0 = whole-sequence ring slots): smaller blocks
+    track short sequences' true footprint more tightly but pay more
+    block-table indirection. `plan_serving` scores each candidate by
+    `predictor.serving_capacity` (ring) or expected admitted concurrency
+    over the block pool (paged) instead of step time."""
     knobs = [Knob("remat", ("none",)), Knob("microbatches", (1,)),
              Knob("optimizer", ("adamw_f32",)),
              Knob("kv_shard", ("heads", "seq")),
+             Knob("kv_block_size", tuple(kv_blocks)),
              Knob("data", tuple(data), group="mesh"),
              Knob("model", tuple(model), group="mesh"),
              Knob("pipe", (1,), group="mesh")]
     return ConfigSpace(f"serving[{cfg.name}|{shape.name}]", knobs,
-                       (KV_HEADS_DIVISIBLE, mesh_budget(max_devices)))
+                       (KV_HEADS_DIVISIBLE, KV_BLOCK_LEGAL,
+                        mesh_budget(max_devices)))
 
 
 def hillclimb_space(

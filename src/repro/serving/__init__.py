@@ -6,7 +6,8 @@ machine); the jax-backed executor lives in `repro.serving.executor` and is
 imported lazily so planning/metrics code never touches device state.
 """
 from repro.serving.engine import (  # noqa: F401
-    Completion, Engine, POLICIES, ScriptedExecutor, ServeReport,
+    BlockAllocator, Completion, Engine, POLICIES, ScriptedExecutor,
+    ServeReport,
 )
 from repro.serving.trace import (  # noqa: F401
     Request, describe_trace, synthetic_trace, trace_context,
@@ -14,7 +15,7 @@ from repro.serving.trace import (  # noqa: F401
 
 
 def __getattr__(name):
-    if name == "JaxExecutor":
-        from repro.serving.executor import JaxExecutor
-        return JaxExecutor
+    if name in ("JaxExecutor", "PagedJaxExecutor"):
+        from repro.serving import executor
+        return getattr(executor, name)
     raise AttributeError(name)

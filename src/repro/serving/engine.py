@@ -2,12 +2,14 @@
 KV pool.
 
 The scheduler is deliberately jax-free: it speaks to the model through an
-executor protocol (``prefill(slot, prompt) -> first_token``,
-``decode(tokens, positions) -> next_tokens``) so the admission /
-claim-free / accounting core is a deterministic state machine the hermetic
-test tier can drive with a scripted executor, while the real
-`serving.executor.JaxExecutor` runs jitted prefill-into-slot and batched
-heterogeneous-position decode over the ring-cache pool.
+executor protocol (``prefill_batch(slots, prompts, tables=None) ->
+first_tokens``, ``decode(tokens, positions, tables=None) ->
+next_tokens``, ``fresh_blocks(ids)``) so the admission / claim-free /
+accounting core is a deterministic state machine the hermetic test tier
+can drive with a scripted executor, while the real
+`serving.executor.JaxExecutor` / `PagedJaxExecutor` run jitted batched
+prefill and batched heterogeneous-position decode over the ring-slot or
+paged block pool.
 
 Memory governance (the paper's loop run backwards): the engine never holds
 more concurrent sequences than its slot count, and the slot count is
@@ -30,11 +32,83 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, List, Optional, Sequence, Tuple
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
 from repro.serving.trace import Request
 
 POLICIES = ("continuous", "static")
+
+
+class BlockAllocator:
+    """jax-free free-list allocator over the paged KV block pool.
+
+    Physical ids run 1..n_blocks (id 0 is the executor's scratch block for
+    inactive decode lanes — never handed out). Admission reserves a
+    request's WORST-CASE OWN footprint up front (`blocks_for`: the blocks
+    its prompt + max_new positions can ever write — short requests reserve
+    few blocks, which is the whole win over whole-context ring slots) and
+    physical blocks are allocated lazily as decode crosses block
+    boundaries, so `alloc` inside a reservation can never fail and the
+    engine can never deadlock mid-decode. `free` returns a completed
+    request's blocks to the pool for immediate reuse.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 1:
+            raise ValueError(f"BlockAllocator needs n_blocks >= 1, got "
+                             f"{n_blocks} (serving_block_capacity said "
+                             "nothing fits — raise the budget)")
+        if block_size < 1:
+            raise ValueError(f"block_size must be >= 1, got {block_size}")
+        self.n_blocks = int(n_blocks)
+        self.block_size = int(block_size)
+        self._free: Deque[int] = collections.deque(range(1, n_blocks + 1))
+        self._owned: Dict[int, List[int]] = {}     # rid -> physical ids
+        self._reserved: Dict[int, int] = {}        # rid -> total reservation
+        self.committed = 0                         # sum of live reservations
+        self.peak_in_use = 0
+        self.peak_committed = 0
+
+    def blocks_for(self, req: Request) -> int:
+        """Worst-case blocks `req` can ever hold: its written positions are
+        0..prompt+max_new-2 (the last generated token is never cached)."""
+        written = len(req.prompt) + req.max_new - 1
+        return max(-(-written // self.block_size), 1)
+
+    def can_admit(self, n: int) -> bool:
+        return self.committed + n <= self.n_blocks
+
+    def reserve(self, rid: int, n: int) -> None:
+        if not self.can_admit(n):
+            raise RuntimeError(f"reserve({rid}) over-commits the pool")
+        if rid in self._reserved:
+            raise RuntimeError(f"request {rid} already holds a reservation")
+        self._reserved[rid] = n
+        self._owned[rid] = []
+        self.committed += n
+        self.peak_committed = max(self.peak_committed, self.committed)
+
+    def alloc(self, rid: int) -> int:
+        if len(self._owned[rid]) >= self._reserved[rid]:
+            raise RuntimeError(f"request {rid} exceeded its reservation")
+        bid = self._free.popleft()       # cannot be empty: see class doc
+        self._owned[rid].append(bid)
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return bid
+
+    def free(self, rid: int) -> List[int]:
+        ids = self._owned.pop(rid)
+        self.committed -= self._reserved.pop(rid)
+        self._free.extend(ids)           # FIFO reuse: deterministic
+        return ids
+
+    @property
+    def in_use(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
 
 
 @dataclasses.dataclass
@@ -45,6 +119,7 @@ class _Active:
     pos: int                     # next decode position (== tokens emitted + prompt)
     remaining: int               # decode steps still owed
     tokens: List[int]            # generated so far (first from prefill)
+    table: List[int] = dataclasses.field(default_factory=list)  # paged: phys block ids
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +153,9 @@ class ServeReport:
     peak_queue: int
     max_concurrent: int
     prefills: int
+    prefill_calls: int = 0       # batched prefill invocations (<= prefills)
+    n_blocks: int = 0            # paged pool size (0 = ring slots)
+    peak_blocks: int = 0         # peak physical blocks in use (paged)
 
     @property
     def generated_tokens(self) -> int:
@@ -99,7 +177,13 @@ class ServeReport:
             return 0.0
         return sum(c.latency for c in self.completions) / len(self.completions)
 
+    def block_occupancy(self) -> float:
+        """Paged pools: peak fraction of physical blocks in use."""
+        return self.peak_blocks / self.n_blocks if self.n_blocks else 0.0
+
     def describe(self) -> str:
+        paged = (f" blocks={self.peak_blocks}/{self.n_blocks}"
+                 if self.n_blocks else "")
         return (f"[{self.policy}] slots={self.n_slots} "
                 f"completed={len(self.completions)} "
                 f"tokens={self.generated_tokens} ticks={self.ticks} "
@@ -107,25 +191,38 @@ class ServeReport:
                 f"throughput={self.throughput():.2f} tok/tick "
                 f"mean_latency={self.mean_latency():.1f} ticks "
                 f"peak_queue={self.peak_queue} "
-                f"max_concurrent={self.max_concurrent}")
+                f"max_concurrent={self.max_concurrent}"
+                f"{paged}")
 
 
 class ScriptedExecutor:
     """Deterministic jax-free executor: closed-form token functions stand in
     for the model so the scheduler core (admission, claim/free, metrics)
     can be pinned by the hermetic test tier and compared across policies
-    without a single compile."""
+    (and ring vs paged) without a single compile."""
 
     def __init__(self, vocab_size: int = 97):
         self.vocab_size = vocab_size
         self.prefills = 0
+        self.prefill_batches = 0
         self.decodes = 0
 
     def prefill(self, slot: int, prompt: Sequence[int]) -> int:
         self.prefills += 1
         return (sum(prompt) + 31 * len(prompt)) % self.vocab_size
 
-    def decode(self, tokens: Sequence[int], positions: Sequence[int]
+    def prefill_batch(self, slots: Sequence[int],
+                      prompts: Sequence[Sequence[int]],
+                      tables: Optional[Sequence[Sequence[int]]] = None
+                      ) -> List[int]:
+        self.prefill_batches += 1
+        return [self.prefill(s, p) for s, p in zip(slots, prompts)]
+
+    def fresh_blocks(self, ids: Sequence[int]) -> None:
+        pass                                 # no physical pool to invalidate
+
+    def decode(self, tokens: Sequence[int], positions: Sequence[int],
+               tables: Optional[Sequence[Sequence[int]]] = None
                ) -> List[int]:
         self.decodes += 1
         return [(17 * t + 7 * p + 13) % self.vocab_size
@@ -133,15 +230,21 @@ class ScriptedExecutor:
 
 
 class Engine:
-    """Continuous-batching serving engine over a slotted KV pool.
+    """Continuous-batching serving engine over a slotted or paged KV pool.
 
     `n_slots` is the admission bound — by construction the engine never
     runs more concurrent sequences than slots, so sizing it from
     `ServingPlan.slots()` makes `predictor.serving_capacity` the admission
-    controller. One `run()` call replays one trace to completion.
+    controller. With a `BlockAllocator` the slots become decode LANES and
+    admission additionally requires the request's block reservation to fit
+    the pool (`serving_block_capacity` run as the admission controller):
+    short requests reserve few blocks, so many more of them fit the same
+    HBM budget than worst-case ring slots would admit. One `run()` call
+    replays one trace to completion.
     """
 
-    def __init__(self, executor, n_slots: int, policy: str = "continuous"):
+    def __init__(self, executor, n_slots: int, policy: str = "continuous",
+                 allocator: Optional[BlockAllocator] = None):
         if n_slots < 1:
             raise ValueError(f"Engine needs n_slots >= 1, got {n_slots} "
                              "(serving_capacity said nothing fits — lower "
@@ -151,27 +254,59 @@ class Engine:
         self.executor = executor
         self.n_slots = int(n_slots)
         self.policy = policy
+        self.allocator = allocator
 
     # -- scheduling core ---------------------------------------------------
 
     def _admit(self, queue: Deque[Request], slots: List[Optional[_Active]],
-               tick: int) -> int:
+               tick: int) -> Tuple[int, int]:
         """Claim free slots for queued requests under the active policy.
-        Returns the number of admissions (each one a prefill)."""
+        Admissions landing in the same tick and prompt bucket share ONE
+        padded prefill call (engine-level batched prefill). Returns
+        (admissions, prefill calls)."""
         if self.policy == "static" and any(s is not None for s in slots):
-            return 0                      # fixed batch: wait for the pool
-        admitted = 0
+            return 0, 0                   # fixed batch: wait for the pool
+        alloc = self.allocator
+        picked: List[Tuple[int, Request]] = []
         for i in range(self.n_slots):
             if not queue:
                 break
             if slots[i] is not None:
                 continue
-            req = queue.popleft()
-            first = int(self.executor.prefill(i, req.prompt))
-            slots[i] = _Active(req=req, admitted=tick, pos=len(req.prompt),
-                               remaining=req.max_new - 1, tokens=[first])
-            admitted += 1
-        return admitted
+            req = queue[0]
+            if alloc is not None:
+                need = alloc.blocks_for(req)
+                if not alloc.can_admit(need):
+                    break                 # FIFO: no overtaking the head
+                alloc.reserve(req.rid, need)
+            picked.append((i, queue.popleft()))
+        if not picked:
+            return 0, 0
+        by_len: Dict[int, List[Tuple[int, Request]]] = {}
+        for i, req in picked:
+            by_len.setdefault(len(req.prompt), []).append((i, req))
+        calls = 0
+        for plen in sorted(by_len):
+            group = by_len[plen]
+            lanes = [i for i, _ in group]
+            prompts = [req.prompt for _, req in group]
+            tables = None
+            if alloc is not None:
+                tables = []
+                for i, req in group:
+                    nb0 = max(-(-plen // alloc.block_size), 1)
+                    tables.append([alloc.alloc(req.rid)
+                                   for _ in range(nb0)])
+            firsts = self.executor.prefill_batch(lanes, prompts,
+                                                 tables=tables)
+            calls += 1
+            for gi, (i, req) in enumerate(group):
+                slots[i] = _Active(req=req, admitted=tick, pos=plen,
+                                   remaining=req.max_new - 1,
+                                   tokens=[int(firsts[gi])],
+                                   table=(tables[gi] if tables is not None
+                                          else []))
+        return len(picked), calls
 
     def run(self, trace: Sequence[Request],
             max_ticks: int = 1_000_000) -> ServeReport:
@@ -181,19 +316,29 @@ class Engine:
                                  f"prompt and max_new >= 1 (got "
                                  f"prompt_len={len(r.prompt)}, "
                                  f"max_new={r.max_new})")
+            if (self.allocator is not None
+                    and self.allocator.blocks_for(r) > self.allocator.n_blocks):
+                raise ValueError(
+                    f"request {r.rid} needs {self.allocator.blocks_for(r)} "
+                    f"KV blocks but the pool holds "
+                    f"{self.allocator.n_blocks} — it could never be "
+                    "admitted (raise the budget or shrink the context)")
         pending: Deque[Request] = collections.deque(
             sorted(trace, key=lambda r: (r.arrival, r.rid)))
         queue: Deque[Request] = collections.deque()
         slots: List[Optional[_Active]] = [None] * self.n_slots
         completions: List[Completion] = []
         tick = decode_ticks = useful = idle = 0
-        peak_queue = max_concurrent = prefills = 0
+        peak_queue = max_concurrent = prefills = prefill_calls = 0
+        alloc = self.allocator
 
         def finish(i: int, when: int) -> None:
             a = slots[i]
             completions.append(Completion(
                 rid=a.req.rid, tokens=tuple(a.tokens),
                 arrival=a.req.arrival, admitted=a.admitted, finished=when))
+            if alloc is not None:
+                alloc.free(a.req.rid)
             slots[i] = None
 
         while pending or queue or any(s is not None for s in slots):
@@ -201,7 +346,9 @@ class Engine:
                 raise RuntimeError(f"engine exceeded max_ticks={max_ticks}")
             while pending and pending[0].arrival <= tick:
                 queue.append(pending.popleft())
-            prefills += self._admit(queue, slots, tick)
+            admitted, calls = self._admit(queue, slots, tick)
+            prefills += admitted
+            prefill_calls += calls
             peak_queue = max(peak_queue, len(queue))
             concurrent = sum(s is not None for s in slots)
             max_concurrent = max(max_concurrent, concurrent)
@@ -216,7 +363,27 @@ class Engine:
                           for i in range(self.n_slots)]
                 positions = [slots[i].pos if slots[i] is not None else 0
                              for i in range(self.n_slots)]
-                nxt = self.executor.decode(tokens, positions)
+                if alloc is not None:
+                    # allocate-on-decode-tick: a lane crossing into a new
+                    # logical block gets a physical block from the free
+                    # list (its reservation guarantees one) — freshly
+                    # re-linked blocks are invalidated first so a previous
+                    # owner's positions can't leak through the mask
+                    fresh: List[int] = []
+                    for i in active:
+                        a = slots[i]
+                        while a.pos // alloc.block_size >= len(a.table):
+                            bid = alloc.alloc(a.req.rid)
+                            a.table.append(bid)
+                            fresh.append(bid)
+                    if fresh:
+                        self.executor.fresh_blocks(fresh)
+                    tables = [slots[i].table if slots[i] is not None else []
+                              for i in range(self.n_slots)]
+                    nxt = self.executor.decode(tokens, positions,
+                                               tables=tables)
+                else:
+                    nxt = self.executor.decode(tokens, positions)
                 decode_ticks += 1
                 useful += len(active)
                 for i in active:
@@ -236,4 +403,7 @@ class Engine:
                            decode_ticks=decode_ticks,
                            useful_slot_tokens=useful, idle_ticks=idle,
                            peak_queue=peak_queue,
-                           max_concurrent=max_concurrent, prefills=prefills)
+                           max_concurrent=max_concurrent, prefills=prefills,
+                           prefill_calls=prefill_calls,
+                           n_blocks=(alloc.n_blocks if alloc else 0),
+                           peak_blocks=(alloc.peak_in_use if alloc else 0))

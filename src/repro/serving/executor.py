@@ -1,11 +1,14 @@
-"""The jax executor behind the serving engine: a slotted ring-cache pool
-plus jitted prefill-into-slot / batched-decode steps.
+"""The jax executors behind the serving engine: a slotted ring-cache pool
+(baseline) and a paged KV block pool, each with jitted prefill / batched-
+decode steps.
 
 One decode compile serves the whole run (the pool width and context are
 fixed); prefill compiles once per distinct prompt length — synthetic
 traces draw prompts from small bucket sets, so the compile count stays
 bounded and every compile serves traffic (zero throwaway compiles when
-planning went through the simulator).
+planning went through the simulator). Engine-level batched prefill pads
+each same-tick, same-bucket admission group to the pool width, so a burst
+of admissions costs ONE prefill call instead of one per request.
 """
 from __future__ import annotations
 
@@ -17,6 +20,27 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.runtime import serve_step as SS
+
+
+def _compile_count(fn) -> int:
+    try:
+        return int(fn._cache_size())
+    except AttributeError:          # older jax: no cache-size probe
+        return -1
+
+
+def _pad_batch(width: int, slots: Sequence[int],
+               prompts: Sequence[Sequence[int]]):
+    """Pack a same-length admission group into pool-width arrays: padding
+    rows carry dummy prompts (token id 2) and index `width` — out of
+    bounds, so the prefill scatter drops them (mode='drop')."""
+    p = len(prompts[0])
+    toks = np.full((width, p), 2, np.int32)
+    idx = np.full((width,), width, np.int32)
+    for i, (s, pr) in enumerate(zip(slots, prompts)):
+        toks[i] = pr
+        idx[i] = s
+    return jnp.asarray(toks), jnp.asarray(idx)
 
 
 class JaxExecutor:
@@ -46,16 +70,30 @@ class JaxExecutor:
         return SS.slot_serve_steps(self.cfg, self.settings)
 
     def prefill(self, slot: int, prompt: Sequence[int]) -> int:
-        prefill_step, _ = self._steps()
+        prefill_step, _, _ = self._steps()
         tokens = jnp.asarray(list(prompt), jnp.int32)[None, :]
         logits, self.pool = prefill_step(self.params, tokens, slot,
                                          self.pool, context=self.context)
         self.prefills += 1
         return int(jnp.argmax(logits[0], axis=-1))
 
-    def decode(self, tokens: Sequence[int], positions: Sequence[int]
-               ) -> List[int]:
-        _, decode_step = self._steps()
+    def prefill_batch(self, slots: Sequence[int],
+                      prompts: Sequence[Sequence[int]],
+                      tables=None) -> List[int]:
+        """One padded prefill for a same-bucket admission group: tokens are
+        padded to the pool width W (dummy rows use token id 2) and the
+        scatter drops rows whose slot index is W (out of bounds)."""
+        _, batch_step, _ = self._steps()
+        toks, slot_arr = _pad_batch(self.n_slots, slots, prompts)
+        logits, self.pool = batch_step(self.params, toks, slot_arr,
+                                       self.pool, context=self.context)
+        self.prefills += 1
+        out = np.asarray(jnp.argmax(logits, axis=-1))
+        return [int(out[i]) for i in range(len(slots))]
+
+    def decode(self, tokens: Sequence[int], positions: Sequence[int],
+               tables=None) -> List[int]:
+        _, _, decode_step = self._steps()
         t = jnp.asarray(list(tokens), jnp.int32)[:, None]
         p = jnp.asarray(list(positions), jnp.int32)
         logits, self.pool = decode_step(self.params, t, p, self.pool,
@@ -67,10 +105,94 @@ class JaxExecutor:
         """Compiled-variant counts of the serving steps (prefill: one per
         prompt-length bucket; decode: one) — the driver reports them so
         'every compile served traffic' is checkable."""
-        def n(fn):
-            try:
-                return int(fn._cache_size())
-            except AttributeError:      # older jax: no cache-size probe
-                return -1
-        prefill_step, decode_step = self._steps()
-        return {"prefill": n(prefill_step), "decode": n(decode_step)}
+        single, batch, decode_step = self._steps()
+        return {"prefill": _compile_count(batch) + _compile_count(single),
+                "decode": _compile_count(decode_step)}
+
+
+class PagedJaxExecutor:
+    """Engine lane operations over the paged KV block pool.
+
+    Full-context attention layers store KV in `n_blocks` shared blocks of
+    `kv_block` positions (physical id 0 is the scratch block for inactive
+    lanes, so the pool is allocated one block larger); each active lane's
+    logical layout reaches the pool through its block table. Decode is ONE
+    batched gather-based step at lane width regardless of pool occupancy;
+    prefill scatters whole blocks, padded to lane width per prompt bucket
+    like the ring executor.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, n_lanes: int,
+                 n_blocks: int, kv_block: int, context: int,
+                 settings: Optional[M.ModelSettings] = None):
+        if kv_block < 1:
+            raise ValueError(f"kv_block must be >= 1, got {kv_block}")
+        self.params = params
+        self.cfg = cfg
+        self.settings = settings
+        self.n_lanes = int(n_lanes)
+        self.kv_block = int(kv_block)
+        # block-align the ring extent so logical blocks tile it exactly
+        self.context = -(-int(context) // kv_block) * kv_block
+        self.max_blocks = self.context // kv_block
+        self.n_blocks = int(n_blocks)
+        self.pool = SS.init_paged_pool(cfg, self.n_lanes, self.n_blocks + 1,
+                                       kv_block, self.context)
+        self.prefills = 0
+        self.decodes = 0
+
+    def _steps(self):
+        return SS.paged_serve_steps(self.cfg, self.settings)
+
+    def _table_array(self, tables: Sequence[Sequence[int]], rows: int
+                     ) -> np.ndarray:
+        out = np.full((rows, self.max_blocks), -1, np.int32)
+        for i, tbl in enumerate(tables):
+            if len(tbl) > self.max_blocks:
+                raise ValueError(f"lane {i}: table of {len(tbl)} blocks "
+                                 f"exceeds max_blocks={self.max_blocks}")
+            out[i, :len(tbl)] = tbl
+        return out
+
+    def prefill_batch(self, lanes: Sequence[int],
+                      prompts: Sequence[Sequence[int]],
+                      tables: Sequence[Sequence[int]]) -> List[int]:
+        prefill_step, _, _ = self._steps()
+        w = self.n_lanes
+        toks, lane_arr = _pad_batch(w, lanes, prompts)
+        tbl = self._table_array(list(tables) + [[]] * (w - len(tables)), w)
+        logits, self.pool = prefill_step(self.params, toks, lane_arr,
+                                         jnp.asarray(tbl), self.pool,
+                                         context=self.context)
+        self.prefills += 1
+        out = np.asarray(jnp.argmax(logits, axis=-1))
+        return [int(out[i]) for i in range(len(lanes))]
+
+    def fresh_blocks(self, ids: Sequence[int]) -> None:
+        """Invalidate re-linked physical blocks (pos = -1) before decode
+        reads them through a new owner's table. Fixed width (lane count,
+        padded with the scratch block) keeps this a single compile."""
+        _, _, reset_step = self._steps()
+        if len(ids) > self.n_lanes:     # engine adds <= 1 block/lane/tick
+            raise ValueError(f"{len(ids)} fresh blocks for "
+                             f"{self.n_lanes} lanes")
+        arr = np.zeros((self.n_lanes,), np.int32)       # pad -> scratch
+        arr[:len(ids)] = list(ids)
+        self.pool = reset_step(self.pool, jnp.asarray(arr))
+
+    def decode(self, tokens: Sequence[int], positions: Sequence[int],
+               tables: Sequence[Sequence[int]]) -> List[int]:
+        _, decode_step, _ = self._steps()
+        t = jnp.asarray(list(tokens), jnp.int32)[:, None]
+        p = jnp.asarray(list(positions), jnp.int32)
+        tbl = jnp.asarray(self._table_array(tables, self.n_lanes))
+        logits, self.pool = decode_step(self.params, t, p, tbl, self.pool,
+                                        context=self.context)
+        self.decodes += 1
+        return np.asarray(jnp.argmax(logits, axis=-1)).astype(int).tolist()
+
+    def compile_counts(self) -> dict:
+        prefill_step, decode_step, reset_step = self._steps()
+        return {"prefill": _compile_count(prefill_step),
+                "decode": _compile_count(decode_step),
+                "reset": _compile_count(reset_step)}

@@ -64,6 +64,51 @@ def test_decode_attention_sweep(dtype, atol, L, K, G, hd, window, kvb):
                                rtol=atol)
 
 
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5),
+                                        (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize("bs,K,G,hd,window", [
+    (16, 2, 2, 32, None),
+    (8, 1, 4, 16, 40),
+    (32, 4, 1, 8, None),
+])
+def test_paged_decode_attention_sweep(dtype, atol, bs, K, G, hd, window):
+    """The block-table kernel vs a dense ring reference: scatter each
+    lane's blocks into a contiguous cache, run the plain decode oracle."""
+    b, m_blocks, n_blocks = 3, 4, 9
+    rng = np.random.default_rng(0)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, K, G, hd), dtype)
+    kp = jax.random.normal(ks[1], (n_blocks, bs, K, hd), dtype)
+    vp = jax.random.normal(ks[2], (n_blocks, bs, K, hd), dtype)
+    # each lane owns a random disjoint set of blocks (0 is scratch);
+    # lane i's positions run up to its decode cursor, later slots stay -1
+    perm = rng.permutation(np.arange(1, n_blocks)).tolist()
+    positions = np.array([3 * bs + bs // 2, bs - 1, 2 * bs], np.int32)
+    tables = np.full((b, m_blocks), -1, np.int32)
+    pool_pos = np.full((n_blocks, bs), -1, np.int32)
+    for i in range(b):
+        for j in range(-(-int(positions[i] + 1) // bs)):
+            phys = perm.pop()
+            tables[i, j] = phys
+            for o in range(bs):
+                if j * bs + o <= positions[i]:
+                    pool_pos[phys, o] = j * bs + o
+    out = ops.paged_decode_attention(
+        q, kp, vp, jnp.asarray(pool_pos), jnp.asarray(tables),
+        jnp.asarray(positions), window=window, backend="interpret")
+    # dense reference: gather the blocks into [b, m_blocks*bs, ...]
+    safe = np.where(tables >= 0, tables, 0)
+    kd = jnp.asarray(np.asarray(kp)[safe].reshape(b, m_blocks * bs, K, hd))
+    vd = jnp.asarray(np.asarray(vp)[safe].reshape(b, m_blocks * bs, K, hd))
+    cpos = np.where(tables[..., None] >= 0, pool_pos[safe], -1)
+    cpos = jnp.asarray(cpos.reshape(b, m_blocks * bs))
+    exp = ref.decode_attention_ref(q, kd, vd, cpos, jnp.asarray(positions),
+                                   window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=atol,
+                               rtol=atol)
+
+
 @pytest.mark.parametrize("backend", ["interpret", "blocked"])
 @pytest.mark.parametrize("s,h,dk,dv,chunk", [
     (128, 2, 16, 16, 32),

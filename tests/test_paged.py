@@ -1,0 +1,437 @@
+"""Paged KV block pool, hermetic tier: block-granular capacity inversion
+(predictor.serving_block_capacity), the paged planning mode of
+plan_serving, the jax-free BlockAllocator, the paged engine scheduling
+core (admission by actual footprint, block reuse, determinism), the
+engine-level batched prefill, and eval_shape pins of the paged pool steps
+— all with ZERO XLA compiles. Token parity of the real paged executor
+against greedy_generate lives in the slow tier (test_serve.py)."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro import hw as HW
+from repro.configs import get_config
+from repro.configs.base import DECODE, ShapeConfig
+from repro.core import measure as MM
+from repro.core import predictor as PR
+from repro.core import profiler as PF
+from repro.search import execplan as XP
+from repro.search import space as SP
+from repro.serving import (BlockAllocator, Engine, Request, ScriptedExecutor,
+                           synthetic_trace, trace_context)
+
+CFG = get_config("mistral-nemo-12b")         # pure global attn: all layers page
+SHAPE = ShapeConfig("paged_t", DECODE, 4096, 8)
+GIB = 2**30
+
+
+def _cls(cfg=CFG, shape=SHAPE):
+    sim = MM.SimulatedMeasurer({"data": 8})
+    return PF.classify_workload(cfg, shape, None, n_points=2, base_seq=64,
+                                measurer=sim)
+
+
+@pytest.fixture(scope="module")
+def cls():
+    return _cls()
+
+
+def _no_compile(monkeypatch):
+    import repro.launch.compile as LC
+
+    def boom(*a, **k):
+        raise AssertionError("XLA compile attempted in hermetic test")
+    monkeypatch.setattr(LC, "build", boom)
+
+
+# --- block math: the requirement model at block granularity ------------------
+
+def test_block_bytes_tile_the_ring_exactly(cls):
+    """ceil(context / block) KV blocks must cost exactly one whole-sequence
+    ring (+ the per-lane fixed state) when the block tiles the context —
+    the block pool re-cuts the same bytes, it doesn't invent new ones."""
+    mesh = {"data": 1, "model": 1}
+    for block in (64, 256):
+        plan = PR.MemoryPlan(kv_block_size=block)
+        assert SHAPE.context % block == 0
+        per_block = PR.kv_block_bytes_per_device(CFG, SHAPE, plan, mesh)
+        lane = PR.lane_bytes_per_device(CFG, SHAPE, plan, mesh)
+        one = dataclasses.replace(SHAPE, global_batch=1)
+        ring = PR.cache_bytes_per_device(CFG, one, plan, mesh)
+        n_blocks = SHAPE.context // block
+        assert per_block > 0
+        assert per_block * n_blocks + lane == pytest.approx(ring)
+
+
+def test_block_bytes_kv_shard_aware():
+    """'heads' pads 2 kv heads up to a whole replicated head over model=4;
+    'seq' shards the block's positions — the block accounting must see the
+    same difference serving_capacity does."""
+    cfg = dataclasses.replace(CFG, name="nemo-kv2", n_kv_heads=2)
+    mesh = {"data": 1, "model": 4}
+    heads = PR.kv_block_bytes_per_device(
+        cfg, SHAPE, PR.MemoryPlan(kv_shard="heads", kv_block_size=64), mesh)
+    seq = PR.kv_block_bytes_per_device(
+        cfg, SHAPE, PR.MemoryPlan(kv_shard="seq", kv_block_size=64), mesh)
+    assert heads > seq > 0
+
+
+def test_serving_block_capacity_is_exact(cls):
+    """The returned block count fits the budget and one more per-device
+    block does not — the inversion is exact w.r.t. the forward terms."""
+    mesh = {"data": 2, "model": 2}
+    plan = PR.MemoryPlan(kv_block_size=64)
+    budget = 24 * GIB
+    lanes = 4
+    nb = PR.serving_block_capacity(CFG, SHAPE, plan, cls, mesh, lanes=lanes,
+                                   hbm_budget=budget)
+    _, dp, _ = PR.mesh_factors(mesh)
+    assert nb > 0 and nb % dp == 0
+
+    sh = dataclasses.replace(SHAPE, global_batch=lanes * dp)
+    base = (PR.resident_bytes(CFG, sh, plan, mesh)
+            - PR.cache_bytes_per_device(CFG, sh, plan, mesh)
+            + lanes * PR.lane_bytes_per_device(CFG, sh, plan, mesh))
+    tra = PR.transient_bytes(CFG, sh, plan, cls, mesh)
+    per_block = PR.kv_block_bytes_per_device(CFG, SHAPE, plan, mesh)
+
+    def capacity_at(blocks_per_device):
+        return HW.capacity_from_requirement(
+            base + blocks_per_device * per_block, tra)
+
+    assert capacity_at(nb // dp) <= budget
+    assert capacity_at(nb // dp + 1) > budget
+
+
+def test_serving_block_capacity_monotone_and_bounds(cls):
+    mesh = {"data": 1, "model": 1}
+    plan = PR.MemoryPlan(kv_block_size=64)
+    caps = [PR.serving_block_capacity(CFG, SHAPE, plan, cls, mesh,
+                                      lanes=2, hbm_budget=b * GIB)
+            for b in (38, 40, 48, 64)]
+    assert caps == sorted(caps)
+    assert caps[-1] > caps[0] > 0
+    # nothing fits a toy budget
+    assert PR.serving_block_capacity(CFG, SHAPE, plan, cls, mesh, lanes=1,
+                                     hbm_budget=2**20) == 0
+    # more lanes eat the block budget
+    few = PR.serving_block_capacity(CFG, SHAPE, plan, cls, mesh, lanes=1,
+                                    hbm_budget=48 * GIB)
+    many = PR.serving_block_capacity(CFG, SHAPE, plan, cls, mesh, lanes=8,
+                                     hbm_budget=48 * GIB)
+    assert few > many > 0
+    with pytest.raises(ValueError, match="kv_block_size"):
+        PR.serving_block_capacity(CFG, SHAPE, PR.MemoryPlan(), cls, mesh)
+    with pytest.raises(ValueError, match="lanes"):
+        PR.serving_block_capacity(CFG, SHAPE, plan, cls, mesh, lanes=0)
+
+
+def test_serving_block_capacity_avg_context_frees_blocks(cls):
+    """Paged decode reads through block tables, so a short expected reach
+    shrinks the per-lane transient and leaves more budget for blocks."""
+    mesh = {"data": 1, "model": 1}
+    plan = PR.MemoryPlan(kv_block_size=64)
+    worst = PR.serving_block_capacity(CFG, SHAPE, plan, cls, mesh, lanes=8,
+                                      hbm_budget=48 * GIB)
+    short = PR.serving_block_capacity(CFG, SHAPE, plan, cls, mesh, lanes=8,
+                                      hbm_budget=48 * GIB, avg_context=128)
+    assert short > worst > 0
+
+
+# --- plan_serving(kv="paged"): expected concurrency over the block pool -----
+
+def test_plan_serving_paged_zero_compiles(monkeypatch, cls):
+    _no_compile(monkeypatch)
+    lens = [60] * 7 + [2000]                 # mostly-short traffic
+    got, splan = XP.plan_serving(CFG, SHAPE, n_devices=4, cls=cls,
+                                 hbm_budget=12 * GIB, kv="paged",
+                                 seq_lens=lens)
+    assert got is cls
+    assert splan.capacity > 0
+    assert splan.kv_block in XP.DEFAULT_KV_BLOCKS
+    assert splan.blocks > 0
+    assert "kv_block=" in splan.describe()
+    assert splan.slots(cap=3) == 3
+
+
+def test_plan_serving_paged_beats_ring_2x(cls):
+    """Acceptance pin (planner level): under a budget that admits exactly
+    two worst-case ring slots, the paged planner admits >= 2x the
+    concurrency on a mostly-short length distribution."""
+    mesh = {"data": 1, "model": 1}
+
+    def req(n):
+        sh = dataclasses.replace(SHAPE, global_batch=n)
+        return PR.predict(CFG, sh, PR.MemoryPlan(), cls, mesh).capacity_bytes
+
+    budget = (req(2) + req(3)) / 2
+
+    def pinned(kv_blocks):
+        return SP.serving_space(CFG, SHAPE, max_devices=1, data=(1,),
+                                model=(1,), kv_blocks=kv_blocks)
+
+    _, ring = XP.plan_serving(CFG, SHAPE, n_devices=1, cls=cls,
+                              hbm_budget=budget, space=pinned((0,)))
+    lens = [60] * 7 + [SHAPE.context]
+    _, paged = XP.plan_serving(CFG, SHAPE, n_devices=1, cls=cls,
+                               hbm_budget=budget, space=pinned((64, 256)),
+                               kv="paged", seq_lens=lens)
+    assert ring.capacity == 2
+    assert paged.capacity >= 2 * ring.capacity
+    assert paged.blocks >= paged.capacity    # enough blocks to cover lanes
+
+
+def test_serving_space_kv_block_knob():
+    space = SP.serving_space(CFG, SHAPE, max_devices=4,
+                             kv_blocks=(64, SHAPE.context * 2))
+    sizes = {c.plan.kv_block_size for c in space.candidates(CFG, SHAPE)}
+    assert sizes == {64}                     # oversize block filtered out
+
+
+# --- BlockAllocator: the jax-free free list ---------------------------------
+
+def test_allocator_alloc_free_reuse():
+    a = BlockAllocator(6, block_size=4)
+    a.reserve(1, 3)
+    ids = [a.alloc(1) for _ in range(3)]
+    assert ids == [1, 2, 3]                  # id 0 is the scratch block
+    assert a.in_use == 3 and a.committed == 3
+    a.reserve(2, 3)
+    assert not a.can_admit(1)                # fully committed
+    assert a.free(1) == ids
+    assert a.committed == 3 and a.in_use == 0
+    b2 = [a.alloc(2) for _ in range(3)]
+    assert b2 == [4, 5, 6]                   # FIFO reuse order
+    a.free(2)
+    assert a.free_blocks == 6
+    assert a.peak_in_use == 3
+    assert a.peak_committed == 6
+
+
+def test_allocator_guards():
+    with pytest.raises(ValueError, match="n_blocks"):
+        BlockAllocator(0, 4)
+    with pytest.raises(ValueError, match="block_size"):
+        BlockAllocator(4, 0)
+    a = BlockAllocator(4, 4)
+    a.reserve(1, 2)
+    with pytest.raises(RuntimeError, match="already holds"):
+        a.reserve(1, 1)
+    with pytest.raises(RuntimeError, match="over-commits"):
+        a.reserve(2, 3)
+    a.alloc(1)
+    a.alloc(1)
+    with pytest.raises(RuntimeError, match="reservation"):
+        a.alloc(1)                           # beyond its reservation
+
+
+def test_allocator_blocks_for():
+    a = BlockAllocator(8, block_size=4)
+    # written positions = prompt + max_new - 1
+    assert a.blocks_for(Request(0, 0, (1,) * 4, 1)) == 1     # 4 -> 1 block
+    assert a.blocks_for(Request(0, 0, (1,) * 4, 2)) == 2     # 5 -> 2
+    assert a.blocks_for(Request(0, 0, (1,) * 8, 9)) == 4     # 16 -> 4
+
+
+# --- the paged scheduling core ----------------------------------------------
+
+def _burst(n, gens, seed=0, prompts=(4, 8)):
+    return synthetic_trace(n, vocab_size=97, seed=seed, prompt_lens=prompts,
+                           gen_lens=gens, mean_interarrival=0)
+
+
+def test_paged_engine_matches_ring_engine_tokens():
+    """The paged pool changes WHERE cache bytes live, never WHAT the model
+    emits: scripted ring and paged runs produce identical completions."""
+    trace = _burst(8, (2, 4, 8))
+    ring = Engine(ScriptedExecutor(), 3).run(trace)
+    paged = Engine(ScriptedExecutor(), 3,
+                   allocator=BlockAllocator(16, 4)).run(trace)
+    assert ([c.tokens for c in ring.completions]
+            == [c.tokens for c in paged.completions])
+    assert paged.n_blocks == 16
+    assert 0 < paged.peak_blocks <= 16
+
+
+def test_paged_admission_bounded_by_blocks_not_lanes():
+    """With ample lanes but a tight block pool, the allocator is the
+    admission controller: concurrency stops at what the blocks cover."""
+    trace = _burst(6, (8,), prompts=(8,))    # each needs ceil(15/4)=4 blocks
+    alloc = BlockAllocator(9, 4)             # room for exactly 2 at a time
+    rep = Engine(ScriptedExecutor(), 6, allocator=alloc).run(trace)
+    assert rep.max_concurrent == 2
+    assert rep.peak_blocks <= 9
+    assert len(rep.completions) == 6         # block reuse drains the queue
+    assert alloc.committed == 0 and alloc.free_blocks == 9
+
+
+def test_paged_engine_deterministic():
+    trace = _burst(7, (1, 3, 9), seed=5)
+    r1 = Engine(ScriptedExecutor(), 3,
+                allocator=BlockAllocator(12, 4)).run(trace)
+    r2 = Engine(ScriptedExecutor(), 3,
+                allocator=BlockAllocator(12, 4)).run(trace)
+    assert r1 == r2
+
+
+def test_paged_engine_rejects_oversized_request():
+    eng = Engine(ScriptedExecutor(), 2, allocator=BlockAllocator(2, 4))
+    with pytest.raises(ValueError, match="never be admitted"):
+        eng.run([Request(rid=0, arrival=0, prompt=(5,) * 8, max_new=9)])
+
+
+def test_paged_acceptance_2x_concurrency_end_to_end(cls):
+    """Acceptance pin, hermetic: plan ring and paged under the SAME tight
+    budget, size engines from the plans, replay the same mostly-short
+    trace — the paged engine runs >= 2x the concurrent sequences and
+    completes identically."""
+    mesh = {"data": 1, "model": 1}
+    trace = synthetic_trace(12, vocab_size=97, seed=7, prompt_lens=(4, 8),
+                            gen_lens=(4, 4, 8, 248), mean_interarrival=0.5)
+    context = trace_context(trace)
+    shape = ShapeConfig("paged_e2e", DECODE, context, 8)
+    cls2 = _cls(CFG, shape)
+
+    def req(n):
+        sh = dataclasses.replace(shape, global_batch=n)
+        return PR.predict(CFG, sh, PR.MemoryPlan(), cls2,
+                          mesh).capacity_bytes
+
+    budget = (req(2) + req(3)) / 2
+
+    def pinned(kv_blocks):
+        return SP.serving_space(CFG, shape, max_devices=1, data=(1,),
+                                model=(1,), kv_blocks=kv_blocks)
+
+    _, ring = XP.plan_serving(CFG, shape, n_devices=1, cls=cls2,
+                              hbm_budget=budget, space=pinned((0,)))
+    _, paged = XP.plan_serving(
+        CFG, shape, n_devices=1, cls=cls2, hbm_budget=budget,
+        space=pinned((4, 8, 16)), kv="paged",
+        seq_lens=[len(r.prompt) + r.max_new - 1 for r in trace])
+
+    ring_rep = Engine(ScriptedExecutor(), ring.slots(cap=len(trace))).run(trace)
+    lanes = paged.slots(cap=len(trace))
+    per_seq = -(-context // paged.kv_block)
+    n_blocks = min(paged.blocks, lanes * per_seq)
+    paged_rep = Engine(ScriptedExecutor(), lanes,
+                       allocator=BlockAllocator(n_blocks,
+                                                paged.kv_block)).run(trace)
+    assert paged_rep.max_concurrent >= 2 * ring_rep.max_concurrent
+    assert ([c.tokens for c in ring_rep.completions]
+            == [c.tokens for c in paged_rep.completions])
+    assert paged_rep.ticks <= ring_rep.ticks
+
+
+# --- engine-level batched prefill -------------------------------------------
+
+def test_batched_prefill_shares_calls_per_bucket():
+    """6 burst requests, one prompt bucket, 4 slots: the first tick admits
+    4 in ONE prefill call; stragglers backfill with at most one call per
+    admission tick — calls strictly fewer than admissions."""
+    trace = _burst(6, (4,), prompts=(4,))
+    ex = ScriptedExecutor()
+    rep = Engine(ex, 4).run(trace)
+    assert rep.prefills == 6
+    assert ex.prefill_batches == rep.prefill_calls
+    assert rep.prefill_calls <= 3            # 1 burst call + <= 2 backfills
+    assert rep.prefill_calls < rep.prefills
+
+
+def test_batched_prefill_groups_by_bucket():
+    """Same-tick admissions in DIFFERENT buckets stay separate calls (one
+    padded compile shape per bucket)."""
+    trace = [Request(rid=0, arrival=0, prompt=(3,) * 4, max_new=2),
+             Request(rid=1, arrival=0, prompt=(3,) * 8, max_new=2),
+             Request(rid=2, arrival=0, prompt=(4,) * 4, max_new=2)]
+    ex = ScriptedExecutor()
+    rep = Engine(ex, 4).run(trace)
+    assert rep.prefills == 3
+    assert rep.prefill_calls == 2            # buckets {4, 8}
+    # token functions are per-request, so batching never changes outputs
+    solo = [ScriptedExecutor().prefill(0, r.prompt) for r in trace]
+    assert [c.tokens[0] for c in rep.completions] == solo
+
+
+# --- shape pins (jax.eval_shape: trace only, no compiles) -------------------
+
+def test_init_paged_pool_shapes():
+    from repro.runtime import serve_step as SS
+    cfg = get_config("gemma3-12b").reduced()   # window=8 locals + global
+    lanes, n_blocks, block, context = 3, 9, 4, 16
+    pool = SS.init_paged_pool(cfg, lanes, n_blocks, block, context,
+                              abstract=True)
+    K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    paged = ring = 0
+    for i, blk in enumerate(cfg.unit):
+        leaf = pool["units"][i]
+        if SS.is_paged_block(blk, context):
+            paged += 1
+            assert leaf["kb"].shape == (cfg.repeats, n_blocks, block, K, hd)
+            assert leaf["pos"].shape == (cfg.repeats, n_blocks, block)
+        else:
+            ring += 1
+            L = blk.cache_len(context)
+            assert leaf["k"].shape == (cfg.repeats, lanes, L, K, hd)
+    assert paged >= 1 and ring >= 1          # the mixed tree is exercised
+    with pytest.raises(ValueError, match="multiple"):
+        SS.init_paged_pool(cfg, lanes, n_blocks, 5, context)
+
+
+def test_paged_steps_preserve_pool_shapes():
+    import jax.numpy as jnp
+
+    from repro.models import init_params
+    from repro.runtime import serve_step as SS
+    cfg = get_config("gemma3-12b").reduced()
+    lanes, n_blocks, block, context = 2, 7, 4, 16
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda: init_params(key, cfg))
+    pool = SS.init_paged_pool(cfg, lanes, n_blocks, block, context,
+                              abstract=True)
+    shapes = jax.tree.map(lambda a: a.shape, pool)
+
+    prefill = SS.make_paged_prefill_step(cfg)
+    tokens = jax.ShapeDtypeStruct((lanes, 4), jnp.int32)
+    lane_ids = jax.ShapeDtypeStruct((lanes,), jnp.int32)
+    tables = jax.ShapeDtypeStruct((lanes, context // block), jnp.int32)
+    logits, new_pool = jax.eval_shape(
+        lambda p, t, l, tb, P: prefill(p, t, l, tb, P, context=context),
+        params, tokens, lane_ids, tables, pool)
+    assert jax.tree.map(lambda a: a.shape, new_pool) == shapes
+    assert logits.shape == (lanes, cfg.padded_vocab_size)
+
+    decode = SS.make_paged_decode_step(cfg)
+    tok1 = jax.ShapeDtypeStruct((lanes, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((lanes,), jnp.int32)
+    logits, new_pool = jax.eval_shape(
+        lambda p, t, po, tb, P: decode(p, t, po, tb, P, context=context),
+        params, tok1, pos, tables, pool)
+    assert jax.tree.map(lambda a: a.shape, new_pool) == shapes
+    assert logits.shape == (lanes, cfg.padded_vocab_size)
+
+    ids = jax.ShapeDtypeStruct((lanes,), jnp.int32)
+    reset = jax.eval_shape(SS.reset_pool_blocks, pool, ids)
+    assert jax.tree.map(lambda a: a.shape, reset) == shapes
+
+
+def test_batch_prefill_step_shapes():
+    import jax.numpy as jnp
+
+    from repro.models import init_params
+    from repro.models import model as M
+    from repro.runtime import serve_step as SS
+    cfg = get_config("recurrentgemma-9b").reduced()   # attn + recurrent mix
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda: init_params(key, cfg))
+    pool = M.init_cache(cfg, 3, 16, abstract=True)
+    step = SS.make_batch_prefill_step(cfg)
+    tokens = jax.ShapeDtypeStruct((3, 4), jnp.int32)
+    slots = jax.ShapeDtypeStruct((3,), jnp.int32)
+    logits, new_pool = jax.eval_shape(
+        lambda p, t, s, P: step(p, t, s, P, context=16),
+        params, tokens, slots, pool)
+    assert jax.tree.map(lambda a: a.shape, new_pool) \
+        == jax.tree.map(lambda a: a.shape, pool)
+    assert logits.shape == (3, cfg.padded_vocab_size)
