@@ -1,15 +1,25 @@
-"""Serving throughput: ring-slot vs paged-KV engine under the SAME HBM
-budget (the PR-5 acceptance benchmark).
+"""Serving frontier: ring-slot vs paged vs paged+compaction engines under
+the SAME per-budget HBM envelope, swept over several budgets (the PR-6
+acceptance benchmark).
 
-The budget is sized so the worst-case ring admission (every slot charged a
-full max-context ring) fits only a couple of sequences; the paged planner
-then re-answers the same question over a block pool with the trace's own
-length distribution. Reported per engine: admitted concurrency (the
-paper's capacity metric, per HBM byte), generated tokens/s wall and
-tokens/tick, decode-slot occupancy, pool occupancy, and compile counts —
-decode must stay ONE compile in both modes. Ring and paged token streams
-are asserted identical (scheduling and memory layout must never change
-outputs). Results land in BENCH_serving.json at the repo root.
+Each budget is sized between the k- and (k+1)-worst-case-ring-slot
+requirements (Eq. 11 headroom included), so ring admits exactly k
+sequences; the paged planners re-answer the same capacity question over a
+block pool with the trace's own length distribution, and the compacted
+planner additionally charges the decode transient at the EXPECTED lane
+width (bucketed), not the worst case. Per cell: admitted concurrency (the
+paper's capacity metric per HBM byte), generated tokens/s wall (warm —
+compiles paid by a throwaway run), tokens/tick, mean request latency in
+ticks, decode-lane occupancy, mean decode width, and compile counts.
+Token streams are asserted identical across all three modes (scheduling,
+memory layout, lane packing, and chunked prefill must never change
+outputs). The acceptance pin sits at the TIGHTEST budget — the regime the
+paper targets — where paged+compaction must reach >= ring tokens/s while
+admitting >= 4x ring's concurrency; looser budgets stay in the frontier
+as data (once the budget covers the whole long tail with worst-case
+rings, ring serves it without table indirection and catches back up —
+the README's "when ring still wins"). Results land in BENCH_serving.json
+at the repo root.
 """
 from __future__ import annotations
 
@@ -20,9 +30,13 @@ import time
 from benchmarks.common import emit, flush
 
 ARCH = "mistral-nemo-12b"            # pure global attention: every layer pages
+RING_SLOT_BUDGETS = (2, 3, 4)        # budget sized to admit exactly k rings
+LANE_CAP = 8                         # engine slot cap (ShapeConfig batch)
 
 
 def main():
+    import dataclasses
+
     import jax
 
     from repro.configs import get_config
@@ -38,111 +52,138 @@ def main():
     from repro.serving.executor import JaxExecutor, PagedJaxExecutor
 
     cfg = get_config(ARCH).reduced()
-    # mostly-short traffic with a long tail: the mix where worst-case ring
-    # slots waste the most (every short request still pays context bytes)
-    trace = synthetic_trace(12, vocab_size=cfg.vocab_size, seed=7,
+    # mostly-short traffic with a long-generation tail: the mix where
+    # worst-case ring slots waste the most (every short request still pays
+    # max-context bytes) and where lane compaction matters (the tail drains
+    # at low occupancy)
+    trace = synthetic_trace(12, vocab_size=cfg.vocab_size, seed=0,
                             prompt_lens=(4, 8), gen_lens=(4, 4, 8, 248),
                             mean_interarrival=0.5)
     context = trace_context(trace)
-    shape = ShapeConfig("bench_serve", DECODE, context, 8)
+    shape = ShapeConfig("bench_serve", DECODE, context, LANE_CAP)
     mesh_shape = {"data": 1, "model": 1}
     sim = MM.SimulatedMeasurer(mesh_shape)
     cls = PF.classify_workload(cfg, shape, None, n_points=2, base_seq=64,
                                measurer=sim)
-    # budget: exactly two worst-case ring slots fit (Eq. 11 headroom
-    # included) — midway between the 2- and 3-slot requirements so slack
-    # can't hand ring a free slot at reduced scale
-    import dataclasses
+    seq_lens = [len(r.prompt) + r.max_new - 1 for r in trace]
 
     def req(n):
         sh = dataclasses.replace(shape, global_batch=n)
         return PR.predict(cfg, sh, PR.MemoryPlan(), cls,
                           mesh_shape).capacity_bytes
 
-    budget = (req(2) + req(3)) / 2
-    seq_lens = [len(r.prompt) + r.max_new - 1 for r in trace]
-
     def pinned(kv_blocks):
         return SP.serving_space(cfg, shape, max_devices=1, data=(1,),
                                 model=(1,), kv_blocks=kv_blocks)
 
-    _, ring = XP.plan_serving(cfg, shape, n_devices=1, hbm_budget=budget,
-                              cls=cls, space=pinned((0,)))
-    _, paged = XP.plan_serving(cfg, shape, n_devices=1, hbm_budget=budget,
-                               cls=cls, space=pinned((4, 8, 16)),
-                               kv="paged", seq_lens=seq_lens)
+    def build(splan, mode):
+        n_slots = splan.slots(cap=min(LANE_CAP, len(trace)))
+        if mode == "ring":
+            return (JaxExecutor(params, cfg, n_slots=n_slots,
+                                context=context), None, n_slots, 0)
+        n_blocks = splan.pool_blocks(n_slots, context)
+        compact = mode == "paged_compact"
+        chunk = 2 * splan.kv_block if compact else 0
+        ex = PagedJaxExecutor(params, cfg, n_lanes=n_slots,
+                              n_blocks=n_blocks, kv_block=splan.kv_block,
+                              context=context, compact=compact, chunk=chunk)
+        return ex, BlockAllocator(n_blocks, splan.kv_block), n_slots, chunk
 
     params = init_params(jax.random.PRNGKey(0), cfg)
-    results = {}
-    for name, splan in (("ring", ring), ("paged", paged)):
-        n_slots = splan.slots(cap=len(trace))
-        if name == "paged":
-            n_blocks = splan.pool_blocks(n_slots, context)
-            executor = PagedJaxExecutor(params, cfg, n_lanes=n_slots,
-                                        n_blocks=n_blocks,
-                                        kv_block=splan.kv_block,
-                                        context=context)
-            allocator = BlockAllocator(n_blocks, splan.kv_block)
-        else:
-            executor = JaxExecutor(params, cfg, n_slots=n_slots,
-                                   context=context)
-            allocator = None
-        engine = Engine(executor, n_slots, allocator=allocator)
-        t0 = time.perf_counter()
-        report = engine.run(trace)
-        wall = time.perf_counter() - t0
-        compiles = executor.compile_counts()
-        results[name] = {
-            "capacity": splan.capacity,
-            "n_slots": n_slots,
-            "kv_block": splan.kv_block,
-            "blocks": (allocator.n_blocks if allocator else 0),
-            "peak_blocks": report.peak_blocks,
-            "max_concurrent": report.max_concurrent,
-            "concurrency_per_gib": splan.capacity / (budget / 2**30),
-            "tokens": report.generated_tokens,
-            "ticks": report.ticks,
-            "tokens_per_tick": report.throughput(),
-            "tokens_per_s": report.generated_tokens / wall,
-            "occupancy": report.occupancy(),
-            "block_occupancy": report.block_occupancy(),
-            "prefill_calls": report.prefill_calls,
-            "compiles": compiles,
-            "completions": [list(c.tokens) for c in report.completions],
-        }
-        emit(f"serve.{name}.{ARCH}", wall * 1e6,
-             f"capacity={splan.capacity};concurrent={report.max_concurrent};"
-             f"tokens_per_tick={report.throughput():.2f};"
-             f"occupancy={report.occupancy():.3f};"
-             f"decode_compiles={compiles['decode']}")
-
-    same_tokens = (results["ring"].pop("completions")
-                   == results["paged"].pop("completions"))
-    ratio = (results["paged"]["max_concurrent"]
-             / max(results["ring"]["max_concurrent"], 1))
+    frontier = []
+    for k in RING_SLOT_BUDGETS:
+        budget = (req(k) + req(k + 1)) / 2
+        _, ring = XP.plan_serving(cfg, shape, n_devices=1, hbm_budget=budget,
+                                  cls=cls, space=pinned((0,)))
+        _, paged = XP.plan_serving(cfg, shape, n_devices=1, hbm_budget=budget,
+                                   cls=cls, space=pinned((4, 8, 16)),
+                                   kv="paged", seq_lens=seq_lens)
+        _, pcomp = XP.plan_serving(cfg, shape, n_devices=1, hbm_budget=budget,
+                                   cls=cls, space=pinned((4, 8, 16)),
+                                   kv="paged", seq_lens=seq_lens,
+                                   compact=True)
+        cells = {}
+        tokens = {}
+        for mode, splan in (("ring", ring), ("paged", paged),
+                            ("paged_compact", pcomp)):
+            # warm run pays every compile; the timed run measures serving
+            executor, allocator, n_slots, chunk = build(splan, mode)
+            Engine(executor, n_slots, allocator=allocator,
+                   chunk_prefill=chunk).run(trace)
+            compiles = executor.compile_counts()
+            executor, allocator, n_slots, chunk = build(splan, mode)
+            engine = Engine(executor, n_slots, allocator=allocator,
+                            chunk_prefill=chunk)
+            t0 = time.perf_counter()
+            report = engine.run(trace)
+            wall = time.perf_counter() - t0
+            tokens[mode] = [list(c.tokens) for c in report.completions]
+            widths = (report.decode_lane_tokens / report.decode_ticks
+                      if report.decode_ticks else 0.0)
+            cells[mode] = {
+                "capacity": splan.capacity,
+                "n_slots": n_slots,
+                "kv_block": splan.kv_block,
+                "blocks": (allocator.n_blocks if allocator else 0),
+                "peak_blocks": report.peak_blocks,
+                "max_concurrent": report.max_concurrent,
+                "concurrency_per_gib": splan.capacity / (budget / 2**30),
+                "tokens": report.generated_tokens,
+                "ticks": report.ticks,
+                "tokens_per_tick": report.throughput(),
+                "tokens_per_s": report.generated_tokens / wall,
+                "mean_latency_ticks": report.mean_latency(),
+                "occupancy": report.occupancy(),
+                "mean_decode_width": widths,
+                "chunk_calls": report.chunk_calls,
+                "prefill_calls": report.prefill_calls,
+                "compiles": compiles,
+            }
+            emit(f"serve.{mode}.b{k}.{ARCH}", wall * 1e6,
+                 f"concurrent={report.max_concurrent};"
+                 f"tokens_per_s={cells[mode]['tokens_per_s']:.0f};"
+                 f"mean_latency={report.mean_latency():.1f};"
+                 f"occupancy={report.occupancy():.3f};"
+                 f"mean_width={widths:.1f}")
+        same = (tokens["ring"] == tokens["paged"] == tokens["paged_compact"])
+        ratio = (cells["paged_compact"]["max_concurrent"]
+                 / max(cells["ring"]["max_concurrent"], 1))
+        speed = (cells["paged_compact"]["tokens_per_s"]
+                 / cells["ring"]["tokens_per_s"])
+        frontier.append({
+            "ring_slots": k,
+            "budget_bytes": budget,
+            "token_identical": bool(same),
+            "concurrency_ratio": ratio,
+            "tokens_per_s_ratio": speed,
+            **cells,
+        })
+        emit(f"serve.frontier.b{k}.{ARCH}", 0.0,
+             f"compact_vs_ring_concurrency={ratio:.1f}x;"
+             f"compact_vs_ring_tokens_per_s={speed:.2f}x;"
+             f"token_identical={same}")
+        if not same:
+            raise SystemExit(f"budget@{k}: token streams diverged")
+    tight = frontier[0]
+    if tight["tokens_per_s_ratio"] < 1.0:
+        raise SystemExit("tightest budget: paged+compaction reached only "
+                         f"{tight['tokens_per_s_ratio']:.2f}x ring tokens/s")
+    if tight["concurrency_ratio"] < 4.0:
+        raise SystemExit("tightest budget: paged+compaction admitted only "
+                         f"{tight['concurrency_ratio']:.1f}x ring "
+                         "concurrency")
     out = {
         "arch": ARCH,
-        "budget_bytes": budget,
         "requests": len(trace),
         "context": context,
-        "token_identical": bool(same_tokens),
-        "concurrency_ratio": ratio,
-        "ring": results["ring"],
-        "paged": results["paged"],
+        "lane_cap": LANE_CAP,
+        "frontier": frontier,
     }
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir,
                         "BENCH_serving.json")
     with open(os.path.normpath(path), "w") as f:
         json.dump(out, f, indent=2)
-    emit(f"serve.ratio.{ARCH}", 0.0,
-         f"paged_vs_ring_concurrency={ratio:.1f}x;"
-         f"token_identical={same_tokens};"
-         f"decode_compiles_equal="
-         f"{results['paged']['compiles']['decode'] <= results['ring']['compiles']['decode']}")
-    if not same_tokens:
-        raise SystemExit("ring and paged token streams diverged")
-    if ratio < 2.0:
-        raise SystemExit(f"paged admitted only {ratio:.2f}x ring concurrency")
+        f.write("\n")
     flush()
 
 

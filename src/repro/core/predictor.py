@@ -326,6 +326,7 @@ def serving_block_capacity(cfg: ModelConfig, shape: ShapeConfig,
                            hbm_budget: Optional[float] = None,
                            factors: Optional[dict] = None,
                            avg_context: Optional[int] = None,
+                           decode_width: Optional[int] = None,
                            max_per_device: int = 1 << 22) -> int:
     """Eq. 11 run backwards over KV BLOCKS instead of whole-sequence slots.
 
@@ -344,6 +345,12 @@ def serving_block_capacity(cfg: ModelConfig, shape: ShapeConfig,
     tables, so a lane's transient working set is the blocks it actually
     allocated, not the pool-wide max context the ring engine's padded
     decode streams. Defaults to worst-case `shape.context`.
+
+    `decode_width` models lane compaction: a compacting engine runs its
+    decode step at the bucketed width covering the ACTIVE lanes, so the
+    step transient scales with that width, not the pool width — lane-fixed
+    resident state stays charged at `lanes` above. Defaults to `lanes`
+    (full-width decode).
     """
     if plan.kv_block_size < 1:
         raise ValueError("serving_block_capacity needs a paged plan "
@@ -363,7 +370,10 @@ def serving_block_capacity(cfg: ModelConfig, shape: ShapeConfig,
         # block-align the expected reach; never beyond the worst case
         b = plan.kv_block_size
         reach = min(-(-max(int(avg_context), 1) // b) * b, shape.context)
-        sh_t = dataclasses.replace(sh, seq_len=reach)
+        sh_t = dataclasses.replace(sh_t, seq_len=reach)
+    if decode_width is not None:
+        w = min(max(int(decode_width), 1), lanes)
+        sh_t = dataclasses.replace(sh_t, global_batch=w * dp)
     tra = transient_bytes(cfg, sh_t, plan, cls, mesh_shape, mode, factors)
     per_block = kv_block_bytes_per_device(cfg, sh, plan, mesh_shape)
 

@@ -129,26 +129,32 @@ def _paged_kernel(tbl_ref, pos_ref, cpos_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32) * scale         # [K, G, hd]
-    k = k_ref[0].astype(jnp.float32)                 # [bs, K, hd]
-    v = v_ref[0].astype(jnp.float32)
-    pos = pos_ref[0, 0]                              # scalar
-    cpos = cpos_ref[0, :]                            # [bs]
-    s = jnp.einsum("kgh,lkh->kgl", q, k)             # [K, G, bs]
-    mask = (cpos <= pos) & (cpos >= 0) & (tbl_ref[bi, li] >= 0)
-    if window is not None:
-        mask &= cpos > pos - window
-    if chunk is not None:
-        mask &= (cpos // chunk) == (pos // chunk)
-    s = jnp.where(mask[None, None, :], s, NEG_INF)
-    m_prev = m_ref[...]                              # [K, G]
-    m_new = jnp.maximum(m_prev, s.max(axis=-1))
-    p = jnp.where(mask[None, None, :], jnp.exp(s - m_new[..., None]), 0.0)
-    corr = jnp.exp(m_prev - m_new)
-    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
-    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
-        "kgl,lkh->kgh", p, v)
-    m_ref[...] = m_new
+    # an unassigned logical block (table entry -1) contributes nothing to
+    # the softmax — skip its whole merge (its DMA clamps to scratch block
+    # 0, but the compute is predicated off)
+    @pl.when(tbl_ref[bi, li] >= 0)
+    def _merge():
+        q = q_ref[0].astype(jnp.float32) * scale     # [K, G, hd]
+        k = k_ref[0].astype(jnp.float32)             # [bs, K, hd]
+        v = v_ref[0].astype(jnp.float32)
+        pos = pos_ref[0, 0]                          # scalar
+        cpos = cpos_ref[0, :]                        # [bs]
+        s = jnp.einsum("kgh,lkh->kgl", q, k)         # [K, G, bs]
+        mask = (cpos <= pos) & (cpos >= 0)
+        if window is not None:
+            mask &= cpos > pos - window
+        if chunk is not None:
+            mask &= (cpos // chunk) == (pos // chunk)
+        s = jnp.where(mask[None, None, :], s, NEG_INF)
+        m_prev = m_ref[...]                          # [K, G]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.where(mask[None, None, :], jnp.exp(s - m_new[..., None]),
+                      0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+            "kgl,lkh->kgh", p, v)
+        m_ref[...] = m_new
 
     @pl.when(li == nl - 1)
     def _finalize():
@@ -162,7 +168,13 @@ def paged_decode_attention_fwd(q, k_pool, v_pool, pool_pos, block_tables,
                                chunk: Optional[int] = None,
                                interpret: bool = False):
     """q [b,K,G,hd]; pools [n_blocks,block,K,hd]; pool_pos [n_blocks,block];
-    block_tables [b,max_blocks] int32 (-1 = unassigned); positions [b]."""
+    block_tables [b,max_blocks] int32 (-1 = unassigned); positions [b].
+
+    The grid's KV extent is the TABLE width, not the pool-wide max-context
+    block count: callers that trim tables to the blocks actually allocated
+    (serving lane compaction does) shrink the grid — and the unassigned
+    tail that remains is skipped by the in-kernel predicate — so decode
+    work tracks what sequences wrote, not what they could write."""
     if pltpu is None:  # pragma: no cover
         raise NotImplementedError("paged decode needs pallas TPU grid specs")
     b, K, G, hd = q.shape

@@ -75,6 +75,16 @@ def main(argv=None):
     ap.add_argument("--kv-block", type=int, default=0,
                     help="paged KV block size in positions; 0 = search "
                          "the serving lattice for it")
+    ap.add_argument("--compact", action="store_true",
+                    help="paged only: compile the decode step at bucketed "
+                         "lane widths and pack active lanes into the "
+                         "smallest covering bucket each tick — partially "
+                         "occupied ticks stop paying full pool width")
+    ap.add_argument("--chunk-prefill", type=int, default=0,
+                    help="paged only: split prompts longer than this into "
+                         "chunks of this many positions, interleaved with "
+                         "decode ticks (rounded up to a kv-block multiple; "
+                         "0 = whole-prompt prefill at admission)")
     ap.add_argument("--max-slots", type=int, default=8,
                     help="cap on the engine's slot pool / decode lanes "
                          "(the WSMC capacity is the bound; this caps it "
@@ -88,6 +98,9 @@ def main(argv=None):
 
     if args.forbid_plan_compiles and args.backend == "compile":
         ap.error("--forbid-plan-compiles contradicts --backend compile")
+    if args.kv != "paged" and (args.compact or args.chunk_prefill):
+        ap.error("--compact/--chunk-prefill need --kv paged (the ring "
+                 "executor has no lane buckets or block tables)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -123,7 +136,8 @@ def main(argv=None):
         # trace's own length distribution (written positions per request)
         paged_kw = dict(kv="paged", kv_blocks=kv_blocks,
                         seq_lens=[len(r.prompt) + r.max_new - 1
-                                  for r in trace])
+                                  for r in trace],
+                        compact=args.compact)
     try:
         if args.mesh == "auto":
             measurer = None
@@ -171,17 +185,22 @@ def main(argv=None):
     reports = []
     with mesh, axis_rules(strategy.rules(), mesh=mesh):
         for policy in policies:
+            chunk = 0
             if args.kv == "paged":
+                if args.chunk_prefill:       # align up to the block size
+                    chunk = -(-args.chunk_prefill // splan.kv_block) \
+                        * splan.kv_block
                 executor = PagedJaxExecutor(
                     params, cfg, n_lanes=n_slots, n_blocks=n_blocks,
-                    kv_block=splan.kv_block, context=context)
+                    kv_block=splan.kv_block, context=context,
+                    compact=args.compact, chunk=chunk)
                 allocator = BlockAllocator(n_blocks, splan.kv_block)
             else:
                 executor = JaxExecutor(params, cfg, n_slots=n_slots,
                                        context=context)
                 allocator = None
             engine = Engine(executor, n_slots, policy=policy,
-                            allocator=allocator)
+                            allocator=allocator, chunk_prefill=chunk)
             t0 = time.time()
             report = engine.run(trace)
             dt = time.time() - t0

@@ -337,6 +337,70 @@ def _paged_gather(cache, block_tables):
     }
 
 
+def _paged_write_chunk(cache, block_tables, k, v, positions):
+    """Write a prompt chunk per lane (k/v [b, C, K, hd], positions [b, C],
+    -1 = padding) into the pool through the block tables. Padding entries
+    and entries whose logical block is unmapped land in the scratch block
+    with pos -1, so nothing real can be clobbered and nothing stale can
+    pass the mask."""
+    n_blocks, bsz = cache["pos"].shape
+    m_blocks = block_tables.shape[1]
+    valid = positions >= 0
+    safe_pos = jnp.where(valid, positions, 0)
+    lb = jnp.clip(safe_pos // bsz, 0, m_blocks - 1)          # [b, C]
+    phys = jnp.take_along_axis(block_tables, lb, axis=1)
+    phys = jnp.where(valid & (phys >= 0), phys, 0)           # scratch
+    off = safe_pos % bsz
+    return {
+        "kb": cache["kb"].at[phys, off].set(k.astype(cache["kb"].dtype)),
+        "vb": cache["vb"].at[phys, off].set(v.astype(cache["vb"].dtype)),
+        "pos": cache["pos"].at[phys, off].set(
+            jnp.where(valid, positions, -1)),
+    }
+
+
+def _chunk_append(q, k, v, cache, blk: BlockSpec, positions, block_tables):
+    """Chunked prefill: append a prompt chunk to an EXISTING cache and
+    attend over history + chunk — exactly the chunk's slice of a full
+    prefill, so interleaving chunks with decode ticks changes scheduling
+    but never tokens. Paged layers scatter through the block table first
+    and attend over the gathered virtual ring (the chunk's own keys
+    included, causal mask ordering them); per-lane rings attend over
+    concat(ring, chunk) and then keep only the last cache_len positions
+    (slot = pos % L stays collision-free because the kept span is at most
+    L consecutive positions)."""
+    b, C = positions.shape
+    valid = positions >= 0
+    if is_paged_cache(cache):
+        assert block_tables is not None, \
+            "paged cache needs block_tables for chunked prefill"
+        new_cache = _paged_write_chunk(cache, block_tables, k, v, positions)
+        virt = _paged_gather(new_cache, block_tables)
+        o = _sdpa(q, virt["k"], virt["v"],
+                  _mask(positions, virt["pos"], blk))
+        return o, new_cache
+    L = cache["pos"].shape[1]
+    kcat = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)], axis=1)
+    vcat = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)], axis=1)
+    pcat = jnp.concatenate([cache["pos"], jnp.where(valid, positions, -1)],
+                           axis=1)
+    o = _sdpa(q, kcat, vcat, _mask(positions, pcat, blk))
+    # ring write-back: only positions inside the final window survive
+    # (a chunk longer than the ring would otherwise wrap onto itself)
+    row_end = jnp.max(jnp.where(valid, positions, -1), axis=1, keepdims=True)
+    keep = valid & (positions > row_end - L)
+    slot = jnp.where(keep, positions % L, L)                 # L -> dropped
+    bidx = jnp.arange(b)[:, None]
+    new_cache = {
+        "k": cache["k"].at[bidx, slot].set(k.astype(cache["k"].dtype),
+                                           mode="drop"),
+        "v": cache["v"].at[bidx, slot].set(v.astype(cache["v"].dtype),
+                                           mode="drop"),
+        "pos": cache["pos"].at[bidx, slot].set(positions, mode="drop"),
+    }
+    return o, new_cache
+
+
 def _paged_decode(q, cache, blk: BlockSpec, pos1, k1, v1, block_tables,
                   settings: AttnSettings):
     """One decode step against the paged pool: scatter the new K/V entry,
@@ -386,7 +450,9 @@ def attn_apply(params, cfg: ModelConfig, blk: BlockSpec, x, positions,
         msize = mesh.shape.get("model", 1) if mesh is not None else 1
         use_repeat = (G > 1 and msize > 1 and K % msize != 0
                       and (K * G) % msize == 0)
-    use_repeat = use_repeat and G > 1 and not decode
+    appending = (not decode and cache is not None
+                 and not isinstance(cache, str))
+    use_repeat = use_repeat and G > 1 and not decode and not appending
     if not use_repeat:
         # kv-head sharding (replicates over model when K doesn't divide it)
         q = shard(q, "batch", "seq", "kv_heads", None, None)
@@ -415,6 +481,11 @@ def attn_apply(params, cfg: ModelConfig, blk: BlockSpec, x, positions,
                 "pos": cache["pos"].at[bidx, slot].set(pos1),
             }
             o = _decode_attend(q, new_cache, blk, pos1)
+    elif appending:
+        # chunked prefill: a real cache on the sequence path means "append
+        # this chunk to what the earlier chunks already wrote"
+        o, new_cache = _chunk_append(q, k, v, cache, blk, positions,
+                                     block_tables)
     else:
         kpos = positions
         if use_repeat:

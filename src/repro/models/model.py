@@ -270,8 +270,9 @@ def apply(params, cfg: ModelConfig, tokens, *, positions=None,
           block_tables=None):
     """Forward pass.
 
-    tokens [b, s] (s=1 for decode); positions [b] for decode else implied
-    arange; prefix_embeds [b, p, d] for modality-stub archs; block_tables
+    tokens [b, s] (s=1 for decode); positions [b] for decode, [b, s]
+    absolute positions for a mid-prompt chunk (else implied arange);
+    prefix_embeds [b, p, d] for modality-stub archs; block_tables
     [b, max_blocks] maps each sequence's logical KV blocks to physical
     blocks of a paged pool cache (serving decode; -1 = unassigned).
     Returns (logits, new_cache_or_None, aux).
@@ -285,6 +286,11 @@ def apply(params, cfg: ModelConfig, tokens, *, positions=None,
     if decode:
         assert positions is not None
         pos = positions[:, None]                      # [b, 1]
+    elif positions is not None:
+        # explicit absolute positions [b, s] (chunked prefill appends a
+        # mid-prompt slice; -1 marks padding)
+        assert prefix_embeds is None
+        pos = positions
     else:
         pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     ctx = context or s

@@ -275,6 +275,100 @@ def make_paged_decode_step(cfg: ModelConfig,
     return decode_paged
 
 
+def _is_paged_leaf(P) -> bool:
+    return isinstance(P, dict) and "kb" in P
+
+
+def gather_pool_lanes(pool, lane_ids):
+    """Sub-pool view of a paged pool at lanes `lane_ids` [w]: per-lane
+    leaves (recurrent states, short windowed rings) are gathered down to
+    width w, paged block-pool leaves pass through whole (block tables route
+    them, so they need no lane axis). Padding ids >= n_lanes clamp to a
+    real lane on the read — harmless, because scatter_pool_lanes drops
+    their write-back."""
+    def take(axis):
+        def f(P):
+            idx = ((slice(None),) * axis
+                   + (jnp.clip(lane_ids, 0, P.shape[axis] - 1),))
+            return P[idx]
+        return f
+
+    return {
+        "units": [P if _is_paged_leaf(P) else jax.tree.map(take(1), P)
+                  for P in pool["units"]],
+        "tail": [P if _is_paged_leaf(P) else jax.tree.map(take(0), P)
+                 for P in pool["tail"]],
+    }
+
+
+def scatter_pool_lanes(pool, sub, lane_ids):
+    """Write a width-w sub-pool (gather_pool_lanes layout) back into the
+    full pool: per-lane rows land at `lane_ids` (ids >= n_lanes are padding
+    and DROPPED), updated paged leaves replace the pool's wholesale."""
+    def put(axis):
+        def f(P, o):
+            idx = (slice(None),) * axis + (lane_ids,)
+            return P.at[idx].set(o.astype(P.dtype), mode="drop")
+        return f
+
+    return {
+        "units": [o if _is_paged_leaf(P) else jax.tree.map(put(1), P, o)
+                  for P, o in zip(pool["units"], sub["units"])],
+        "tail": [o if _is_paged_leaf(P) else jax.tree.map(put(0), P, o)
+                 for P, o in zip(pool["tail"], sub["tail"])],
+    }
+
+
+def make_compact_decode_step(cfg: ModelConfig,
+                             settings: Optional[M.ModelSettings] = None):
+    """Paged decode at a COMPACTED width w <= n_lanes: gather the w active
+    lanes' per-lane caches, run one batched decode at width w through their
+    (trimmed) block tables, scatter the updates back. jax.jit specializes
+    per (w, table-width) bucket, so each touched bucket costs one compile
+    and a tick with 3 active lanes stops paying for the padded remainder
+    of the pool."""
+    settings = settings or M.ModelSettings()
+
+    def decode_compact(params, tokens, positions, tables, lane_ids, pool,
+                       context: int):
+        sub = gather_pool_lanes(pool, lane_ids)
+        logits, new_sub, _ = M.apply(params, cfg, tokens,
+                                     positions=positions, cache=sub,
+                                     decode=True, settings=settings,
+                                     context=context, block_tables=tables)
+        return logits[:, -1], scatter_pool_lanes(pool, new_sub, lane_ids)
+
+    return decode_compact
+
+
+def make_chunk_prefill_step(cfg: ModelConfig,
+                            settings: Optional[M.ModelSettings] = None):
+    """Chunked prefill: run tokens [w, C] at absolute positions [w, C]
+    (-1 = padding) against the LIVE pool — attention layers append the
+    chunk to what earlier chunks wrote (paged layers through `tables`,
+    per-lane rings in place) and attend over history + chunk, which is
+    exactly that slice of a whole-prompt prefill. Returns each row's
+    last-valid-position logits (meaningful for rows whose chunk completes
+    the prompt) and the updated pool. One compile per (width bucket,
+    table width); C is fixed by the engine's chunk size."""
+    settings = settings or M.ModelSettings()
+    psettings = dataclasses.replace(settings, build_cache=True)
+
+    def prefill_chunk(params, tokens, positions, tables, lane_ids, pool,
+                      context: int):
+        sub = gather_pool_lanes(pool, lane_ids)
+        logits, new_sub, _ = M.apply(params, cfg, tokens,
+                                     positions=positions, cache=sub,
+                                     decode=False, settings=psettings,
+                                     context=context, block_tables=tables)
+        lens = jnp.sum(positions >= 0, axis=1)
+        idx = jnp.maximum(lens - 1, 0)
+        last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+        return last, scatter_pool_lanes(pool, new_sub, lane_ids)
+
+    return prefill_chunk
+
+
 def pool_block_size(pool, default: int = 0) -> int:
     """The kv block size a paged pool was built with (from any paged leaf).
     `default` covers pools with nothing to page (all-recurrent or
@@ -335,7 +429,11 @@ def _jitted_serve_steps(cfg, settings, mode: str, ctx_key):
         decode = jax.jit(make_paged_decode_step(cfg, settings),
                          static_argnames=("context",), donate_argnums=(4,))
         reset = jax.jit(reset_pool_blocks, donate_argnums=(0,))
-        return prefill, decode, reset
+        compact = jax.jit(make_compact_decode_step(cfg, settings),
+                          static_argnames=("context",), donate_argnums=(5,))
+        chunk = jax.jit(make_chunk_prefill_step(cfg, settings),
+                        static_argnames=("context",), donate_argnums=(5,))
+        return prefill, decode, reset, compact, chunk
     raise ValueError(mode)
 
 
@@ -360,10 +458,13 @@ def slot_serve_steps(cfg: ModelConfig,
 
 def paged_serve_steps(cfg: ModelConfig,
                       settings: Optional[M.ModelSettings] = None):
-    """Jitted (batched-prefill, decode, reset-blocks) triple for the paged
-    block pool, memoized like slot_serve_steps. One decode compile at lane
-    width serves any pool occupancy; prefill compiles once per prompt
-    bucket (padded to lane width)."""
+    """Jitted (batched-prefill, decode, reset-blocks, compact-decode,
+    chunk-prefill) tuple for the paged block pool, memoized like
+    slot_serve_steps. The full-width decode is one compile at lane width;
+    the compact decode specializes per touched (lane, table) width bucket;
+    prefill compiles once per prompt bucket (padded to lane width) and
+    chunk-prefill once per touched width bucket at the fixed chunk
+    length."""
     return _jitted_serve_steps(cfg, settings, "paged", _sharding_ctx_key())
 
 

@@ -235,14 +235,28 @@ def _expected_blocks(seq_lens: Sequence[int], block: int) -> float:
     return sum(-(-s // block) for s in lens) / len(lens)
 
 
+def _bucket_cover(n: int, cap: int) -> int:
+    """Smallest power-of-two >= n, capped at `cap` (the executor's lane
+    bucket the compacting engine would actually run at)."""
+    w = 1
+    while w < min(n, cap):
+        w *= 2
+    return min(w, cap)
+
+
 def _paged_concurrency(cfg, shape, cand, cls, budget, mode, hw, factors,
-                       seq_lens, max_lanes: int = 1 << 14):
+                       seq_lens, max_lanes: int = 1 << 14,
+                       compact: bool = False):
     """Expected admitted concurrency for one paged serving candidate: the
     largest per-device lane count whose block pool still covers the
     EXPECTED per-sequence demand (blocks(lanes) >= lanes * E[blocks/seq]).
     blocks() falls as lanes rise (lane-fixed state eats the budget) while
     demand rises, so the balance point is an exact monotone search.
-    Returns (global_concurrency, global_blocks)."""
+    With `compact`, the decode transient is charged at the bucketed
+    EXPECTED active width (lanes scaled by the trace's mean/max length
+    ratio — the same expected-case admission stance as avg_context)
+    instead of the full lane width. Returns (global_concurrency,
+    global_blocks)."""
     from repro.core import predictor as PR
     _, dp, _ = PR.mesh_factors(cand.mesh_shape)
     e_blocks = _expected_blocks(seq_lens, cand.plan.kv_block_size)
@@ -252,14 +266,17 @@ def _paged_concurrency(cfg, shape, cand, cls, budget, mode, hw, factors,
     # could never admit it (expected demand alone would undersize the pool
     # on a short-heavy trace with a long tail)
     max_seq_blocks = max(-(-s // cand.plan.kv_block_size) for s in lens)
+    e_frac = (sum(lens) / len(lens)) / max(lens)     # mean/max in (0, 1]
     _blocks_memo: dict = {}
 
     def blocks_at(lanes: int) -> int:
         if lanes not in _blocks_memo:
+            width = (_bucket_cover(max(1, int(-(-(lanes * e_frac) // 1))),
+                                   lanes) if compact else None)
             _blocks_memo[lanes] = PR.serving_block_capacity(
                 cfg, shape, cand.plan, cls, cand.mesh_shape, lanes=lanes,
                 mode=mode, hw=hw, hbm_budget=budget, factors=factors,
-                avg_context=avg_context) // dp
+                avg_context=avg_context, decode_width=width) // dp
         return _blocks_memo[lanes]
 
     def feasible(lanes: int) -> bool:
@@ -290,7 +307,8 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
                  space: Optional[SP.ConfigSpace] = None,
                  kv: str = "ring",
                  kv_blocks: Sequence[int] = DEFAULT_KV_BLOCKS,
-                 seq_lens: Optional[Sequence[int]] = None):
+                 seq_lens: Optional[Sequence[int]] = None,
+                 compact: bool = False):
     """The serving-engine planning entry: walk the serving lattice
     (kv_shard x kv_block_size x data x model, pipe pinned —
     space.serving_space) and pick the candidate that maximizes admitted
@@ -305,7 +323,9 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
     trace's length distribution (`seq_lens`: written positions per
     request; defaults to worst-case `shape.context`), via
     `predictor.serving_block_capacity` — admit by actual footprint, not
-    worst case. Returns (Classification, ServingPlan)."""
+    worst case. `compact` (paged only) charges the decode transient at the
+    compacting engine's bucketed expected width instead of the full lane
+    width. Returns (Classification, ServingPlan)."""
     from repro.core import predictor as PR   # lazy, like profiler below
     from repro.core import profiler as PF
     if kv not in ("ring", "paged"):
@@ -332,7 +352,8 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
     for cand in cands:                       # fastest-first => ties keep speed
         if kv == "paged":
             cap, blocks = _paged_concurrency(cfg, shape, cand, cls, budget,
-                                             mode, hw, factors, seq_lens)
+                                             mode, hw, factors, seq_lens,
+                                             compact=compact)
         else:
             cap = PR.serving_capacity(cfg, shape, cand.plan, cls,
                                       cand.mesh_shape, mode=mode, hw=hw,

@@ -3,8 +3,11 @@ KV pool.
 
 The scheduler is deliberately jax-free: it speaks to the model through an
 executor protocol (``prefill_batch(slots, prompts, tables=None) ->
-first_tokens``, ``decode(tokens, positions, tables=None) ->
-next_tokens``, ``fresh_blocks(ids)``) so the admission / claim-free /
+first_tokens``, ``decode(tokens, positions, tables=None, lanes=None) ->
+next_tokens``, ``fresh_blocks(ids)``, plus the optional
+``decode_width(n_active)`` width probe and ``prefill_chunks(lanes,
+chunks, starts, tables, final)`` for chunked prefill) so the admission /
+claim-free /
 accounting core is a deterministic state machine the hermetic test tier
 can drive with a scripted executor, while the real
 `serving.executor.JaxExecutor` / `PagedJaxExecutor` run jitted batched
@@ -120,6 +123,7 @@ class _Active:
     remaining: int               # decode steps still owed
     tokens: List[int]            # generated so far (first from prefill)
     table: List[int] = dataclasses.field(default_factory=list)  # paged: phys block ids
+    pending: Tuple[int, ...] = ()  # prompt tail not yet prefilled (chunked)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,13 +153,21 @@ class ServeReport:
     ticks: int                   # total engine ticks elapsed
     decode_ticks: int            # ticks that executed a batched decode step
     useful_slot_tokens: int      # sum over decode ticks of active slots
-    idle_ticks: int              # ticks that neither admitted nor decoded
+    idle_ticks: int              # ticks with no admission, prefill chunk,
+                                 # or decode (pure waiting)
     peak_queue: int
     max_concurrent: int
     prefills: int
     prefill_calls: int = 0       # batched prefill invocations (<= prefills)
     n_blocks: int = 0            # paged pool size (0 = ring slots)
     peak_blocks: int = 0         # peak physical blocks in use (paged)
+    admit_ticks: int = 0         # ticks that only admitted / chunked a
+                                 # prompt (no decode) — the invariant is
+                                 # ticks == decode + admit + idle
+    decode_lane_tokens: int = 0  # sum over decode ticks of the width the
+                                 # executor actually computed at (== n_slots
+                                 # x decode_ticks without lane compaction)
+    chunk_calls: int = 0         # batched chunk-prefill invocations
 
     @property
     def generated_tokens(self) -> int:
@@ -164,8 +176,9 @@ class ServeReport:
     def occupancy(self) -> float:
         """Useful-token fraction of decode-step slots: of all the slot
         positions the batched decode steps computed, how many produced a
-        token a request actually wanted."""
-        denom = self.decode_ticks * self.n_slots
+        token a request actually wanted. Lane compaction shrinks the
+        denominator to the widths actually run."""
+        denom = self.decode_lane_tokens or self.decode_ticks * self.n_slots
         return self.useful_slot_tokens / denom if denom else 0.0
 
     def throughput(self) -> float:
@@ -184,6 +197,11 @@ class ServeReport:
     def describe(self) -> str:
         paged = (f" blocks={self.peak_blocks}/{self.n_blocks}"
                  if self.n_blocks else "")
+        if self.decode_ticks and self.decode_lane_tokens:
+            paged += (f" mean_width="
+                      f"{self.decode_lane_tokens / self.decode_ticks:.1f}")
+        if self.chunk_calls:
+            paged += f" chunk_calls={self.chunk_calls}"
         return (f"[{self.policy}] slots={self.n_slots} "
                 f"completed={len(self.completions)} "
                 f"tokens={self.generated_tokens} ticks={self.ticks} "
@@ -199,13 +217,21 @@ class ScriptedExecutor:
     """Deterministic jax-free executor: closed-form token functions stand in
     for the model so the scheduler core (admission, claim/free, metrics)
     can be pinned by the hermetic test tier and compared across policies
-    (and ring vs paged) without a single compile."""
+    (and ring vs paged, compacted vs full-width, chunked vs whole-prompt
+    prefill) without a single compile. `buckets` emulates the paged
+    executor's lane compaction: decode_width returns the smallest covering
+    bucket and every decode tick's width is recorded in `tick_widths`."""
 
-    def __init__(self, vocab_size: int = 97):
+    def __init__(self, vocab_size: int = 97,
+                 buckets: Optional[Sequence[int]] = None):
         self.vocab_size = vocab_size
+        self.buckets = tuple(sorted(buckets)) if buckets else None
         self.prefills = 0
         self.prefill_batches = 0
         self.decodes = 0
+        self.chunk_calls = 0
+        self.tick_widths: List[int] = []
+        self._partial: Dict[int, List[int]] = {}   # lane -> prompt so far
 
     def prefill(self, slot: int, prompt: Sequence[int]) -> int:
         self.prefills += 1
@@ -218,13 +244,45 @@ class ScriptedExecutor:
         self.prefill_batches += 1
         return [self.prefill(s, p) for s, p in zip(slots, prompts)]
 
+    def prefill_chunks(self, lanes: Sequence[int],
+                       chunks: Sequence[Sequence[int]],
+                       starts: Sequence[int],
+                       tables: Optional[Sequence[Sequence[int]]] = None,
+                       final: Optional[Sequence[bool]] = None) -> List[int]:
+        """Accumulate chunks per lane; on a lane's final chunk emit exactly
+        what a whole-prompt prefill of the accumulated tokens would — so
+        chunked and unchunked scheduling are token-identical by
+        construction, like the real executor."""
+        self.chunk_calls += 1
+        out: List[int] = []
+        for j, lane in enumerate(lanes):
+            acc = self._partial.setdefault(lane, [])
+            acc.extend(chunks[j])
+            if final is not None and final[j]:
+                out.append(self.prefill(lane, self._partial.pop(lane)))
+            else:
+                out.append(0)
+        return out
+
     def fresh_blocks(self, ids: Sequence[int]) -> None:
         pass                                 # no physical pool to invalidate
 
+    def decode_width(self, n_active: int) -> Optional[int]:
+        """None = no compaction (the engine charges full pool width)."""
+        if self.buckets is None:
+            return None
+        for b in self.buckets:
+            if b >= n_active:
+                return b
+        return self.buckets[-1]
+
     def decode(self, tokens: Sequence[int], positions: Sequence[int],
-               tables: Optional[Sequence[Sequence[int]]] = None
-               ) -> List[int]:
+               tables: Optional[Sequence[Sequence[int]]] = None,
+               lanes: Optional[Sequence[int]] = None) -> List[int]:
         self.decodes += 1
+        n_active = len(lanes) if lanes is not None else len(tokens)
+        width = self.decode_width(n_active)
+        self.tick_widths.append(width if width is not None else len(tokens))
         return [(17 * t + 7 * p + 13) % self.vocab_size
                 for t, p in zip(tokens, positions)]
 
@@ -244,17 +302,29 @@ class Engine:
     """
 
     def __init__(self, executor, n_slots: int, policy: str = "continuous",
-                 allocator: Optional[BlockAllocator] = None):
+                 allocator: Optional[BlockAllocator] = None,
+                 chunk_prefill: int = 0):
         if n_slots < 1:
             raise ValueError(f"Engine needs n_slots >= 1, got {n_slots} "
                              "(serving_capacity said nothing fits — lower "
                              "the context or raise the budget)")
         if policy not in POLICIES:
             raise ValueError(f"unknown policy {policy!r}; known: {POLICIES}")
+        if chunk_prefill < 0:
+            raise ValueError(f"chunk_prefill must be >= 0, got "
+                             f"{chunk_prefill}")
+        if (chunk_prefill and allocator is not None
+                and chunk_prefill % allocator.block_size):
+            raise ValueError(f"chunk_prefill={chunk_prefill} must be a "
+                             f"multiple of the kv block size "
+                             f"{allocator.block_size}")
         self.executor = executor
         self.n_slots = int(n_slots)
         self.policy = policy
         self.allocator = allocator
+        # prompts longer than this prefill `chunk_prefill` positions per
+        # tick (0 = whole-prompt prefill at admission)
+        self.chunk_prefill = int(chunk_prefill)
 
     # -- scheduling core ---------------------------------------------------
 
@@ -284,7 +354,17 @@ class Engine:
             return 0, 0
         by_len: Dict[int, List[Tuple[int, Request]]] = {}
         for i, req in picked:
+            if self.chunk_prefill and len(req.prompt) > self.chunk_prefill:
+                # chunked admission: the lane is claimed now but its prompt
+                # is appended chunk-by-chunk by _advance_chunks (no decode
+                # cursor yet — remaining counts ALL owed tokens)
+                slots[i] = _Active(req=req, admitted=tick, pos=0,
+                                   remaining=req.max_new, tokens=[],
+                                   pending=tuple(req.prompt))
+                continue
             by_len.setdefault(len(req.prompt), []).append((i, req))
+        if not by_len:
+            return len(picked), 0
         calls = 0
         for plen in sorted(by_len):
             group = by_len[plen]
@@ -308,6 +388,46 @@ class Engine:
                                           else []))
         return len(picked), calls
 
+    def _advance_chunks(self, slots: List[Optional[_Active]]) -> int:
+        """Advance every mid-prefill lane by one prompt chunk in ONE
+        batched call (blocks allocated lazily per chunk, freshly re-linked
+        ones invalidated first). A lane whose final chunk lands gets its
+        first token and decode cursor. Returns chunk calls made (0/1)."""
+        lanes = [i for i in range(self.n_slots)
+                 if slots[i] is not None and slots[i].pending]
+        if not lanes:
+            return 0
+        alloc = self.allocator
+        chunks, starts, tables, final = [], [], [], []
+        fresh: List[int] = []
+        for i in lanes:
+            a = slots[i]
+            start = len(a.req.prompt) - len(a.pending)
+            c = a.pending[:self.chunk_prefill]
+            a.pending = a.pending[self.chunk_prefill:]
+            if alloc is not None:
+                last = start + len(c) - 1
+                while last // alloc.block_size >= len(a.table):
+                    bid = alloc.alloc(a.req.rid)
+                    a.table.append(bid)
+                    fresh.append(bid)
+            chunks.append(c)
+            starts.append(start)
+            tables.append(list(a.table))
+            final.append(not a.pending)
+        if fresh:
+            self.executor.fresh_blocks(fresh)
+        firsts = self.executor.prefill_chunks(
+            lanes, chunks, starts,
+            tables=(tables if alloc is not None else None), final=final)
+        for j, i in enumerate(lanes):
+            a = slots[i]
+            if final[j]:
+                a.tokens = [int(firsts[j])]
+                a.pos = len(a.req.prompt)
+                a.remaining = a.req.max_new - 1
+        return 1
+
     def run(self, trace: Sequence[Request],
             max_ticks: int = 1_000_000) -> ServeReport:
         for r in trace:                      # fail fast, not at max_ticks
@@ -329,6 +449,7 @@ class Engine:
         slots: List[Optional[_Active]] = [None] * self.n_slots
         completions: List[Completion] = []
         tick = decode_ticks = useful = idle = 0
+        admit_only = lane_tokens = chunk_calls = 0
         peak_queue = max_concurrent = prefills = prefill_calls = 0
         alloc = self.allocator
 
@@ -349,6 +470,9 @@ class Engine:
             admitted, calls = self._admit(queue, slots, tick)
             prefills += admitted
             prefill_calls += calls
+            chunked = (self._advance_chunks(slots) if self.chunk_prefill
+                       else 0)
+            chunk_calls += chunked
             peak_queue = max(peak_queue, len(queue))
             concurrent = sum(s is not None for s in slots)
             max_concurrent = max(max_concurrent, concurrent)
@@ -357,9 +481,12 @@ class Engine:
             for i in range(self.n_slots):
                 if slots[i] is not None and slots[i].remaining == 0:
                     finish(i, tick)
-            active = [i for i in range(self.n_slots) if slots[i] is not None]
+            # mid-prefill lanes hold a slot but have no decode cursor yet
+            active = [i for i in range(self.n_slots)
+                      if slots[i] is not None and not slots[i].pending]
             if active:
-                tokens = [slots[i].tokens[-1] if slots[i] is not None else 0
+                tokens = [slots[i].tokens[-1]
+                          if slots[i] is not None and slots[i].tokens else 0
                           for i in range(self.n_slots)]
                 positions = [slots[i].pos if slots[i] is not None else 0
                              for i in range(self.n_slots)]
@@ -381,11 +508,15 @@ class Engine:
                     tables = [slots[i].table if slots[i] is not None else []
                               for i in range(self.n_slots)]
                     nxt = self.executor.decode(tokens, positions,
-                                               tables=tables)
+                                               tables=tables, lanes=active)
                 else:
-                    nxt = self.executor.decode(tokens, positions)
+                    nxt = self.executor.decode(tokens, positions,
+                                               lanes=active)
                 decode_ticks += 1
                 useful += len(active)
+                width_fn = getattr(self.executor, "decode_width", None)
+                width = width_fn(len(active)) if width_fn else None
+                lane_tokens += width if width is not None else self.n_slots
                 for i in active:
                     a = slots[i]
                     a.tokens.append(int(nxt[i]))
@@ -393,8 +524,13 @@ class Engine:
                     a.remaining -= 1
                     if a.remaining == 0:
                         finish(i, tick)
-            elif concurrent == 0:
-                idle += 1        # nothing admitted or decoding this tick
+            elif admitted or chunked:
+                # at-admission completions / prompt chunks did real work
+                # this tick even though no decode ran — the taxonomy
+                # invariant is ticks == decode + admit + idle
+                admit_only += 1
+            else:
+                idle += 1        # pure waiting on arrivals
             tick += 1
 
         completions.sort(key=lambda c: c.rid)
@@ -406,4 +542,7 @@ class Engine:
                            max_concurrent=max_concurrent, prefills=prefills,
                            prefill_calls=prefill_calls,
                            n_blocks=(alloc.n_blocks if alloc else 0),
-                           peak_blocks=(alloc.peak_in_use if alloc else 0))
+                           peak_blocks=(alloc.peak_in_use if alloc else 0),
+                           admit_ticks=admit_only,
+                           decode_lane_tokens=lane_tokens,
+                           chunk_calls=chunk_calls)

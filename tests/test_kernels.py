@@ -109,6 +109,60 @@ def test_paged_decode_attention_sweep(dtype, atol, bs, K, G, hd, window):
                                rtol=atol)
 
 
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 2e-5),
+                                        (jnp.bfloat16, 3e-2)])
+@pytest.mark.parametrize("bs,K,G,hd,window", [
+    (8, 2, 2, 16, None),
+    (8, 1, 4, 16, 12),
+])
+def test_paged_decode_attention_trimmed_tables(dtype, atol, bs, K, G, hd,
+                                               window):
+    """The kernel's grid KV extent is the TABLE width: trimming tables to
+    the blocks actually allocated (lane compaction does, per tick) must
+    not change the output, and UNEVEN per-lane allocation (one lane deep,
+    the rest shallow) must match the dense oracle at both widths."""
+    b, m_blocks, n_blocks = 3, 6, 12
+    rng = np.random.default_rng(3)
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, K, G, hd), dtype)
+    kp = jax.random.normal(ks[1], (n_blocks, bs, K, hd), dtype)
+    vp = jax.random.normal(ks[2], (n_blocks, bs, K, hd), dtype)
+    # lane 0 reaches 4 blocks; lanes 1-2 sit in their first block
+    positions = np.array([3 * bs + 1, bs // 2, bs - 1], np.int32)
+    perm = rng.permutation(np.arange(1, n_blocks)).tolist()
+    tables = np.full((b, m_blocks), -1, np.int32)
+    pool_pos = np.full((n_blocks, bs), -1, np.int32)
+    for i in range(b):
+        for j in range(-(-int(positions[i] + 1) // bs)):
+            phys = perm.pop()
+            tables[i, j] = phys
+            for o in range(bs):
+                if j * bs + o <= positions[i]:
+                    pool_pos[phys, o] = j * bs + o
+    # trimmed width = widest allocated row (4), well under m_blocks (6)
+    trim = int((tables >= 0).sum(axis=1).max())
+    assert trim < m_blocks
+    full = ops.paged_decode_attention(
+        q, kp, vp, jnp.asarray(pool_pos), jnp.asarray(tables),
+        jnp.asarray(positions), window=window, backend="interpret")
+    trimmed = ops.paged_decode_attention(
+        q, kp, vp, jnp.asarray(pool_pos), jnp.asarray(tables[:, :trim]),
+        jnp.asarray(positions), window=window, backend="interpret")
+    np.testing.assert_allclose(np.asarray(trimmed, np.float32),
+                               np.asarray(full, np.float32), atol=atol,
+                               rtol=atol)
+    safe = np.where(tables >= 0, tables, 0)
+    kd = jnp.asarray(np.asarray(kp)[safe].reshape(b, m_blocks * bs, K, hd))
+    vd = jnp.asarray(np.asarray(vp)[safe].reshape(b, m_blocks * bs, K, hd))
+    cpos = np.where(tables[..., None] >= 0, pool_pos[safe], -1)
+    cpos = jnp.asarray(cpos.reshape(b, m_blocks * bs))
+    exp = ref.decode_attention_ref(q, kd, vd, cpos, jnp.asarray(positions),
+                                   window=window)
+    np.testing.assert_allclose(np.asarray(trimmed, np.float32),
+                               np.asarray(exp, np.float32), atol=atol,
+                               rtol=atol)
+
+
 @pytest.mark.parametrize("backend", ["interpret", "blocked"])
 @pytest.mark.parametrize("s,h,dk,dv,chunk", [
     (128, 2, 16, 16, 32),

@@ -435,3 +435,107 @@ def test_batch_prefill_step_shapes():
     assert jax.tree.map(lambda a: a.shape, new_pool) \
         == jax.tree.map(lambda a: a.shape, pool)
     assert logits.shape == (3, cfg.padded_vocab_size)
+
+
+def test_compact_decode_step_shapes():
+    """The compacted decode gathers w < lanes per-lane rows, runs at width
+    w, and scatters back: pool shapes are preserved exactly, logits come
+    out at the COMPACTED width, and trimmed block tables (narrower than
+    the pool max) are accepted — all traced, zero compiles."""
+    import jax.numpy as jnp
+
+    from repro.models import init_params
+    from repro.runtime import serve_step as SS
+    cfg = get_config("gemma3-12b").reduced()
+    lanes, n_blocks, block, context = 4, 9, 4, 16
+    w, mb = 2, 2                               # compacted width, trimmed table
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda: init_params(key, cfg))
+    pool = SS.init_paged_pool(cfg, lanes, n_blocks, block, context,
+                              abstract=True)
+    shapes = jax.tree.map(lambda a: a.shape, pool)
+
+    compact = SS.make_compact_decode_step(cfg)
+    tok = jax.ShapeDtypeStruct((w, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((w,), jnp.int32)
+    tables = jax.ShapeDtypeStruct((w, mb), jnp.int32)
+    lane_ids = jax.ShapeDtypeStruct((w,), jnp.int32)
+    logits, new_pool = jax.eval_shape(
+        lambda p, t, po, tb, l, P: compact(p, t, po, tb, l, P,
+                                           context=context),
+        params, tok, pos, tables, lane_ids, pool)
+    assert jax.tree.map(lambda a: a.shape, new_pool) == shapes
+    assert logits.shape == (w, cfg.padded_vocab_size)
+
+
+def test_chunk_prefill_step_appends_in_place():
+    """The chunk-prefill step consumes [w, C] mid-prompt tokens against the
+    live pool and returns it shape-identical (blocks written through the
+    tables, rings in place) with per-row last-valid logits."""
+    import jax.numpy as jnp
+
+    from repro.models import init_params
+    from repro.runtime import serve_step as SS
+    cfg = get_config("gemma3-12b").reduced()
+    lanes, n_blocks, block, context = 3, 9, 4, 16
+    w, C, mb = 2, 8, 4
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda: init_params(key, cfg))
+    pool = SS.init_paged_pool(cfg, lanes, n_blocks, block, context,
+                              abstract=True)
+    shapes = jax.tree.map(lambda a: a.shape, pool)
+
+    chunk = SS.make_chunk_prefill_step(cfg)
+    tok = jax.ShapeDtypeStruct((w, C), jnp.int32)
+    pos = jax.ShapeDtypeStruct((w, C), jnp.int32)
+    tables = jax.ShapeDtypeStruct((w, mb), jnp.int32)
+    lane_ids = jax.ShapeDtypeStruct((w,), jnp.int32)
+    logits, new_pool = jax.eval_shape(
+        lambda p, t, po, tb, l, P: chunk(p, t, po, tb, l, P,
+                                         context=context),
+        params, tok, pos, tables, lane_ids, pool)
+    assert jax.tree.map(lambda a: a.shape, new_pool) == shapes
+    assert logits.shape == (w, cfg.padded_vocab_size)
+
+
+def test_gather_scatter_pool_lanes_roundtrip_shapes():
+    """gather narrows every per-lane leaf to width w (paged leaves pass
+    through untouched); scatter restores the full pool shape."""
+    import jax.numpy as jnp
+
+    from repro.runtime import serve_step as SS
+    cfg = get_config("gemma3-12b").reduced()
+    lanes, w = 4, 2
+    pool = SS.init_paged_pool(cfg, lanes, 9, 4, 16, abstract=True)
+    ids = jax.ShapeDtypeStruct((w,), jnp.int32)
+    sub = jax.eval_shape(SS.gather_pool_lanes, pool, ids)
+    for P, S in zip(pool["units"], sub["units"]):
+        if SS._is_paged_leaf(P):
+            assert jax.tree.map(lambda a: a.shape, S) \
+                == jax.tree.map(lambda a: a.shape, P)
+        else:
+            for a, b in zip(jax.tree.leaves(P), jax.tree.leaves(S)):
+                assert b.shape == (a.shape[0], w) + a.shape[2:]
+    back = jax.eval_shape(SS.scatter_pool_lanes, pool, sub, ids)
+    assert jax.tree.map(lambda a: a.shape, back) \
+        == jax.tree.map(lambda a: a.shape, pool)
+
+
+# --- executor-side compaction knobs (no compiles: constructor validation) ---
+
+def test_paged_executor_bucket_and_chunk_validation():
+    from repro.serving.executor import (PagedJaxExecutor, _cover,
+                                        _pow2_buckets)
+    assert _pow2_buckets(8) == (1, 2, 4, 8)
+    assert _pow2_buckets(6) == (1, 2, 4, 6)    # n_lanes appended as cap
+    assert _cover(3, (1, 2, 4)) == 4
+    assert _cover(5, (1, 2, 4)) == 4           # clamps at the top bucket
+    cfg = get_config("mistral-nemo-12b").reduced()
+    params = None                              # constructor-only: never used
+    with pytest.raises(ValueError, match="kv_block"):
+        PagedJaxExecutor(params, cfg, n_lanes=2, n_blocks=8, kv_block=4,
+                         context=16, chunk=6)
+    rg = get_config("recurrentgemma-9b").reduced()
+    with pytest.raises(ValueError, match="chunked prefill"):
+        PagedJaxExecutor(params, rg, n_lanes=2, n_blocks=8, kv_block=4,
+                         context=16, chunk=4)

@@ -15,8 +15,8 @@ from repro.core import predictor as PR
 from repro.core import profiler as PF
 from repro.search import execplan as XP
 from repro.search import space as SP
-from repro.serving import (Engine, ScriptedExecutor, describe_trace,
-                           synthetic_trace, trace_context)
+from repro.serving import (BlockAllocator, Engine, Request, ScriptedExecutor,
+                           describe_trace, synthetic_trace, trace_context)
 
 CFG = get_config("h2o-danube-1.8b")
 SHAPE = ShapeConfig("serve_t", DECODE, 4096, 8)
@@ -182,8 +182,8 @@ def test_synthetic_trace_burst_mode():
 
 # --- the scheduler core ------------------------------------------------------
 
-def _burst(n, gens, seed=0):
-    return synthetic_trace(n, vocab_size=97, seed=seed, prompt_lens=(4, 8),
+def _burst(n, gens, seed=0, prompts=(4, 8)):
+    return synthetic_trace(n, vocab_size=97, seed=seed, prompt_lens=prompts,
                            gen_lens=gens, mean_interarrival=0)
 
 
@@ -319,3 +319,111 @@ def test_write_cache_slot_preserves_pool_shapes():
                          pool, one)
     assert jax.tree.map(lambda a: a.shape, out) \
         == jax.tree.map(lambda a: a.shape, pool)
+
+
+# --- tick taxonomy (the metrics invariant the bugfix sweep pins) ------------
+
+def test_tick_taxonomy_is_a_partition():
+    """Every tick is exactly one of decode / admit-only / idle — the
+    accounting identity ticks == decode + admit + idle must hold for
+    bursty, staggered, and chunked schedules alike."""
+    traces = [_burst(6, (2, 4)),
+              synthetic_trace(5, vocab_size=97, seed=3, prompt_lens=(4, 8),
+                              gen_lens=(1, 4), mean_interarrival=3.0),
+              _burst(4, (1,))]
+    for chunk in (0, 4):
+        for trace in traces:
+            rep = Engine(ScriptedExecutor(), 2,
+                         allocator=BlockAllocator(24, 4),
+                         chunk_prefill=chunk).run(trace)
+            assert rep.ticks == (rep.decode_ticks + rep.admit_ticks
+                                 + rep.idle_ticks)
+            assert len(rep.completions) == len(trace)
+
+
+def test_single_token_burst_counts_admit_not_idle():
+    """Prefill-only traffic: the admission ticks must land in admit_ticks,
+    never in idle_ticks (the engine was busy) nor decode_ticks (no decode
+    step ran)."""
+    rep = Engine(ScriptedExecutor(), 4).run(_burst(4, (1,)))
+    assert rep.decode_ticks == 0
+    assert rep.idle_ticks == 0
+    assert rep.admit_ticks >= 1
+    assert rep.ticks == rep.admit_ticks
+
+
+# --- lane compaction (scripted: bucket selection and width accounting) ------
+
+def test_compacted_decode_picks_covering_bucket():
+    """With 2 active lanes in a 4-lane pool the engine must decode at
+    width 2, and at width 1 once one lane remains — tick_widths records
+    the smallest covering bucket each decode tick."""
+    trace = [Request(rid=0, arrival=0, prompt=(3, 4), max_new=6),
+             Request(rid=1, arrival=0, prompt=(5, 6), max_new=2)]
+    ex = ScriptedExecutor(buckets=(1, 2, 4))
+    rep = Engine(ex, 4, allocator=BlockAllocator(16, 4)).run(trace)
+    assert set(ex.tick_widths) == {1, 2}
+    assert ex.tick_widths == sorted(ex.tick_widths, reverse=True)
+    assert rep.decode_lane_tokens == sum(ex.tick_widths)
+    assert rep.decode_lane_tokens < rep.decode_ticks * 4
+    assert rep.occupancy() > 0.9             # vs ~0.4 at full width
+
+
+def test_compacted_and_full_width_tokens_identical():
+    """Compaction changes WHICH lanes ride each decode step, never what
+    any lane emits: bucketed and full-width scripted runs agree."""
+    trace = _burst(8, (2, 4, 8), seed=11)
+    full = Engine(ScriptedExecutor(), 4,
+                  allocator=BlockAllocator(32, 4)).run(trace)
+    ex = ScriptedExecutor(buckets=(1, 2, 4))
+    comp = Engine(ex, 4, allocator=BlockAllocator(32, 4)).run(trace)
+    assert ([c.tokens for c in full.completions]
+            == [c.tokens for c in comp.completions])
+    assert min(ex.tick_widths) < 4           # compaction actually engaged
+
+
+def test_engine_width_accounting_without_decode_width():
+    """Executors without decode_width (the ring JaxExecutor protocol) are
+    charged full pool width — occupancy falls back to the old meaning."""
+    rep = Engine(ScriptedExecutor(), 3).run(_burst(4, (2, 4)))
+    assert rep.decode_lane_tokens == rep.decode_ticks * 3
+
+
+# --- chunked prefill (scripted: scheduling and parity) ----------------------
+
+def test_chunked_prefill_matches_whole_prompt_tokens():
+    """Splitting a long prompt into chunks interleaved with decode ticks
+    must not change any completion: same trace, chunked vs unchunked."""
+    trace = synthetic_trace(6, vocab_size=97, seed=9, prompt_lens=(4, 20),
+                            gen_lens=(2, 4), mean_interarrival=0.5)
+    whole = Engine(ScriptedExecutor(), 3,
+                   allocator=BlockAllocator(40, 4)).run(trace)
+    ex = ScriptedExecutor()
+    chunked = Engine(ex, 3, allocator=BlockAllocator(40, 4),
+                     chunk_prefill=8).run(trace)
+    assert ([c.tokens for c in whole.completions]
+            == [c.tokens for c in chunked.completions])
+    assert chunked.chunk_calls == ex.chunk_calls > 0
+    assert chunked.ticks == (chunked.decode_ticks + chunked.admit_ticks
+                             + chunked.idle_ticks)
+
+
+def test_chunked_prefill_short_prompts_skip_chunking():
+    """Prompts <= chunk_prefill take the whole-prompt path — zero chunk
+    calls, identical schedule to chunk_prefill=0."""
+    trace = _burst(4, (2,), prompts=(4,))
+    ex = ScriptedExecutor()
+    rep = Engine(ex, 2, allocator=BlockAllocator(16, 4),
+                 chunk_prefill=8).run(trace)
+    ref = Engine(ScriptedExecutor(), 2,
+                 allocator=BlockAllocator(16, 4)).run(trace)
+    assert ex.chunk_calls == 0 and rep.chunk_calls == 0
+    assert rep.completions == ref.completions
+
+
+def test_engine_rejects_misaligned_chunk():
+    with pytest.raises(ValueError, match="multiple"):
+        Engine(ScriptedExecutor(), 2, allocator=BlockAllocator(8, 4),
+               chunk_prefill=6)
+    with pytest.raises(ValueError, match=">= 0"):
+        Engine(ScriptedExecutor(), 2, chunk_prefill=-1)
