@@ -1,6 +1,8 @@
-"""Serving frontier: ring-slot vs paged vs paged+compaction engines under
-the SAME per-budget HBM envelope, swept over several budgets (the PR-6
-acceptance benchmark).
+"""Serving frontier: ring-slot vs paged vs paged+compaction vs
+paged+chunked engines under the SAME per-budget HBM envelope, swept over
+several budgets (the PR-6 acceptance benchmark), plus the PR-7 OVERLOAD
+section: worst-case vs optimistic admission vs optimistic+prefix-sharing
+on a prefix-heavy burst trace.
 
 Each budget is sized between the k- and (k+1)-worst-case-ring-slot
 requirements (Eq. 11 headroom included), so ring admits exactly k
@@ -9,17 +11,22 @@ block pool with the trace's own length distribution, and the compacted
 planner additionally charges the decode transient at the EXPECTED lane
 width (bucketed), not the worst case. Per cell: admitted concurrency (the
 paper's capacity metric per HBM byte), generated tokens/s wall (warm —
-compiles paid by a throwaway run), tokens/tick, mean request latency in
-ticks, decode-lane occupancy, mean decode width, and compile counts.
-Token streams are asserted identical across all three modes (scheduling,
-memory layout, lane packing, and chunked prefill must never change
-outputs). The acceptance pin sits at the TIGHTEST budget — the regime the
+compiles paid by a throwaway run), tokens/tick, mean/percentile request
+latency in ticks, TTFT, decode-lane occupancy, mean decode width, compile
+counts, and the predicted-vs-actual peak_blocks delta (groundwork for the
+calibration loop). Token streams are asserted identical across all
+frontier modes (scheduling, memory layout, lane packing, and chunked
+prefill must never change outputs), and in every worst-reservation cell
+actual block usage is asserted <= the ledger's committed worst case.
+
+The frontier acceptance pin sits at the TIGHTEST budget — the regime the
 paper targets — where paged+compaction must reach >= ring tokens/s while
-admitting >= 4x ring's concurrency; looser budgets stay in the frontier
-as data (once the budget covers the whole long tail with worst-case
-rings, ring serves it without table indirection and catches back up —
-the README's "when ring still wins"). Results land in BENCH_serving.json
-at the repo root.
+admitting >= 4x ring's concurrency. The OVERLOAD acceptance pin: on a
+burst trace whose arrivals exceed worst-case capacity and whose requests
+share a 16-token system prompt, optimistic admission + prefix sharing
+must admit >= 1.5x the worst-case-reservation concurrency per GiB with
+token-identical output. Results land in BENCH_serving.json at the repo
+root (schema_version 2).
 """
 from __future__ import annotations
 
@@ -32,6 +39,11 @@ from benchmarks.common import emit, flush
 ARCH = "mistral-nemo-12b"            # pure global attention: every layer pages
 RING_SLOT_BUDGETS = (2, 3, 4)        # budget sized to admit exactly k rings
 LANE_CAP = 8                         # engine slot cap (ShapeConfig batch)
+TRACE_SEED = 0                       # stamped into the JSON: same seed +
+                                     # knobs => the same replayed workload
+OVERLOAD_LANE_CAP = 12               # overload section: admission is the
+                                     # contended resource, so more lanes
+SCHEMA_VERSION = 2
 
 
 def main():
@@ -47,8 +59,8 @@ def main():
     from repro.models import init_params
     from repro.search import execplan as XP
     from repro.search import space as SP
-    from repro.serving import (BlockAllocator, Engine, synthetic_trace,
-                               trace_context)
+    from repro.serving import (BlockAllocator, Engine, length_stats,
+                               synthetic_trace, trace_context)
     from repro.serving.executor import JaxExecutor, PagedJaxExecutor
 
     cfg = get_config(ARCH).reduced()
@@ -56,7 +68,7 @@ def main():
     # worst-case ring slots waste the most (every short request still pays
     # max-context bytes) and where lane compaction matters (the tail drains
     # at low occupancy)
-    trace = synthetic_trace(12, vocab_size=cfg.vocab_size, seed=0,
+    trace = synthetic_trace(12, vocab_size=cfg.vocab_size, seed=TRACE_SEED,
                             prompt_lens=(4, 8), gen_lens=(4, 4, 8, 248),
                             mean_interarrival=0.5)
     context = trace_context(trace)
@@ -83,13 +95,65 @@ def main():
                                 context=context), None, n_slots, 0)
         n_blocks = splan.pool_blocks(n_slots, context)
         compact = mode == "paged_compact"
-        chunk = 2 * splan.kv_block if compact else 0
+        # paged_chunked: prompts split into kv_block-sized chunks — the
+        # prompt buckets (4, 8) exceed kv_block=4, so chunking actually
+        # fires (chunk_calls > 0 is asserted below)
+        chunk = (2 * splan.kv_block if compact
+                 else splan.kv_block if mode == "paged_chunked" else 0)
         ex = PagedJaxExecutor(params, cfg, n_lanes=n_slots,
                               n_blocks=n_blocks, kv_block=splan.kv_block,
                               context=context, compact=compact, chunk=chunk)
         return ex, BlockAllocator(n_blocks, splan.kv_block), n_slots, chunk
 
+    def cell_metrics(splan, report, allocator, n_slots, wall, e_blocks=None):
+        """One benchmark cell; shared by the frontier and overload sweeps.
+        `e_blocks` (expected blocks/seq) prices the predicted peak:
+        min(pool, ceil(n_slots * E[blocks/seq])) — the calibration-loop
+        groundwork the delta column tracks."""
+        widths = (report.decode_lane_tokens / report.decode_ticks
+                  if report.decode_ticks else 0.0)
+        predicted = 0
+        if allocator is not None and e_blocks is not None:
+            predicted = min(allocator.n_blocks,
+                            int(-(-(n_slots * e_blocks) // 1)))
+        return {
+            "capacity": splan.capacity,
+            "n_slots": n_slots,
+            "kv_block": splan.kv_block,
+            "blocks": (allocator.n_blocks if allocator else 0),
+            "peak_blocks": report.peak_blocks,
+            "predicted_peak_blocks": predicted,
+            "peak_blocks_delta": (report.peak_blocks - predicted
+                                  if predicted else 0),
+            "max_concurrent": report.max_concurrent,
+            "concurrency_per_gib": (splan.capacity
+                                    / (splan.hbm_budget / 2**30)),
+            "tokens": report.generated_tokens,
+            "ticks": report.ticks,
+            "tokens_per_tick": report.throughput(),
+            "tokens_per_s": report.generated_tokens / wall,
+            "mean_latency_ticks": report.mean_latency(),
+            "latency_ticks": report.latency_percentiles(),
+            "ttft_ticks": report.ttft_percentiles(),
+            "mean_ttft_ticks": report.mean_ttft(),
+            "occupancy": report.occupancy(),
+            "mean_decode_width": widths,
+            "chunk_calls": report.chunk_calls,
+            "prefill_calls": report.prefill_calls,
+            "evictions": report.evictions,
+        }
+
     params = init_params(jax.random.PRNGKey(0), cfg)
+    e_blocks_by_kv = {}
+
+    def e_blocks(kv_block, lens=None):
+        lens = lens if lens is not None else seq_lens
+        key = (kv_block, len(lens))
+        if key not in e_blocks_by_kv:
+            e_blocks_by_kv[key] = (sum(-(-s // kv_block) for s in lens)
+                                   / len(lens))
+        return e_blocks_by_kv[key]
+
     frontier = []
     for k in RING_SLOT_BUDGETS:
         budget = (req(k) + req(k + 1)) / 2
@@ -105,7 +169,8 @@ def main():
         cells = {}
         tokens = {}
         for mode, splan in (("ring", ring), ("paged", paged),
-                            ("paged_compact", pcomp)):
+                            ("paged_compact", pcomp),
+                            ("paged_chunked", paged)):
             # warm run pays every compile; the timed run measures serving
             executor, allocator, n_slots, chunk = build(splan, mode)
             Engine(executor, n_slots, allocator=allocator,
@@ -118,34 +183,24 @@ def main():
             report = engine.run(trace)
             wall = time.perf_counter() - t0
             tokens[mode] = [list(c.tokens) for c in report.completions]
-            widths = (report.decode_lane_tokens / report.decode_ticks
-                      if report.decode_ticks else 0.0)
-            cells[mode] = {
-                "capacity": splan.capacity,
-                "n_slots": n_slots,
-                "kv_block": splan.kv_block,
-                "blocks": (allocator.n_blocks if allocator else 0),
-                "peak_blocks": report.peak_blocks,
-                "max_concurrent": report.max_concurrent,
-                "concurrency_per_gib": splan.capacity / (budget / 2**30),
-                "tokens": report.generated_tokens,
-                "ticks": report.ticks,
-                "tokens_per_tick": report.throughput(),
-                "tokens_per_s": report.generated_tokens / wall,
-                "mean_latency_ticks": report.mean_latency(),
-                "occupancy": report.occupancy(),
-                "mean_decode_width": widths,
-                "chunk_calls": report.chunk_calls,
-                "prefill_calls": report.prefill_calls,
-                "compiles": compiles,
-            }
+            if allocator is not None:
+                # worst-case reservations: actual usage never exceeds the
+                # ledger's commitment (the deadlock-freedom invariant)
+                assert report.peak_blocks <= allocator.peak_committed, mode
+            cells[mode] = cell_metrics(
+                splan, report, allocator, n_slots, wall,
+                e_blocks=(e_blocks(splan.kv_block) if allocator else None))
+            cells[mode]["compiles"] = compiles
             emit(f"serve.{mode}.b{k}.{ARCH}", wall * 1e6,
                  f"concurrent={report.max_concurrent};"
                  f"tokens_per_s={cells[mode]['tokens_per_s']:.0f};"
                  f"mean_latency={report.mean_latency():.1f};"
                  f"occupancy={report.occupancy():.3f};"
-                 f"mean_width={widths:.1f}")
-        same = (tokens["ring"] == tokens["paged"] == tokens["paged_compact"])
+                 f"mean_width={cells[mode]['mean_decode_width']:.1f}")
+        if cells["paged_chunked"]["chunk_calls"] <= 0:
+            raise SystemExit(f"budget@{k}: the chunked column never chunked")
+        same = (tokens["ring"] == tokens["paged"] == tokens["paged_compact"]
+                == tokens["paged_chunked"])
         ratio = (cells["paged_compact"]["max_concurrent"]
                  / max(cells["ring"]["max_concurrent"], 1))
         speed = (cells["paged_compact"]["tokens_per_s"]
@@ -172,12 +227,103 @@ def main():
         raise SystemExit("tightest budget: paged+compaction admitted only "
                          f"{tight['concurrency_ratio']:.1f}x ring "
                          "concurrency")
+
+    # -- overload: optimistic admission + prefix sharing vs worst case ------
+    # Burst arrivals (everything at tick 0) over a shared 16-token system
+    # prompt, with a long-generation tail: worst-case reservations leave
+    # most of the pool promised-but-idle, and every request re-pays the
+    # prefix. The acceptance pin: optimistic+prefix admits >= 1.5x the
+    # worst-case concurrency under the SAME budget, token-identically.
+    otrace = synthetic_trace(24, vocab_size=cfg.vocab_size, seed=TRACE_SEED,
+                             prompt_lens=(4, 8), gen_lens=(4, 8, 8, 64),
+                             mean_interarrival=0.0, prefix_len=16)
+    ocontext = trace_context(otrace)
+    oshape = dataclasses.replace(shape, seq_len=ocontext,
+                                 global_batch=OVERLOAD_LANE_CAP)
+    olens = [len(r.prompt) + r.max_new - 1 for r in otrace]
+    # tight enough that worst-case planning can only afford ~7 lanes while
+    # expected-occupancy planning fills the 12-lane cap — admission policy,
+    # not lane count, is what the section measures
+    obudget = (req(2) + req(3)) / 2
+    ostats = length_stats(otrace)
+    _, wplan = XP.plan_serving(cfg, oshape, n_devices=1, hbm_budget=obudget,
+                               cls=cls, space=pinned((4, 8, 16)), kv="paged",
+                               seq_lens=olens, admission="worst")
+    _, oplan = XP.plan_serving(cfg, oshape, n_devices=1, hbm_budget=obudget,
+                               cls=cls, space=pinned((4, 8, 16)), kv="paged",
+                               seq_lens=olens, admission="optimistic",
+                               sigma_k=1.0)
+
+    def obuild(splan, mode):
+        n_slots = splan.slots(cap=min(OVERLOAD_LANE_CAP, len(otrace)))
+        n_blocks = splan.pool_blocks(n_slots, ocontext)
+        chunk = 2 * splan.kv_block
+        ex = PagedJaxExecutor(params, cfg, n_lanes=n_slots,
+                              n_blocks=n_blocks, kv_block=splan.kv_block,
+                              context=ocontext, chunk=chunk)
+        alloc = BlockAllocator(n_blocks, splan.kv_block,
+                               reservation=("worst" if mode == "worst"
+                                            else "expected"))
+        eng = Engine(ex, n_slots, allocator=alloc, chunk_prefill=chunk,
+                     prefix_share=(mode == "optimistic_prefix"),
+                     stats=(None if mode == "worst" else ostats),
+                     sigma_k=1.0)
+        return ex, alloc, eng, n_slots
+
+    ocells = {}
+    otokens = {}
+    for mode, splan in (("worst", wplan), ("optimistic", oplan),
+                        ("optimistic_prefix", oplan)):
+        _, _, warm_eng, _ = obuild(splan, mode)
+        warm_eng.run(otrace)
+        ex, alloc, eng, n_slots = obuild(splan, mode)
+        t0 = time.perf_counter()
+        report = eng.run(otrace)
+        wall = time.perf_counter() - t0
+        otokens[mode] = [list(c.tokens) for c in report.completions]
+        if mode == "worst":
+            assert report.peak_blocks <= alloc.peak_committed
+            assert report.evictions == 0     # worst mode never preempts
+        ocells[mode] = cell_metrics(splan, report, alloc, n_slots, wall,
+                                    e_blocks=e_blocks(splan.kv_block, olens))
+        ocells[mode]["admission"] = splan.admission
+        ocells[mode]["compiles"] = ex.compile_counts()
+        emit(f"serve.overload.{mode}.{ARCH}", wall * 1e6,
+             f"concurrent={report.max_concurrent};"
+             f"ticks={report.ticks};evictions={report.evictions};"
+             f"lat_p95={report.latency_percentiles()['p95']:.0f}")
+    osame = (otokens["worst"] == otokens["optimistic"]
+             == otokens["optimistic_prefix"])
+    oratio = (ocells["optimistic_prefix"]["max_concurrent"]
+              / max(ocells["worst"]["max_concurrent"], 1))
+    overload = {
+        "requests": len(otrace),
+        "context": ocontext,
+        "prefix_len": 16,
+        "budget_bytes": obudget,
+        "lane_cap": OVERLOAD_LANE_CAP,
+        "token_identical": bool(osame),
+        "concurrency_ratio": oratio,
+        **ocells,
+    }
+    emit(f"serve.overload.frontier.{ARCH}", 0.0,
+         f"optimistic_prefix_vs_worst_concurrency={oratio:.1f}x;"
+         f"token_identical={osame}")
+    if not osame:
+        raise SystemExit("overload: token streams diverged")
+    if oratio < 1.5:
+        raise SystemExit("overload: optimistic+prefix admitted only "
+                         f"{oratio:.2f}x worst-case concurrency")
+
     out = {
+        "schema_version": SCHEMA_VERSION,
         "arch": ARCH,
+        "trace_seed": TRACE_SEED,
         "requests": len(trace),
         "context": context,
         "lane_cap": LANE_CAP,
         "frontier": frontier,
+        "overload": overload,
     }
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir,
                         "BENCH_serving.json")

@@ -327,6 +327,7 @@ def serving_block_capacity(cfg: ModelConfig, shape: ShapeConfig,
                            factors: Optional[dict] = None,
                            avg_context: Optional[int] = None,
                            decode_width: Optional[int] = None,
+                           admission: str = "optimistic",
                            max_per_device: int = 1 << 22) -> int:
     """Eq. 11 run backwards over KV BLOCKS instead of whole-sequence slots.
 
@@ -351,6 +352,16 @@ def serving_block_capacity(cfg: ModelConfig, shape: ShapeConfig,
     step transient scales with that width, not the pool width — lane-fixed
     resident state stays charged at `lanes` above. Defaults to `lanes`
     (full-width decode).
+
+    `admission` names the engine reservation discipline the inversion
+    assumes. "optimistic" (default, matches every pre-existing call site)
+    honors the workload-specific `avg_context` / `decode_width` discounts
+    — the expected-occupancy inversion that pairs with
+    `BlockAllocator(reservation="expected")` and eviction-on-miss.
+    "worst" charges the transient at full context and pool width
+    regardless, the deadlock-free-by-construction sizing for
+    `reservation="worst"` engines where a prediction miss has no eviction
+    path to fall back on.
     """
     if plan.kv_block_size < 1:
         raise ValueError("serving_block_capacity needs a paged plan "
@@ -358,6 +369,12 @@ def serving_block_capacity(cfg: ModelConfig, shape: ShapeConfig,
     if lanes < 1:
         raise ValueError(f"serving_block_capacity needs lanes >= 1 "
                          f"(got {lanes})")
+    if admission not in ("optimistic", "worst"):
+        raise ValueError(f"unknown admission mode {admission!r}; known: "
+                         "('optimistic', 'worst')")
+    if admission == "worst":
+        avg_context = None
+        decode_width = None
     budget = hw.hbm_bytes if hbm_budget is None else float(hbm_budget)
     _, dp, _ = mesh_factors(mesh_shape)
     sh = dataclasses.replace(shape, kind=DECODE, global_batch=lanes * dp)

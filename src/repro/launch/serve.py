@@ -32,7 +32,7 @@ from repro.parallel.axes import axis_rules
 from repro.search import execplan as XP
 from repro.search import space as SP
 from repro.serving import (BlockAllocator, Engine, describe_trace,
-                           synthetic_trace, trace_context)
+                           length_stats, synthetic_trace, trace_context)
 from repro.serving.executor import JaxExecutor, PagedJaxExecutor
 
 
@@ -85,6 +85,30 @@ def main(argv=None):
                          "chunks of this many positions, interleaved with "
                          "decode ticks (rounded up to a kv-block multiple; "
                          "0 = whole-prompt prefill at admission)")
+    ap.add_argument("--admission", default="worst",
+                    choices=["worst", "optimistic"],
+                    help="paged only: block reservation discipline. "
+                         "'worst' reserves every block a request can "
+                         "write (deadlock-free; nothing is preempted); "
+                         "'optimistic' reserves E[blocks] + sigma-k "
+                         "margin from the trace's length stats and "
+                         "evicts-and-requeues (SLO class, then lowest "
+                         "progress) when the prediction misses")
+    ap.add_argument("--sigma-k", type=float, default=1.0,
+                    help="safety margin in per-bucket std deviations for "
+                         "--admission optimistic reservations")
+    ap.add_argument("--prefix-share", action="store_true",
+                    help="paged only: refcount-share the physical blocks "
+                         "of the common system-prompt prefix across "
+                         "requests (one prefill per unique prefix); "
+                         "needs --prefix-len and chunked prefill "
+                         "(defaults --chunk-prefill to one kv block)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="shared system-prompt tokens prepended to every "
+                         "request's own prompt (0 = no shared prefix)")
+    ap.add_argument("--slo", type=_int_list, default=(0,),
+                    help="SLO classes requests draw from (0 = strictest, "
+                         "evicted last under pool pressure)")
     ap.add_argument("--max-slots", type=int, default=8,
                     help="cap on the engine's slot pool / decode lanes "
                          "(the WSMC capacity is the bound; this caps it "
@@ -101,6 +125,13 @@ def main(argv=None):
     if args.kv != "paged" and (args.compact or args.chunk_prefill):
         ap.error("--compact/--chunk-prefill need --kv paged (the ring "
                  "executor has no lane buckets or block tables)")
+    if args.kv != "paged" and (args.admission != "worst"
+                               or args.prefix_share):
+        ap.error("--admission optimistic/--prefix-share need --kv paged "
+                 "(the reservation ledger lives on the BlockAllocator)")
+    if args.prefix_share and not args.prefix_len:
+        ap.error("--prefix-share needs --prefix-len > 0 (there is no "
+                 "shared prefix to share otherwise)")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -108,7 +139,9 @@ def main(argv=None):
     trace = synthetic_trace(args.requests, vocab_size=cfg.vocab_size,
                             seed=args.seed, prompt_lens=args.prompt_lens,
                             gen_lens=args.gen_lens,
-                            mean_interarrival=args.arrival_mean)
+                            mean_interarrival=args.arrival_mean,
+                            prefix_len=args.prefix_len,
+                            slo_classes=args.slo)
     context = args.context or trace_context(trace)
     devices = jax.devices()
     shape = ShapeConfig("serve_trace", DECODE, context,
@@ -134,10 +167,15 @@ def main(argv=None):
     if args.kv == "paged":
         # the planner maximizes EXPECTED admitted concurrency under the
         # trace's own length distribution (written positions per request)
+        # the pool is always sized expected-case (plan_serving default);
+        # optimistic admission additionally reserves a sigma-k margin, so
+        # the planner carries the same margin into the pool size
         paged_kw = dict(kv="paged", kv_blocks=kv_blocks,
                         seq_lens=[len(r.prompt) + r.max_new - 1
                                   for r in trace],
-                        compact=args.compact)
+                        compact=args.compact,
+                        sigma_k=(args.sigma_k
+                                 if args.admission == "optimistic" else 0.0))
     try:
         if args.mesh == "auto":
             measurer = None
@@ -190,22 +228,40 @@ def main(argv=None):
                 if args.chunk_prefill:       # align up to the block size
                     chunk = -(-args.chunk_prefill // splan.kv_block) \
                         * splan.kv_block
+                elif args.prefix_share:      # suffixes ride the chunked path
+                    chunk = splan.kv_block
                 executor = PagedJaxExecutor(
                     params, cfg, n_lanes=n_slots, n_blocks=n_blocks,
                     kv_block=splan.kv_block, context=context,
                     compact=args.compact, chunk=chunk)
-                allocator = BlockAllocator(n_blocks, splan.kv_block)
+                allocator = BlockAllocator(
+                    n_blocks, splan.kv_block,
+                    reservation=("expected"
+                                 if args.admission == "optimistic"
+                                 else "worst"))
             else:
                 executor = JaxExecutor(params, cfg, n_slots=n_slots,
                                        context=context)
                 allocator = None
             engine = Engine(executor, n_slots, policy=policy,
-                            allocator=allocator, chunk_prefill=chunk)
+                            allocator=allocator, chunk_prefill=chunk,
+                            prefix_share=args.prefix_share,
+                            stats=(length_stats(trace)
+                                   if args.admission == "optimistic"
+                                   else None),
+                            sigma_k=args.sigma_k)
             t0 = time.time()
             report = engine.run(trace)
             dt = time.time() - t0
+            lp = report.latency_percentiles()
+            tp = report.ttft_percentiles()
             print(report.describe() + f" wall={dt:.2f}s "
                   f"compiles={executor.compile_counts()}")
+            print(f"  latency p50/p95/p99={lp['p50']:.0f}/{lp['p95']:.0f}/"
+                  f"{lp['p99']:.0f} ticks "
+                  f"ttft p50/p95/p99={tp['p50']:.0f}/{tp['p95']:.0f}/"
+                  f"{tp['p99']:.0f} mean_ttft={report.mean_ttft():.1f} "
+                  f"evictions={report.evictions}")
             reports.append(report)
 
     if args.policy == "both" and len(reports) == 2:

@@ -307,17 +307,21 @@ def is_paged_cache(cache) -> bool:
 def _paged_write(cache, block_tables, k1, v1, pos1):
     """Write one token per lane (k1/v1 [b,K,hd], pos1 [b]) into the pool at
     (table[pos // block], pos % block). Lanes with no block mapped (table
-    entry -1) land in the scratch block."""
+    entry -1) and INERT lanes (pos1 < 0 — a padding row the engine carries
+    at full decode width while the lane is empty or mid-chunk-prefill) land
+    in the scratch block with pos -1, so they can never clobber live KV."""
     n_blocks, bsz = cache["pos"].shape
     m_blocks = block_tables.shape[1]
-    lb = jnp.minimum(pos1 // bsz, m_blocks - 1)
-    off = pos1 % bsz
+    live = pos1 >= 0
+    safe_pos = jnp.where(live, pos1, 0)
+    lb = jnp.minimum(safe_pos // bsz, m_blocks - 1)
+    off = safe_pos % bsz
     phys = jnp.take_along_axis(block_tables, lb[:, None], axis=1)[:, 0]
-    phys = jnp.where(phys >= 0, phys, 0)                 # scratch fallback
+    phys = jnp.where(live & (phys >= 0), phys, 0)        # scratch fallback
     return {
         "kb": cache["kb"].at[phys, off].set(k1.astype(cache["kb"].dtype)),
         "vb": cache["vb"].at[phys, off].set(v1.astype(cache["vb"].dtype)),
-        "pos": cache["pos"].at[phys, off].set(pos1),
+        "pos": cache["pos"].at[phys, off].set(jnp.where(live, pos1, -1)),
     }
 
 
@@ -473,12 +477,14 @@ def attn_apply(params, cfg: ModelConfig, blk: BlockSpec, x, positions,
                                          v[:, 0], block_tables, settings)
         else:
             L = cache["pos"].shape[1]
-            slot = pos1 % L
+            # inert rows (pos1 < 0) drop their ring write entirely — slot L
+            # is out of range and mode="drop" discards it
+            slot = jnp.where(pos1 >= 0, pos1 % L, L)
             bidx = jnp.arange(b)
             new_cache = {
-                "k": cache["k"].at[bidx, slot].set(k[:, 0]),
-                "v": cache["v"].at[bidx, slot].set(v[:, 0]),
-                "pos": cache["pos"].at[bidx, slot].set(pos1),
+                "k": cache["k"].at[bidx, slot].set(k[:, 0], mode="drop"),
+                "v": cache["v"].at[bidx, slot].set(v[:, 0], mode="drop"),
+                "pos": cache["pos"].at[bidx, slot].set(pos1, mode="drop"),
             }
             o = _decode_attend(q, new_cache, blk, pos1)
     elif appending:

@@ -3,7 +3,27 @@ last-token logits), decode (one token per sequence against the cache), and
 the slot-pool operations the serving engine's continuous batching uses
 (claim a slot by overwriting it with a fresh prefill; batched decode over
 heterogeneous per-slot positions rides the ring cache's slot = pos % L
-layout unchanged)."""
+layout unchanged).
+
+Paged-pool notes (see serving.engine for the admission/eviction policy):
+
+- Block tables are the ONLY routing state. A physical block written once
+  (by whole-prompt or chunked prefill) can be mapped by many tables at
+  once — refcounted prefix sharing needs no extra step: sharers simply
+  seed the leading entries of their table with the shared prefix's
+  physical ids and prefill only their suffix (absolute positions, so the
+  KV written is identical to an unshared prefill of the full prompt).
+  Copy-on-write at the prefix boundary is BY RECOMPUTE: the sharer never
+  mutates a shared block; its boundary tokens are re-prefilled into a
+  private block it allocated itself.
+- Decode ticks run at full lane width; rows whose lane is empty or still
+  mid-chunk-prefill are INERT (position -1, empty table) and their writes
+  land in scratch block 0 / are dropped (see attention._paged_write), so
+  a decode tick can never clobber KV a concurrent chunked prefill wrote.
+- Eviction frees physical blocks but writes nothing: reset_pool_blocks
+  invalidates re-linked blocks (pos -1) before a NEW owner's table routes
+  a read through them, and an evicted request re-prefills prompt+emitted
+  from scratch on readmission — no KV survives eviction."""
 from __future__ import annotations
 
 import dataclasses

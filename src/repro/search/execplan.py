@@ -199,6 +199,8 @@ class ServingPlan:
     considered: int = 0              # serving candidates scored
     kv_block: int = 0                # positions per KV block (0 = ring slots)
     blocks: int = 0                  # global paged-pool block budget
+    admission: str = "optimistic"    # reservation discipline the capacity
+                                     # inversion assumed (worst | optimistic)
 
     def slots(self, cap: Optional[int] = None) -> int:
         """Engine slot-pool size (ring) / decode-lane count (paged): the
@@ -219,6 +221,8 @@ class ServingPlan:
     def describe(self) -> str:
         paged = (f" kv_block={self.kv_block} blocks={self.blocks}"
                  if self.kv_block else "")
+        if self.admission != "optimistic":
+            paged += f" admission={self.admission}"
         return (f"{self.execution.describe()} capacity={self.capacity}"
                 f"{paged} (budget={self.hbm_budget / 2**30:.1f} GiB, "
                 f"considered={self.considered})")
@@ -246,7 +250,8 @@ def _bucket_cover(n: int, cap: int) -> int:
 
 def _paged_concurrency(cfg, shape, cand, cls, budget, mode, hw, factors,
                        seq_lens, max_lanes: int = 1 << 14,
-                       compact: bool = False):
+                       compact: bool = False, admission: str = "optimistic",
+                       sigma_k: float = 0.0):
     """Expected admitted concurrency for one paged serving candidate: the
     largest per-device lane count whose block pool still covers the
     EXPECTED per-sequence demand (blocks(lanes) >= lanes * E[blocks/seq]).
@@ -255,32 +260,49 @@ def _paged_concurrency(cfg, shape, cand, cls, budget, mode, hw, factors,
     With `compact`, the decode transient is charged at the bucketed
     EXPECTED active width (lanes scaled by the trace's mean/max length
     ratio — the same expected-case admission stance as avg_context)
-    instead of the full lane width. Returns (global_concurrency,
-    global_blocks)."""
+    instead of the full lane width.
+
+    `admission="worst"` sizes for a `reservation="worst"` engine: every
+    lane is charged `max_seq_blocks` (no lane can be refused its full
+    reservation) and the transient is charged at full context and width —
+    deadlock-free by construction, the pre-PR-7 stance. The default
+    "optimistic" covers expected demand plus `sigma_k` pooled standard
+    deviations (per-sequence block std scaled by sqrt(lanes) — independent
+    lengths concentrate), trusting the engine's eviction path on a miss.
+    sigma_k=0 is the bare-expected sizing every pre-existing call pinned.
+    Returns (global_concurrency, global_blocks)."""
     from repro.core import predictor as PR
     _, dp, _ = PR.mesh_factors(cand.mesh_shape)
-    e_blocks = _expected_blocks(seq_lens, cand.plan.kv_block_size)
+    block = cand.plan.kv_block_size
+    e_blocks = _expected_blocks(seq_lens, block)
     lens = [max(int(s), 1) for s in seq_lens] or [1]
     avg_context = -(-sum(lens) // len(lens))
     # the pool must also hold the LONGEST request outright, or the engine
     # could never admit it (expected demand alone would undersize the pool
     # on a short-heavy trace with a long tail)
-    max_seq_blocks = max(-(-s // cand.plan.kv_block_size) for s in lens)
+    max_seq_blocks = max(-(-s // block) for s in lens)
     e_frac = (sum(lens) / len(lens)) / max(lens)     # mean/max in (0, 1]
+    nb = [-(-s // block) for s in lens]
+    std_blocks = (sum((b - e_blocks) ** 2 for b in nb) / len(nb)) ** 0.5
+    worst = admission == "worst"
     _blocks_memo: dict = {}
 
     def blocks_at(lanes: int) -> int:
         if lanes not in _blocks_memo:
             width = (_bucket_cover(max(1, int(-(-(lanes * e_frac) // 1))),
-                                   lanes) if compact else None)
+                                   lanes) if compact and not worst else None)
             _blocks_memo[lanes] = PR.serving_block_capacity(
                 cfg, shape, cand.plan, cls, cand.mesh_shape, lanes=lanes,
                 mode=mode, hw=hw, hbm_budget=budget, factors=factors,
-                avg_context=avg_context, decode_width=width) // dp
+                avg_context=avg_context, decode_width=width,
+                admission=admission) // dp
         return _blocks_memo[lanes]
 
     def feasible(lanes: int) -> bool:
-        return blocks_at(lanes) >= max(lanes * e_blocks, max_seq_blocks)
+        if worst:
+            return blocks_at(lanes) >= lanes * max_seq_blocks
+        demand = lanes * e_blocks + sigma_k * std_blocks * lanes ** 0.5
+        return blocks_at(lanes) >= max(demand, max_seq_blocks)
 
     if not feasible(1):
         return 0, 0
@@ -308,7 +330,8 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
                  kv: str = "ring",
                  kv_blocks: Sequence[int] = DEFAULT_KV_BLOCKS,
                  seq_lens: Optional[Sequence[int]] = None,
-                 compact: bool = False):
+                 compact: bool = False, admission: str = "optimistic",
+                 sigma_k: float = 0.0):
     """The serving-engine planning entry: walk the serving lattice
     (kv_shard x kv_block_size x data x model, pipe pinned —
     space.serving_space) and pick the candidate that maximizes admitted
@@ -325,11 +348,19 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
     `predictor.serving_block_capacity` — admit by actual footprint, not
     worst case. `compact` (paged only) charges the decode transient at the
     compacting engine's bucketed expected width instead of the full lane
-    width. Returns (Classification, ServingPlan)."""
+    width. `admission` picks the reservation discipline the inversion
+    assumes — "optimistic" (default; expected demand + `sigma_k` pooled
+    sigmas, pairing with an eviction-capable engine) or "worst" (every
+    lane charged the longest request, the deadlock-free sizing); a
+    candidate's own `admission` extra (when `serving_space` searches it)
+    overrides the call-level value per candidate. Returns
+    (Classification, ServingPlan)."""
     from repro.core import predictor as PR   # lazy, like profiler below
     from repro.core import profiler as PF
     if kv not in ("ring", "paged"):
         raise ValueError(f"plan_serving: unknown kv mode {kv!r}")
+    if admission not in ("optimistic", "worst"):
+        raise ValueError(f"plan_serving: unknown admission {admission!r}")
     if measurer is None:
         measurer = MM.SimulatedMeasurer({"data": n_devices}, cache=cache)
     if cls is None:
@@ -349,24 +380,27 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
     if not cands:
         raise ValueError(f"{space.name}: no valid serving candidates")
     best, best_cap, best_blocks = None, -1, 0
+    best_adm = admission
     for cand in cands:                       # fastest-first => ties keep speed
+        adm = cand.extra("admission", admission)
         if kv == "paged":
             cap, blocks = _paged_concurrency(cfg, shape, cand, cls, budget,
                                              mode, hw, factors, seq_lens,
-                                             compact=compact)
+                                             compact=compact, admission=adm,
+                                             sigma_k=sigma_k)
         else:
             cap = PR.serving_capacity(cfg, shape, cand.plan, cls,
                                       cand.mesh_shape, mode=mode, hw=hw,
                                       hbm_budget=budget, factors=factors)
             blocks = 0
         if cap > best_cap:
-            best, best_cap, best_blocks = cand, cap, blocks
+            best, best_cap, best_blocks, best_adm = cand, cap, blocks, adm
     eplan = for_mesh(cfg, shape, best.plan, best.mesh_shape,
                      policy="max_concurrency")
     return cls, ServingPlan(execution=eplan, capacity=best_cap,
                             hbm_budget=budget, considered=len(cands),
                             kv_block=best.plan.kv_block_size,
-                            blocks=best_blocks)
+                            blocks=best_blocks, admission=best_adm)
 
 
 def plan_execution(cfg: ModelConfig, shape: ShapeConfig,

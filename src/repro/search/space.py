@@ -51,6 +51,7 @@ EXTRA_GROUPS = {
     "gather_weights": "attn",
     "ep": "strategy",
     "fsdp": "strategy",
+    "admission": "serving",
 }
 
 
@@ -119,7 +120,7 @@ def candidate_overrides(cand: Candidate) -> Dict[str, Dict[str, object]]:
     booleans valued None mean "keep the default_strategy choice" (e.g. the
     EP auto-rule) and are dropped."""
     out: Dict[str, Dict[str, object]] = {"settings": {}, "attn": {},
-                                         "strategy": {}}
+                                         "strategy": {}, "serving": {}}
     for name, value in cand.extras:
         bucket = EXTRA_GROUPS[name]
         if bucket == "strategy" and value is None:
@@ -420,7 +421,8 @@ def serving_space(cfg: ModelConfig, shape: ShapeConfig, *,
                   max_devices: int = 256,
                   data: Sequence[int] = (1, 2, 4, 8, 16, 32),
                   model: Sequence[int] = (1, 2, 4, 8, 16),
-                  kv_blocks: Sequence[int] = (0,)) -> ConfigSpace:
+                  kv_blocks: Sequence[int] = (0,),
+                  admission: Sequence[str] = ()) -> ConfigSpace:
     """The serving-engine planning lattice: mesh axes searchable (pipe
     pinned to 1 — the serving runtime is single-shot) and kv_shard a REAL
     knob rather than auto-resolved, because the admission controller cares:
@@ -429,13 +431,20 @@ def serving_space(cfg: ModelConfig, shape: ShapeConfig, *,
     hence different admitted concurrency. `kv_block_size` is the paged-KV
     allocation granule (0 = whole-sequence ring slots): smaller blocks
     track short sequences' true footprint more tightly but pay more
-    block-table indirection. `plan_serving` scores each candidate by
-    `predictor.serving_capacity` (ring) or expected admitted concurrency
-    over the block pool (paged) instead of step time."""
+    block-table indirection. `admission` is the engine reservation
+    discipline the capacity inversion assumes ("optimistic" expected-case
+    vs "worst" deadlock-free-by-construction) — ABSENT by default so
+    `plan_serving(admission=...)` governs; pass a non-empty tuple to make
+    it a searched knob (candidate extras then override the argument).
+    `plan_serving` scores each candidate by `predictor.serving_capacity`
+    (ring) or expected admitted concurrency over the block pool (paged)
+    instead of step time."""
     knobs = [Knob("remat", ("none",)), Knob("microbatches", (1,)),
              Knob("optimizer", ("adamw_f32",)),
              Knob("kv_shard", ("heads", "seq")),
              Knob("kv_block_size", tuple(kv_blocks)),
+             *([Knob("admission", tuple(admission), group="extra")]
+               if admission else []),
              Knob("data", tuple(data), group="mesh"),
              Knob("model", tuple(model), group="mesh"),
              Knob("pipe", (1,), group="mesh")]

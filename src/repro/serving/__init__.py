@@ -6,11 +6,12 @@ machine); the jax-backed executor lives in `repro.serving.executor` and is
 imported lazily so planning/metrics code never touches device state.
 """
 from repro.serving.engine import (  # noqa: F401
-    BlockAllocator, Completion, Engine, POLICIES, ScriptedExecutor,
-    ServeReport,
+    BlockAllocator, Completion, Engine, POLICIES, PoolExhausted,
+    RESERVATIONS, ScriptedExecutor, ServeReport,
 )
 from repro.serving.trace import (  # noqa: F401
-    Request, describe_trace, synthetic_trace, trace_context,
+    LengthStats, Request, describe_trace, length_stats, synthetic_trace,
+    trace_context,
 )
 
 

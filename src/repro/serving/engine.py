@@ -22,6 +22,33 @@ prediction of how many sequences fit the per-device HBM budget
 queue; admission is the memory model acting as the runtime's admission
 controller rather than an offline advisor.
 
+Overload governance rides on the `BlockAllocator` reservation ledger:
+
+  reservation="worst"    — admission reserves every block the request can
+                           ever write (`blocks_for`), so lazy per-tick
+                           allocation can never fail and nothing is ever
+                           preempted. Deadlock-free by construction; the
+                           expected-vs-worst-case headroom goes unadmitted.
+  reservation="expected" — optimistic admission: reserve `E[blocks] +
+                           k·sigma` from the trace's length distribution
+                           (`trace.length_stats` — the paper's
+                           workload-specific prediction applied online)
+                           and let decode overdraft. When the free list
+                           runs dry the engine EVICTS the victim chosen by
+                           SLO class then lowest progress, frees its
+                           non-shared blocks, and requeues it for chunked
+                           re-prefill from its already-emitted tokens —
+                           greedy decode is deterministic, so the replayed
+                           request emits the same stream it would have.
+
+Refcounted prefix sharing (`prefix_share=True`): requests carrying a
+common system prompt (`Request.prefix_id`) map their leading
+`prefix_len // block_size` table entries to shared physical blocks — one
+prefill per unique prefix; the boundary partial block is private per
+request (copy-on-write by recompute: the suffix chunk rewrites it into
+an owned block). Decode can never write a shared block: a sharer's write
+positions satisfy `pos >= prefix_len >= shared_blocks * block_size`.
+
 Two admission policies share every other line of the loop:
 
   continuous — claim any free slot the moment a queued request can take it
@@ -37,9 +64,17 @@ import collections
 import dataclasses
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
-from repro.serving.trace import Request
+from repro.serving.trace import LengthStats, Request
 
 POLICIES = ("continuous", "static")
+RESERVATIONS = ("worst", "expected")
+
+
+class PoolExhausted(RuntimeError):
+    """The free list is empty and no unreferenced cached prefix remains to
+    reclaim. Reachable only under reservation="expected" (worst-case
+    reservations guarantee a free block for every legal alloc) — the
+    engine answers by evicting a victim and retrying."""
 
 
 class BlockAllocator:
@@ -47,28 +82,46 @@ class BlockAllocator:
 
     Physical ids run 1..n_blocks (id 0 is the executor's scratch block for
     inactive decode lanes — never handed out). Admission reserves a
-    request's WORST-CASE OWN footprint up front (`blocks_for`: the blocks
-    its prompt + max_new positions can ever write — short requests reserve
-    few blocks, which is the whole win over whole-context ring slots) and
-    physical blocks are allocated lazily as decode crosses block
-    boundaries, so `alloc` inside a reservation can never fail and the
-    engine can never deadlock mid-decode. `free` returns a completed
-    request's blocks to the pool for immediate reuse.
+    request's OWN footprint up front and physical blocks are allocated
+    lazily as decode crosses block boundaries. Under the default
+    `reservation="worst"` the reservation is `blocks_for` (every block the
+    request can ever write), so `alloc` inside a reservation can never
+    fail and the engine can never deadlock mid-decode; `free` returns a
+    completed request's blocks to the pool for immediate reuse. Under
+    `reservation="expected"` the engine reserves its safety-margined
+    expected footprint instead and `alloc` may overdraft past it — when
+    the free list is empty and no cached prefix is reclaimable, `alloc`
+    raises `PoolExhausted` and the engine evicts.
+
+    Shared prefixes are refcounted side ledgers: `create_prefix` carves
+    blocks out of the free list, `acquire_prefix`/`release_prefix` track
+    the requests reading through them, and a prefix at refcount 0 stays
+    CACHED (a later request re-acquires it without re-prefilling) but is
+    reclaimable under pressure. `committed` counts reservations plus
+    referenced prefix blocks — cached-but-unreferenced prefixes are free
+    capacity as far as admission is concerned.
     """
 
-    def __init__(self, n_blocks: int, block_size: int):
+    def __init__(self, n_blocks: int, block_size: int,
+                 reservation: str = "worst"):
         if n_blocks < 1:
             raise ValueError(f"BlockAllocator needs n_blocks >= 1, got "
                              f"{n_blocks} (serving_block_capacity said "
                              "nothing fits — raise the budget)")
         if block_size < 1:
             raise ValueError(f"block_size must be >= 1, got {block_size}")
+        if reservation not in RESERVATIONS:
+            raise ValueError(f"unknown reservation mode {reservation!r}; "
+                             f"known: {RESERVATIONS}")
         self.n_blocks = int(n_blocks)
         self.block_size = int(block_size)
+        self.reservation = reservation
         self._free: Deque[int] = collections.deque(range(1, n_blocks + 1))
         self._owned: Dict[int, List[int]] = {}     # rid -> physical ids
-        self._reserved: Dict[int, int] = {}        # rid -> total reservation
-        self.committed = 0                         # sum of live reservations
+        self._reserved: Dict[int, int] = {}        # rid -> reservation
+        # prefix key -> {"blocks": [...], "refs": int}; insertion order is
+        # the (deterministic) reclaim order
+        self._prefix: Dict[object, Dict] = {}
         self.peak_in_use = 0
         self.peak_committed = 0
 
@@ -77,6 +130,17 @@ class BlockAllocator:
         0..prompt+max_new-2 (the last generated token is never cached)."""
         written = len(req.prompt) + req.max_new - 1
         return max(-(-written // self.block_size), 1)
+
+    @property
+    def committed(self) -> int:
+        """Blocks promised or held: per-request max(reservation, owned)
+        (expected-mode overdrafts count at their real size) plus every
+        REFERENCED prefix block."""
+        own = sum(max(n, len(self._owned[rid]))
+                  for rid, n in self._reserved.items())
+        pfx = sum(len(p["blocks"]) for p in self._prefix.values()
+                  if p["refs"] > 0)
+        return own + pfx
 
     def can_admit(self, n: int) -> bool:
         return self.committed + n <= self.n_blocks
@@ -88,22 +152,78 @@ class BlockAllocator:
             raise RuntimeError(f"request {rid} already holds a reservation")
         self._reserved[rid] = n
         self._owned[rid] = []
-        self.committed += n
         self.peak_committed = max(self.peak_committed, self.committed)
 
     def alloc(self, rid: int) -> int:
-        if len(self._owned[rid]) >= self._reserved[rid]:
+        if rid not in self._owned:
+            raise RuntimeError(f"request {rid} holds no reservation")
+        if (self.reservation == "worst"
+                and len(self._owned[rid]) >= self._reserved[rid]):
             raise RuntimeError(f"request {rid} exceeded its reservation")
-        bid = self._free.popleft()       # cannot be empty: see class doc
+        if not self._free and not self._reclaim():
+            raise PoolExhausted(f"no free block for request {rid}: "
+                                f"{self.in_use}/{self.n_blocks} in use, "
+                                "no cached prefix to reclaim")
+        bid = self._free.popleft()
         self._owned[rid].append(bid)
         self.peak_in_use = max(self.peak_in_use, self.in_use)
+        self.peak_committed = max(self.peak_committed, self.committed)
         return bid
 
     def free(self, rid: int) -> List[int]:
+        if rid not in self._owned:
+            raise RuntimeError(f"request {rid} owns no blocks "
+                               "(double free, or never reserved)")
         ids = self._owned.pop(rid)
-        self.committed -= self._reserved.pop(rid)
+        del self._reserved[rid]
         self._free.extend(ids)           # FIFO reuse: deterministic
         return ids
+
+    # -- shared prefixes ----------------------------------------------------
+
+    def create_prefix(self, key, n: int) -> Optional[List[int]]:
+        """Carve `n` blocks for a shared prefix (refcount 0 until
+        acquired). Returns None — without mutating anything — if the pool
+        can't physically supply them even after reclaiming cached
+        prefixes."""
+        if n < 1:
+            raise ValueError(f"create_prefix needs n >= 1, got {n}")
+        if key in self._prefix:
+            raise RuntimeError(f"prefix {key!r} already cached")
+        while len(self._free) < n:
+            if not self._reclaim():
+                return None
+        blocks = [self._free.popleft() for _ in range(n)]
+        self._prefix[key] = {"blocks": blocks, "refs": 0}
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return list(blocks)
+
+    def acquire_prefix(self, key) -> List[int]:
+        p = self._prefix[key]
+        p["refs"] += 1
+        self.peak_committed = max(self.peak_committed, self.committed)
+        return list(p["blocks"])
+
+    def release_prefix(self, key) -> None:
+        p = self._prefix.get(key)
+        if p is None or p["refs"] <= 0:
+            raise RuntimeError(f"prefix {key!r} refcount would go negative")
+        p["refs"] -= 1
+
+    def prefix_refs(self, key) -> int:
+        """Refcount of a cached prefix; -1 if not cached (never created,
+        or reclaimed under pressure)."""
+        p = self._prefix.get(key)
+        return -1 if p is None else p["refs"]
+
+    def _reclaim(self) -> bool:
+        """Drop the oldest refcount-0 cached prefix back to the free list."""
+        for key, p in self._prefix.items():
+            if p["refs"] == 0:
+                self._free.extend(p["blocks"])
+                del self._prefix[key]
+                return True
+        return False
 
     @property
     def in_use(self) -> int:
@@ -113,17 +233,29 @@ class BlockAllocator:
     def free_blocks(self) -> int:
         return len(self._free)
 
+    @property
+    def available_blocks(self) -> int:
+        """Physically obtainable blocks: the free list plus every cached
+        prefix an `alloc` could reclaim."""
+        return len(self._free) + sum(len(p["blocks"])
+                                     for p in self._prefix.values()
+                                     if p["refs"] == 0)
+
 
 @dataclasses.dataclass
 class _Active:
     """One claimed slot: the request plus its decode cursor."""
     req: Request
-    admitted: int                # engine tick of admission
+    admitted: int                # engine tick of FIRST admission
     pos: int                     # next decode position (== tokens emitted + prompt)
     remaining: int               # decode steps still owed
-    tokens: List[int]            # generated so far (first from prefill)
+    tokens: List[int]            # ALL generated so far (first from prefill)
     table: List[int] = dataclasses.field(default_factory=list)  # paged: phys block ids
     pending: Tuple[int, ...] = ()  # prompt tail not yet prefilled (chunked)
+    prior: Tuple[int, ...] = ()  # tokens emitted before an eviction (the
+                                 # re-prefill appends them to the prompt)
+    prefix_key: Optional[object] = None   # shared prefix this lane reads
+    first_token: int = -1        # tick the FIRST token was emitted (-1: none)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -133,6 +265,7 @@ class Completion:
     arrival: int = 0
     admitted: int = 0
     finished: int = 0
+    first_token: int = 0
 
     @property
     def latency(self) -> int:
@@ -142,6 +275,21 @@ class Completion:
     @property
     def queue_delay(self) -> int:
         return self.admitted - self.arrival
+
+    @property
+    def ttft(self) -> int:
+        """Time to first token in ticks (the tail metric eviction and
+        chunked prefill move)."""
+        return self.first_token - self.arrival
+
+
+def _percentile(vals: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile (deterministic, no interpolation)."""
+    if not vals:
+        return 0.0
+    s = sorted(vals)
+    rank = max(1, min(len(s), -(-int(q * len(s)) // 100)))
+    return float(s[rank - 1])
 
 
 @dataclasses.dataclass
@@ -161,13 +309,14 @@ class ServeReport:
     prefill_calls: int = 0       # batched prefill invocations (<= prefills)
     n_blocks: int = 0            # paged pool size (0 = ring slots)
     peak_blocks: int = 0         # peak physical blocks in use (paged)
-    admit_ticks: int = 0         # ticks that only admitted / chunked a
-                                 # prompt (no decode) — the invariant is
+    admit_ticks: int = 0         # ticks that only admitted / chunked /
+                                 # evicted (no decode) — the invariant is
                                  # ticks == decode + admit + idle
     decode_lane_tokens: int = 0  # sum over decode ticks of the width the
                                  # executor actually computed at (== n_slots
                                  # x decode_ticks without lane compaction)
     chunk_calls: int = 0         # batched chunk-prefill invocations
+    evictions: int = 0           # evict-and-requeue events (expected mode)
 
     @property
     def generated_tokens(self) -> int:
@@ -190,6 +339,19 @@ class ServeReport:
             return 0.0
         return sum(c.latency for c in self.completions) / len(self.completions)
 
+    def latency_percentiles(self, qs: Sequence[int] = (50, 95, 99)) -> Dict[str, float]:
+        lat = [c.latency for c in self.completions]
+        return {f"p{q}": _percentile(lat, q) for q in qs}
+
+    def ttft_percentiles(self, qs: Sequence[int] = (50, 95, 99)) -> Dict[str, float]:
+        t = [c.ttft for c in self.completions]
+        return {f"p{q}": _percentile(t, q) for q in qs}
+
+    def mean_ttft(self) -> float:
+        if not self.completions:
+            return 0.0
+        return sum(c.ttft for c in self.completions) / len(self.completions)
+
     def block_occupancy(self) -> float:
         """Paged pools: peak fraction of physical blocks in use."""
         return self.peak_blocks / self.n_blocks if self.n_blocks else 0.0
@@ -202,12 +364,18 @@ class ServeReport:
                       f"{self.decode_lane_tokens / self.decode_ticks:.1f}")
         if self.chunk_calls:
             paged += f" chunk_calls={self.chunk_calls}"
+        if self.evictions:
+            paged += f" evictions={self.evictions}"
+        lp = self.latency_percentiles()
+        tp = self.ttft_percentiles()
         return (f"[{self.policy}] slots={self.n_slots} "
                 f"completed={len(self.completions)} "
                 f"tokens={self.generated_tokens} ticks={self.ticks} "
                 f"occupancy={self.occupancy():.3f} "
                 f"throughput={self.throughput():.2f} tok/tick "
                 f"mean_latency={self.mean_latency():.1f} ticks "
+                f"lat_p50/p95/p99={lp['p50']:.0f}/{lp['p95']:.0f}/"
+                f"{lp['p99']:.0f} ttft_p95={tp['p95']:.0f} "
                 f"peak_queue={self.peak_queue} "
                 f"max_concurrent={self.max_concurrent}"
                 f"{paged}")
@@ -215,12 +383,19 @@ class ServeReport:
 
 class ScriptedExecutor:
     """Deterministic jax-free executor: closed-form token functions stand in
-    for the model so the scheduler core (admission, claim/free, metrics)
-    can be pinned by the hermetic test tier and compared across policies
-    (and ring vs paged, compacted vs full-width, chunked vs whole-prompt
-    prefill) without a single compile. `buckets` emulates the paged
-    executor's lane compaction: decode_width returns the smallest covering
-    bucket and every decode tick's width is recorded in `tick_widths`."""
+    for the model so the scheduler core (admission, claim/free, metrics,
+    eviction, prefix sharing) can be pinned by the hermetic test tier and
+    compared across policies without a single compile.
+
+    The token functions are SUFFIX-CONSISTENT, mirroring the property the
+    real executor gets from its KV cache: `prefill(prompt)` equals
+    `decode(prompt[-1], len(prompt) - 1)`, so prefilling `prompt +
+    emitted` reproduces exactly the token the interrupted decode would
+    have produced next — which is what makes evict-and-requeue and
+    prefix-suffix prefill token-identical by construction. `buckets`
+    emulates the paged executor's lane compaction: decode_width returns
+    the smallest covering bucket and every decode tick's width is
+    recorded in `tick_widths`."""
 
     def __init__(self, vocab_size: int = 97,
                  buckets: Optional[Sequence[int]] = None):
@@ -230,12 +405,19 @@ class ScriptedExecutor:
         self.prefill_batches = 0
         self.decodes = 0
         self.chunk_calls = 0
+        self.chunk_tokens = 0
         self.tick_widths: List[int] = []
-        self._partial: Dict[int, List[int]] = {}   # lane -> prompt so far
+        # lane -> (start of accumulation, tokens accumulated so far)
+        self._partial: Dict[int, Tuple[int, List[int]]] = {}
+
+    def _token_at(self, last: int, pos: int) -> int:
+        """The token emitted after consuming token `last` at position
+        `pos` — shared by prefill and decode (suffix consistency)."""
+        return (17 * last + 7 * pos + 13) % self.vocab_size
 
     def prefill(self, slot: int, prompt: Sequence[int]) -> int:
         self.prefills += 1
-        return (sum(prompt) + 31 * len(prompt)) % self.vocab_size
+        return self._token_at(prompt[-1], len(prompt) - 1)
 
     def prefill_batch(self, slots: Sequence[int],
                       prompts: Sequence[Sequence[int]],
@@ -250,16 +432,24 @@ class ScriptedExecutor:
                        tables: Optional[Sequence[Sequence[int]]] = None,
                        final: Optional[Sequence[bool]] = None) -> List[int]:
         """Accumulate chunks per lane; on a lane's final chunk emit exactly
-        what a whole-prompt prefill of the accumulated tokens would — so
-        chunked and unchunked scheduling are token-identical by
-        construction, like the real executor."""
+        what a whole-prompt prefill reaching the same last (token,
+        position) would — so chunked, prefix-suffix and re-prefill
+        scheduling are all token-identical by construction, like the real
+        executor. A start that doesn't continue the lane's accumulation
+        resets it (the engine evicted and re-admitted that lane)."""
         self.chunk_calls += 1
         out: List[int] = []
         for j, lane in enumerate(lanes):
-            acc = self._partial.setdefault(lane, [])
-            acc.extend(chunks[j])
+            state = self._partial.get(lane)
+            if state is None or state[0] + len(state[1]) != starts[j]:
+                state = (starts[j], [])
+                self._partial[lane] = state
+            state[1].extend(chunks[j])
+            self.chunk_tokens += len(chunks[j])
             if final is not None and final[j]:
-                out.append(self.prefill(lane, self._partial.pop(lane)))
+                start, acc = self._partial.pop(lane)
+                self.prefills += 1
+                out.append(self._token_at(acc[-1], start + len(acc) - 1))
             else:
                 out.append(0)
         return out
@@ -283,8 +473,7 @@ class ScriptedExecutor:
         n_active = len(lanes) if lanes is not None else len(tokens)
         width = self.decode_width(n_active)
         self.tick_widths.append(width if width is not None else len(tokens))
-        return [(17 * t + 7 * p + 13) % self.vocab_size
-                for t, p in zip(tokens, positions)]
+        return [self._token_at(t, p) for t, p in zip(tokens, positions)]
 
 
 class Engine:
@@ -299,11 +488,21 @@ class Engine:
     short requests reserve few blocks, so many more of them fit the same
     HBM budget than worst-case ring slots would admit. One `run()` call
     replays one trace to completion.
+
+    With an `reservation="expected"` allocator, pass the trace's
+    `length_stats` as `stats`: admission reserves
+    `ceil((E[written | prompt bucket] + sigma_k·sigma) / block_size)`
+    own blocks instead of the worst case, and pool misses are handled by
+    SLO-then-progress eviction (see module docstring). `prefix_share=True`
+    (needs `chunk_prefill` — suffixes ride the chunked path) maps common
+    system-prompt blocks to shared refcounted physical blocks.
     """
 
     def __init__(self, executor, n_slots: int, policy: str = "continuous",
                  allocator: Optional[BlockAllocator] = None,
-                 chunk_prefill: int = 0):
+                 chunk_prefill: int = 0, prefix_share: bool = False,
+                 stats: Optional[LengthStats] = None,
+                 sigma_k: float = 1.0):
         if n_slots < 1:
             raise ValueError(f"Engine needs n_slots >= 1, got {n_slots} "
                              "(serving_capacity said nothing fits — lower "
@@ -318,6 +517,15 @@ class Engine:
             raise ValueError(f"chunk_prefill={chunk_prefill} must be a "
                              f"multiple of the kv block size "
                              f"{allocator.block_size}")
+        if prefix_share and allocator is None:
+            raise ValueError("prefix_share needs a BlockAllocator (shared "
+                             "prefixes live in the paged block pool)")
+        if prefix_share and not chunk_prefill:
+            raise ValueError("prefix_share needs chunk_prefill > 0 (a "
+                             "sharer's suffix prefill rides the chunked "
+                             "path)")
+        if sigma_k < 0:
+            raise ValueError(f"sigma_k must be >= 0, got {sigma_k}")
         self.executor = executor
         self.n_slots = int(n_slots)
         self.policy = policy
@@ -325,6 +533,36 @@ class Engine:
         # prompts longer than this prefill `chunk_prefill` positions per
         # tick (0 = whole-prompt prefill at admission)
         self.chunk_prefill = int(chunk_prefill)
+        self.prefix_share = bool(prefix_share)
+        self.stats = stats
+        self.sigma_k = float(sigma_k)
+        # per-run state (reset by run()): rid -> resume record after an
+        # eviction; prefix key -> {"ready": bool, "writer": rid|None}
+        self._resume: Dict[int, Dict] = {}
+        self._prefix_state: Dict[object, Dict] = {}
+        self._evictions = 0
+
+    # -- admission sizing ---------------------------------------------------
+
+    def _own_reservation(self, req: Request, n_shared: int, eff_len: int,
+                         chunked: bool, resumed: bool) -> int:
+        """Blocks to reserve for a request's OWN (non-shared) footprint.
+        Worst mode: everything it can ever write beyond the shared prefix.
+        Expected mode: the safety-margined expected footprint, floored at
+        what admission allocates immediately (whole-prompt prefill) and
+        capped at the worst case. Re-admitted requests reserve worst-case
+        — their length is no longer a prediction, and a full reservation
+        keeps them from thrashing back out."""
+        alloc = self.allocator
+        worst_own = max(alloc.blocks_for(req) - n_shared, 0)
+        if (alloc.reservation != "expected" or self.stats is None
+                or resumed):
+            return worst_own
+        exp = self.stats.expected_written(len(req.prompt), self.sigma_k)
+        exp_own = -(-int(exp) // alloc.block_size) - n_shared
+        now_own = 0 if chunked else (-(-eff_len // alloc.block_size)
+                                     - n_shared)
+        return max(now_own, min(worst_own, max(exp_own, 0)))
 
     # -- scheduling core ---------------------------------------------------
 
@@ -337,58 +575,208 @@ class Engine:
         if self.policy == "static" and any(s is not None for s in slots):
             return 0, 0                   # fixed batch: wait for the pool
         alloc = self.allocator
-        picked: List[Tuple[int, Request]] = []
+        # physical blocks this tick's admissions may immediately consume —
+        # pre-checked so the admission path can never hit PoolExhausted
+        # (only decode/chunk overdrafts evict)
+        avail = alloc.available_blocks if alloc is not None else 0
+        picked: List[Tuple] = []   # (slot, req, eff_prompt, meta, seed, key)
         for i in range(self.n_slots):
             if not queue:
                 break
             if slots[i] is not None:
                 continue
             req = queue[0]
+            meta = self._resume.get(req.rid)
+            prior = tuple(meta["tokens"]) if meta else ()
+            eff = req.prompt + prior
+            # shared-prefix plumbing: the first request naming a prefix
+            # becomes its WRITER (prefills it into freshly carved blocks);
+            # later ones only attach once the prefix KV is real
+            key = None
+            n_cached = 0          # blocks the prefix cache entry holds
+            n_shared = 0          # prefix blocks seeded into THIS table
+            writer = False
+            if (self.prefix_share and alloc is not None
+                    and req.prefix_id is not None
+                    and req.prefix_len >= alloc.block_size):
+                key = req.prefix_id
+                n_cached = req.prefix_len // alloc.block_size
+                state = self._prefix_state.get(key)
+                if state is not None and alloc.prefix_refs(key) < 0:
+                    # reclaimed under pressure while unreferenced
+                    del self._prefix_state[key]
+                    state = None
+                if (state is not None and not state["ready"]
+                        and state["writer"] is not None):
+                    break         # writer mid-prefill: hold FIFO until real
+                writer = state is None or not state["ready"]
+                # a sharer never maps a block it would have to write: its
+                # private suffix starts in block (eff_len-1)//B at the latest
+                n_shared = (n_cached if writer
+                            else min(n_cached,
+                                     (len(eff) - 1) // alloc.block_size))
+                if n_shared < 1 and not writer:
+                    key = None    # degenerate: nothing shareable
+            chunked = bool(self.chunk_prefill) and (
+                len(eff) > self.chunk_prefill
+                or (key is not None and not writer))
+            seed: List[int] = []
             if alloc is not None:
-                need = alloc.blocks_for(req)
-                if not alloc.can_admit(need):
+                own = self._own_reservation(req, n_shared, len(eff),
+                                            chunked, bool(meta))
+                pfx_cost = (n_cached if key is not None
+                            and alloc.prefix_refs(key) <= 0 else 0)
+                if not alloc.can_admit(own + pfx_cost):
                     break                 # FIFO: no overtaking the head
-                alloc.reserve(req.rid, need)
-            picked.append((i, queue.popleft()))
+                now = 0 if chunked else (-(-len(eff) // alloc.block_size)
+                                         - n_shared)
+                if key is not None and alloc.prefix_refs(key) < 0:
+                    now += n_cached       # prefix blocks carved this tick
+                if now > avail:
+                    break                 # physically can't land this tick
+                if key is not None and alloc.prefix_refs(key) < 0:
+                    blocks = alloc.create_prefix(key, n_cached)
+                    if blocks is None:
+                        break
+                    self._prefix_state[key] = {"ready": False,
+                                               "writer": req.rid}
+                    # stale data in carved blocks must not leak through the
+                    # position mask while the writer is still mid-chunk
+                    self.executor.fresh_blocks(blocks)
+                pfx_blocks: List[int] = []
+                if key is not None:
+                    pfx_blocks = alloc.acquire_prefix(key)
+                    if writer:
+                        self._prefix_state[key]["writer"] = req.rid
+                        self._prefix_state[key]["ready"] = False
+                    seed = pfx_blocks[:n_shared]
+                alloc.reserve(req.rid, own)
+                avail -= now
+            queue.popleft()
+            if meta is not None:
+                del self._resume[req.rid]
+            picked.append((i, req, eff, meta, seed, key, writer, chunked))
         if not picked:
             return 0, 0
-        by_len: Dict[int, List[Tuple[int, Request]]] = {}
-        for i, req in picked:
-            if self.chunk_prefill and len(req.prompt) > self.chunk_prefill:
+        by_len: Dict[int, List[Tuple]] = {}
+        for item in picked:
+            i, req, eff, meta, seed, key, writer, chunked = item
+            if chunked:
                 # chunked admission: the lane is claimed now but its prompt
-                # is appended chunk-by-chunk by _advance_chunks (no decode
-                # cursor yet — remaining counts ALL owed tokens)
-                slots[i] = _Active(req=req, admitted=tick, pos=0,
-                                   remaining=req.max_new, tokens=[],
-                                   pending=tuple(req.prompt))
+                # (or private suffix, for a prefix sharer) is appended
+                # chunk-by-chunk by _advance_chunks (no decode cursor yet).
+                # A prefix WRITER prefills from position 0 — it is the one
+                # writing the shared prefix KV — so only a SHARER skips the
+                # seeded blocks.
+                skip = (0 if writer else
+                        len(seed) * (self.allocator.block_size
+                                     if self.allocator else 0))
+                prior = tuple(meta["tokens"]) if meta else ()
+                slots[i] = _Active(
+                    req=req, admitted=(meta["admitted"] if meta else tick),
+                    pos=0, remaining=req.max_new - len(prior), tokens=[],
+                    table=list(seed), pending=eff[skip:], prior=prior,
+                    prefix_key=key,
+                    first_token=(meta["first_token"] if meta else -1))
                 continue
-            by_len.setdefault(len(req.prompt), []).append((i, req))
+            by_len.setdefault(len(eff), []).append(item)
         if not by_len:
             return len(picked), 0
+        alloc = self.allocator
         calls = 0
         for plen in sorted(by_len):
             group = by_len[plen]
-            lanes = [i for i, _ in group]
-            prompts = [req.prompt for _, req in group]
+            lanes = [item[0] for item in group]
+            prompts = [item[2] for item in group]
             tables = None
             if alloc is not None:
                 tables = []
-                for i, req in group:
+                for i, req, eff, meta, seed, key, writer, _ in group:
                     nb0 = max(-(-plen // alloc.block_size), 1)
-                    tables.append([alloc.alloc(req.rid)
-                                   for _ in range(nb0)])
+                    tbl = list(seed)
+                    while len(tbl) < nb0:
+                        tbl.append(alloc.alloc(req.rid))
+                    tables.append(tbl)
             firsts = self.executor.prefill_batch(lanes, prompts,
                                                  tables=tables)
             calls += 1
-            for gi, (i, req) in enumerate(group):
-                slots[i] = _Active(req=req, admitted=tick, pos=plen,
-                                   remaining=req.max_new - 1,
-                                   tokens=[int(firsts[gi])],
-                                   table=(tables[gi] if tables is not None
-                                          else []))
+            for gi, (i, req, eff, meta, seed, key, writer, _) \
+                    in enumerate(group):
+                prior = tuple(meta["tokens"]) if meta else ()
+                ft = (meta["first_token"] if meta
+                      and meta["first_token"] >= 0 else tick)
+                slots[i] = _Active(
+                    req=req, admitted=(meta["admitted"] if meta else tick),
+                    pos=plen, remaining=req.max_new - len(prior) - 1,
+                    tokens=list(prior) + [int(firsts[gi])],
+                    table=(tables[gi] if tables is not None else []),
+                    prior=prior, prefix_key=key, first_token=ft)
+                if key is not None and writer:
+                    # whole-prompt prefill wrote the prefix blocks in full
+                    self._prefix_state[key]["ready"] = True
         return len(picked), calls
 
-    def _advance_chunks(self, slots: List[Optional[_Active]]) -> int:
+    def _pick_victim(self, slots: List[Optional[_Active]]) -> int:
+        """The lane to evict under pool pressure: loosest SLO class first
+        (highest `Request.slo`), then least progress (fewest tokens
+        emitted — the cheapest re-prefill), then most recently admitted,
+        then highest rid. Deterministic."""
+        occ = [i for i in range(self.n_slots) if slots[i] is not None]
+        if not occ:
+            raise RuntimeError("pool exhausted with no lane to evict "
+                               "(allocator invariant broken)")
+
+        def key(i):
+            a = slots[i]
+            progress = len(a.tokens) if a.tokens else len(a.prior)
+            return (-a.req.slo, progress, -a.admitted, -a.req.rid)
+        return min(occ, key=key)
+
+    def _evict(self, slots: List[Optional[_Active]], i: int,
+               queue: Deque[Request]) -> None:
+        """Free lane `i`'s own blocks (shared prefix blocks only lose a
+        reference), remember its emitted tokens, and requeue it at the
+        queue head for chunked re-prefill of prompt + emitted — greedy
+        decode is deterministic, so the replay emits the same stream."""
+        a = slots[i]
+        alloc = self.allocator
+        alloc.free(a.req.rid)
+        if a.prefix_key is not None:
+            alloc.release_prefix(a.prefix_key)
+            st = self._prefix_state.get(a.prefix_key)
+            if (st is not None and st["writer"] == a.req.rid
+                    and not st["ready"]):
+                st["writer"] = None      # next matching request re-writes
+        emitted = list(a.tokens) if a.tokens else list(a.prior)
+        self._resume[a.req.rid] = {"tokens": emitted, "admitted": a.admitted,
+                                   "first_token": a.first_token}
+        queue.appendleft(a.req)
+        slots[i] = None
+        self._evictions += 1
+
+    def _alloc_through(self, slots: List[Optional[_Active]], i: int,
+                       last_block: int, queue: Deque[Request],
+                       fresh: List[int]) -> bool:
+        """Grow lane `i`'s table until it covers logical block
+        `last_block`, evicting on pool exhaustion. Returns False if lane
+        `i` evicted ITSELF (the caller must drop it this tick)."""
+        a = slots[i]
+        alloc = self.allocator
+        while last_block >= len(a.table):
+            try:
+                bid = alloc.alloc(a.req.rid)
+            except PoolExhausted:
+                v = self._pick_victim(slots)
+                self._evict(slots, v, queue)
+                if v == i:
+                    return False
+                continue
+            a.table.append(bid)
+            fresh.append(bid)
+        return True
+
+    def _advance_chunks(self, slots: List[Optional[_Active]],
+                        queue: Deque[Request]) -> int:
         """Advance every mid-prefill lane by one prompt chunk in ONE
         batched call (blocks allocated lazily per chunk, freshly re-linked
         ones invalidated first). A lane whose final chunk lands gets its
@@ -398,34 +786,45 @@ class Engine:
         if not lanes:
             return 0
         alloc = self.allocator
-        chunks, starts, tables, final = [], [], [], []
+        chunks, starts, tables, final, live = [], [], [], [], []
         fresh: List[int] = []
         for i in lanes:
             a = slots[i]
-            start = len(a.req.prompt) - len(a.pending)
+            if a is None or not a.pending:
+                continue                 # evicted by an earlier lane's
+                                         # pool pressure this same tick
+            eff_len = len(a.req.prompt) + len(a.prior)
+            start = eff_len - len(a.pending)
             c = a.pending[:self.chunk_prefill]
-            a.pending = a.pending[self.chunk_prefill:]
             if alloc is not None:
                 last = start + len(c) - 1
-                while last // alloc.block_size >= len(a.table):
-                    bid = alloc.alloc(a.req.rid)
-                    a.table.append(bid)
-                    fresh.append(bid)
+                if not self._alloc_through(slots, i,
+                                           last // alloc.block_size,
+                                           queue, fresh):
+                    continue             # evicted itself: chunk not issued
+            a.pending = a.pending[self.chunk_prefill:]
+            live.append(i)
             chunks.append(c)
             starts.append(start)
             tables.append(list(a.table))
             final.append(not a.pending)
+        if not live:
+            return 0
         if fresh:
             self.executor.fresh_blocks(fresh)
         firsts = self.executor.prefill_chunks(
-            lanes, chunks, starts,
+            live, chunks, starts,
             tables=(tables if alloc is not None else None), final=final)
-        for j, i in enumerate(lanes):
+        for j, i in enumerate(live):
             a = slots[i]
             if final[j]:
-                a.tokens = [int(firsts[j])]
-                a.pos = len(a.req.prompt)
-                a.remaining = a.req.max_new - 1
+                a.tokens = list(a.prior) + [int(firsts[j])]
+                a.pos = len(a.req.prompt) + len(a.prior)
+                a.remaining = a.req.max_new - len(a.prior) - 1
+                if a.prefix_key is not None:
+                    st = self._prefix_state.get(a.prefix_key)
+                    if st is not None and st["writer"] == a.req.rid:
+                        st["ready"] = True   # prefix KV fully written
         return 1
 
     def run(self, trace: Sequence[Request],
@@ -452,26 +851,34 @@ class Engine:
         admit_only = lane_tokens = chunk_calls = 0
         peak_queue = max_concurrent = prefills = prefill_calls = 0
         alloc = self.allocator
+        self._resume = {}
+        self._prefix_state = {}
+        self._evictions = 0
 
         def finish(i: int, when: int) -> None:
             a = slots[i]
+            ft = a.first_token if a.first_token >= 0 else when
             completions.append(Completion(
                 rid=a.req.rid, tokens=tuple(a.tokens),
-                arrival=a.req.arrival, admitted=a.admitted, finished=when))
+                arrival=a.req.arrival, admitted=a.admitted, finished=when,
+                first_token=ft))
             if alloc is not None:
                 alloc.free(a.req.rid)
+                if a.prefix_key is not None:
+                    alloc.release_prefix(a.prefix_key)
             slots[i] = None
 
         while pending or queue or any(s is not None for s in slots):
             if tick >= max_ticks:
                 raise RuntimeError(f"engine exceeded max_ticks={max_ticks}")
+            ev0 = self._evictions
             while pending and pending[0].arrival <= tick:
                 queue.append(pending.popleft())
             admitted, calls = self._admit(queue, slots, tick)
             prefills += admitted
             prefill_calls += calls
-            chunked = (self._advance_chunks(slots) if self.chunk_prefill
-                       else 0)
+            chunked = (self._advance_chunks(slots, queue)
+                       if self.chunk_prefill else 0)
             chunk_calls += chunked
             peak_queue = max(peak_queue, len(queue))
             concurrent = sum(s is not None for s in slots)
@@ -479,11 +886,30 @@ class Engine:
             # single-token requests complete at admission (prefill emitted
             # their only token)
             for i in range(self.n_slots):
-                if slots[i] is not None and slots[i].remaining == 0:
+                if (slots[i] is not None and not slots[i].pending
+                        and slots[i].remaining == 0):
                     finish(i, tick)
             # mid-prefill lanes hold a slot but have no decode cursor yet
             active = [i for i in range(self.n_slots)
                       if slots[i] is not None and not slots[i].pending]
+            if alloc is not None and active:
+                # allocate-on-decode-tick: a lane crossing into a new
+                # logical block gets a physical block from the free list
+                # (its reservation guarantees one in worst mode; expected
+                # mode overdrafts and EVICTS on a dry pool) — freshly
+                # re-linked blocks are invalidated first so a previous
+                # owner's positions can't leak through the mask
+                fresh: List[int] = []
+                for i in active:
+                    a = slots[i]
+                    if a is None or slots[i] is not a:
+                        continue         # evicted earlier this tick
+                    self._alloc_through(slots, i,
+                                        a.pos // alloc.block_size,
+                                        queue, fresh)
+                if fresh:
+                    self.executor.fresh_blocks(fresh)
+                active = [i for i in active if slots[i] is not None]
             if active:
                 tokens = [slots[i].tokens[-1]
                           if slots[i] is not None and slots[i].tokens else 0
@@ -491,20 +917,6 @@ class Engine:
                 positions = [slots[i].pos if slots[i] is not None else 0
                              for i in range(self.n_slots)]
                 if alloc is not None:
-                    # allocate-on-decode-tick: a lane crossing into a new
-                    # logical block gets a physical block from the free
-                    # list (its reservation guarantees one) — freshly
-                    # re-linked blocks are invalidated first so a previous
-                    # owner's positions can't leak through the mask
-                    fresh: List[int] = []
-                    for i in active:
-                        a = slots[i]
-                        while a.pos // alloc.block_size >= len(a.table):
-                            bid = alloc.alloc(a.req.rid)
-                            a.table.append(bid)
-                            fresh.append(bid)
-                    if fresh:
-                        self.executor.fresh_blocks(fresh)
                     tables = [slots[i].table if slots[i] is not None else []
                               for i in range(self.n_slots)]
                     nxt = self.executor.decode(tokens, positions,
@@ -519,18 +931,25 @@ class Engine:
                 lane_tokens += width if width is not None else self.n_slots
                 for i in active:
                     a = slots[i]
+                    if a.first_token < 0:
+                        a.first_token = tick
                     a.tokens.append(int(nxt[i]))
                     a.pos += 1
                     a.remaining -= 1
                     if a.remaining == 0:
                         finish(i, tick)
-            elif admitted or chunked:
-                # at-admission completions / prompt chunks did real work
-                # this tick even though no decode ran — the taxonomy
-                # invariant is ticks == decode + admit + idle
+            elif admitted or chunked or self._evictions > ev0:
+                # at-admission completions / prompt chunks / evictions did
+                # real work this tick even though no decode ran — the
+                # taxonomy invariant is ticks == decode + admit + idle
                 admit_only += 1
             else:
                 idle += 1        # pure waiting on arrivals
+            # first tokens emitted by prefill this tick
+            for i in range(self.n_slots):
+                a = slots[i]
+                if a is not None and a.tokens and a.first_token < 0:
+                    a.first_token = tick
             tick += 1
 
         completions.sort(key=lambda c: c.rid)
@@ -545,4 +964,5 @@ class Engine:
                            peak_blocks=(alloc.peak_in_use if alloc else 0),
                            admit_ticks=admit_only,
                            decode_lane_tokens=lane_tokens,
-                           chunk_calls=chunk_calls)
+                           chunk_calls=chunk_calls,
+                           evictions=self._evictions)

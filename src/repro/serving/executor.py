@@ -15,6 +15,16 @@ smallest bucketed width covering the active lanes, one compile per
 touched bucket instead of full-width padding every tick) and CHUNKED
 prefill (append long prompts to the live pool kv_block-aligned chunks at
 a time so one long prompt stops holding the tick hostage).
+
+The chunked step is STATELESS per call — each chunk carries its own
+absolute `starts` and block tables, so the engine reuses it unchanged for
+the overload machinery: a prefix SHARER prefills only its private suffix
+(starts at `shared_blocks * kv_block`, reading the shared prefix KV
+through its seeded table — the boundary partial block is copy-on-write by
+recompute into an owned block), and an EVICTED request re-prefills
+`prompt + already-emitted tokens` from scratch into freshly allocated
+blocks. No executor state survives an eviction; everything is the block
+tables.
 """
 from __future__ import annotations
 
@@ -284,6 +294,18 @@ class PagedJaxExecutor:
         if self.compact and lanes is not None:
             return self._decode_compact(tokens, positions, tables, lanes)
         decode_step = self._steps()[1]
+        if lanes is not None:
+            # Full-width decode still computes every lane row; rows NOT in
+            # `lanes` (empty slots, lanes mid-chunk-prefill) are made INERT
+            # (pos -1, empty table) so their write lands in the scratch
+            # block / is dropped instead of clobbering live KV through a
+            # mid-prefill lane's real block table.
+            act = set(int(i) for i in lanes)
+            pad = _pad_token(self.cfg)
+            tokens = [t if i in act else pad for i, t in enumerate(tokens)]
+            positions = [p if i in act else -1
+                         for i, p in enumerate(positions)]
+            tables = [t if i in act else [] for i, t in enumerate(tables)]
         t = jnp.asarray(list(tokens), jnp.int32)[:, None]
         p = jnp.asarray(list(positions), jnp.int32)
         tbl = jnp.asarray(self._table_array(tables, self.n_lanes))

@@ -198,6 +198,80 @@ def test_compacted_chunked_engine_matches_greedy_generate(arch):
         assert list(c.tokens) == np.asarray(ref)[0].tolist(), c.rid
 
 
+def test_evicted_requests_match_greedy_generate():
+    """Acceptance pin for eviction-and-requeue on the REAL executor: an
+    expected-mode pool sized below the trace's true demand (stats come
+    from a deliberately short profile) forces evictions mid-decode, and
+    the evicted requests — re-prefilled from prompt + already-emitted
+    tokens through the chunked path — still reproduce greedy_generate
+    exactly."""
+    from repro.serving import BlockAllocator
+    from repro.serving.engine import LengthStats
+    from repro.serving.executor import PagedJaxExecutor
+    cfg = get_config("mistral-nemo-12b").reduced()
+    params = init_params(KEY, cfg)
+    trace = synthetic_trace(4, vocab_size=cfg.vocab_size, seed=2,
+                            prompt_lens=(4, 6), gen_lens=(6,),
+                            mean_interarrival=0)
+    context = trace_context(trace)
+    kv_block = 4
+    n_blocks = 5        # max request needs 3 blocks; two lanes want 6
+    # wrong-on-purpose profile: claims every request writes ~1 block
+    stats = LengthStats(by_prompt={}, mean=4.0, std=0.0, max=4)
+    executor = PagedJaxExecutor(params, cfg, n_lanes=2, n_blocks=n_blocks,
+                                kv_block=kv_block, context=context,
+                                settings=SETTINGS, chunk=kv_block)
+    allocator = BlockAllocator(n_blocks, kv_block, reservation="expected")
+    report = Engine(executor, 2, allocator=allocator,
+                    chunk_prefill=kv_block, stats=stats,
+                    sigma_k=0.0).run(trace)
+    assert report.evictions > 0              # the pressure actually hit
+    assert len(report.completions) == len(trace)
+    for c in report.completions:
+        req = trace[c.rid]
+        ref = greedy_generate(params, cfg,
+                              jnp.asarray(req.prompt, jnp.int32)[None],
+                              n_steps=req.max_new, context=executor.context,
+                              settings=SETTINGS)
+        assert list(c.tokens) == np.asarray(ref)[0].tolist(), c.rid
+
+
+def test_prefix_shared_engine_matches_greedy_generate():
+    """Acceptance pin for refcounted prefix sharing on the REAL executor:
+    requests sharing a system-prompt prefix map their leading blocks to
+    shared physical blocks (one prefix prefill, per-request suffixes
+    through the chunked path) and still emit exactly greedy_generate's
+    tokens for their FULL prompts."""
+    from repro.serving import BlockAllocator
+    from repro.serving.executor import PagedJaxExecutor
+    cfg = get_config("mistral-nemo-12b").reduced()
+    params = init_params(KEY, cfg)
+    trace = synthetic_trace(4, vocab_size=cfg.vocab_size, seed=2,
+                            prompt_lens=(4, 6), gen_lens=(3, 5),
+                            mean_interarrival=1.0, prefix_len=8)
+    context = trace_context(trace)
+    kv_block, n_blocks = 4, 20
+
+    def run(share):
+        ex = PagedJaxExecutor(params, cfg, n_lanes=2, n_blocks=n_blocks,
+                              kv_block=kv_block, context=context,
+                              settings=SETTINGS, chunk=kv_block)
+        rep = Engine(ex, 2, allocator=BlockAllocator(n_blocks, kv_block),
+                     chunk_prefill=kv_block, prefix_share=share).run(trace)
+        return rep
+
+    shared = run(True)
+    assert len(shared.completions) == len(trace)
+    assert shared.chunk_calls < run(False).chunk_calls  # suffixes only
+    for c in shared.completions:
+        req = trace[c.rid]
+        ref = greedy_generate(params, cfg,
+                              jnp.asarray(req.prompt, jnp.int32)[None],
+                              n_steps=req.max_new, context=context,
+                              settings=SETTINGS)
+        assert list(c.tokens) == np.asarray(ref)[0].tolist(), c.rid
+
+
 def test_paged_engine_pallas_kernel_backend():
     """The Pallas paged-decode kernel (interpret-mode on CPU) drives the
     engine to the same tokens as the ring engine under identical settings:
