@@ -25,8 +25,19 @@ admitting >= 4x ring's concurrency. The OVERLOAD acceptance pin: on a
 burst trace whose arrivals exceed worst-case capacity and whose requests
 share a 16-token system prompt, optimistic admission + prefix sharing
 must admit >= 1.5x the worst-case-reservation concurrency per GiB with
-token-identical output. Results land in BENCH_serving.json at the repo
-root (schema_version 2).
+token-identical output.
+
+The PR-8 BENDING section prices the lossy knobs: at a serving-class head
+width (the reduced smoke config's head_dim=16 would let the per-position
+scale stripes eat the quantization win) and the tightest budget, the same
+burst is replayed over fp, int8, int4, and int8+retention block pools.
+Every cell now carries bytes-per-admitted-token (paged pool bytes at peak
+over generated tokens; 0.0 for ring, whose KV bytes are not block-priced)
+and a MEASURED token-agreement rate against exact `greedy_generate`
+(shared reference cache, one reference decode per unique prompt).
+Bending pins: int8 admits >= 1.8x the fp paged concurrency with measured
+agreement >= 0.99; exact cells stay at agreement 1.0. Results land in
+BENCH_serving.json at the repo root (schema_version 3).
 """
 from __future__ import annotations
 
@@ -43,7 +54,9 @@ TRACE_SEED = 0                       # stamped into the JSON: same seed +
                                      # knobs => the same replayed workload
 OVERLOAD_LANE_CAP = 12               # overload section: admission is the
                                      # contended resource, so more lanes
-SCHEMA_VERSION = 2
+BEND_LANE_CAP = 24                   # bending section: pool bytes are the
+                                     # contended resource, lanes must not cap
+SCHEMA_VERSION = 3
 
 
 def main():
@@ -62,6 +75,7 @@ def main():
     from repro.serving import (BlockAllocator, Engine, length_stats,
                                synthetic_trace, trace_context)
     from repro.serving.executor import JaxExecutor, PagedJaxExecutor
+    from repro.serving.quality import token_agreement
 
     cfg = get_config(ARCH).reduced()
     # mostly-short traffic with a long-generation tail: the mix where
@@ -105,17 +119,23 @@ def main():
                               context=context, compact=compact, chunk=chunk)
         return ex, BlockAllocator(n_blocks, splan.kv_block), n_slots, chunk
 
-    def cell_metrics(splan, report, allocator, n_slots, wall, e_blocks=None):
-        """One benchmark cell; shared by the frontier and overload sweeps.
-        `e_blocks` (expected blocks/seq) prices the predicted peak:
-        min(pool, ceil(n_slots * E[blocks/seq])) — the calibration-loop
-        groundwork the delta column tracks."""
+    def cell_metrics(splan, report, allocator, n_slots, wall, e_blocks=None,
+                     block_bytes=0.0, agreement=None):
+        """One benchmark cell; shared by the frontier, overload, and
+        bending sweeps. `e_blocks` (expected blocks/seq) prices the
+        predicted peak: min(pool, ceil(n_slots * E[blocks/seq])) — the
+        calibration-loop groundwork the delta column tracks.
+        `block_bytes` (per-device bytes of one paged block under the
+        cell's plan) prices bytes-per-admitted-token; `agreement` is the
+        cell's MEASURED token-agreement report vs greedy_generate."""
         widths = (report.decode_lane_tokens / report.decode_ticks
                   if report.decode_ticks else 0.0)
         predicted = 0
         if allocator is not None and e_blocks is not None:
             predicted = min(allocator.n_blocks,
                             int(-(-(n_slots * e_blocks) // 1)))
+        bpt = (block_bytes * report.peak_blocks / report.generated_tokens
+               if block_bytes and report.generated_tokens else 0.0)
         return {
             "capacity": splan.capacity,
             "n_slots": n_slots,
@@ -141,6 +161,14 @@ def main():
             "chunk_calls": report.chunk_calls,
             "prefill_calls": report.prefill_calls,
             "evictions": report.evictions,
+            "block_drops": report.block_drops,
+            "kv_quant": splan.execution.plan.kv_quant,
+            "kv_retain": splan.execution.plan.kv_retain,
+            "predicted_agreement": splan.agreement,
+            "bytes_per_admitted_token": bpt,
+            "agreement": (agreement.agreement if agreement else None),
+            "requests_exact": (sum(1 for d in agreement.first_divergence
+                                   if d < 0) if agreement else None),
         }
 
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -155,6 +183,7 @@ def main():
         return e_blocks_by_kv[key]
 
     frontier = []
+    refs = {}                    # greedy references, shared across budgets
     for k in RING_SLOT_BUDGETS:
         budget = (req(k) + req(k + 1)) / 2
         _, ring = XP.plan_serving(cfg, shape, n_devices=1, hbm_budget=budget,
@@ -187,9 +216,18 @@ def main():
                 # worst-case reservations: actual usage never exceeds the
                 # ledger's commitment (the deadlock-freedom invariant)
                 assert report.peak_blocks <= allocator.peak_committed, mode
+            agree = token_agreement(params, cfg, trace, report,
+                                    context=context, ref_cache=refs)
             cells[mode] = cell_metrics(
                 splan, report, allocator, n_slots, wall,
-                e_blocks=(e_blocks(splan.kv_block) if allocator else None))
+                e_blocks=(e_blocks(splan.kv_block) if allocator else None),
+                block_bytes=(PR.kv_block_bytes_per_device(
+                    cfg, shape, splan.execution.plan, mesh_shape)
+                    if allocator else 0.0),
+                agreement=agree)
+            if agree.agreement < 1.0:        # exact cells must stay exact
+                raise SystemExit(f"budget@{k}/{mode}: exact engine drifted "
+                                 f"from greedy_generate: {agree.describe()}")
             cells[mode]["compiles"] = compiles
             emit(f"serve.{mode}.b{k}.{ARCH}", wall * 1e6,
                  f"concurrent={report.max_concurrent};"
@@ -272,6 +310,7 @@ def main():
 
     ocells = {}
     otokens = {}
+    orefs = {}
     for mode, splan in (("worst", wplan), ("optimistic", oplan),
                         ("optimistic_prefix", oplan)):
         _, _, warm_eng, _ = obuild(splan, mode)
@@ -284,8 +323,17 @@ def main():
         if mode == "worst":
             assert report.peak_blocks <= alloc.peak_committed
             assert report.evictions == 0     # worst mode never preempts
+        oagree = token_agreement(params, cfg, otrace, report,
+                                 context=ocontext, ref_cache=orefs)
+        if oagree.agreement < 1.0:
+            raise SystemExit(f"overload/{mode}: exact engine drifted from "
+                             f"greedy_generate: {oagree.describe()}")
         ocells[mode] = cell_metrics(splan, report, alloc, n_slots, wall,
-                                    e_blocks=e_blocks(splan.kv_block, olens))
+                                    e_blocks=e_blocks(splan.kv_block, olens),
+                                    block_bytes=PR.kv_block_bytes_per_device(
+                                        cfg, oshape, splan.execution.plan,
+                                        mesh_shape),
+                                    agreement=oagree)
         ocells[mode]["admission"] = splan.admission
         ocells[mode]["compiles"] = ex.compile_counts()
         emit(f"serve.overload.{mode}.{ARCH}", wall * 1e6,
@@ -315,6 +363,112 @@ def main():
         raise SystemExit("overload: optimistic+prefix admitted only "
                          f"{oratio:.2f}x worst-case concurrency")
 
+    # -- capacity bending: quantized blocks + retention at the tightest -----
+    # budget. A serving-class head width (head_dim=128; the smoke config's
+    # 16 would let the per-position scale stripes eat most of the int8 win)
+    # and a burst of more requests than the pool can hold exactly: the
+    # measured concurrency IS the admission capacity, and every lossy cell
+    # reports what the extra lanes cost in measured token agreement. Params
+    # stay bf16: the coarser bf16 rounding absorbs batched-vs-single matmul
+    # tiling noise, so the exact paged cell reproduces greedy_generate
+    # token-for-token (fp32 params leak that noise into argmax near-ties
+    # and break the fp pin). d_model stays narrow so per-lane decode
+    # transients don't dilute the codec's byte ratio below the admission
+    # win.
+    bcfg = dataclasses.replace(cfg, head_dim=128)
+    bparams = init_params(jax.random.PRNGKey(4), bcfg)
+    btrace = synthetic_trace(24, vocab_size=bcfg.vocab_size, seed=TRACE_SEED,
+                             prompt_lens=(8, 16), gen_lens=(24, 24, 56, 120),
+                             mean_interarrival=0.0)
+    bcontext = trace_context(btrace)
+    bshape = ShapeConfig("bench_bend", DECODE, bcontext, BEND_LANE_CAP)
+    blens = [len(r.prompt) + r.max_new - 1 for r in btrace]
+    bsim = MM.SimulatedMeasurer(mesh_shape)
+    bcls = PF.classify_workload(bcfg, bshape, None, n_points=2, base_seq=64,
+                                measurer=bsim)
+
+    def breq(n):
+        sh = dataclasses.replace(bshape, global_batch=n)
+        return PR.predict(bcfg, sh, PR.MemoryPlan(), bcls,
+                          mesh_shape).capacity_bytes
+
+    # just above the 2-worst-case-ring floor: the fp pool is block-starved,
+    # so every byte the codec saves converts directly into admitted lanes
+    bbudget = breq(2) + 0.05 * (breq(3) - breq(2))
+
+    def bspace(quant, retain):
+        return SP.serving_space(bcfg, bshape, max_devices=1, data=(1,),
+                                model=(1,), kv_blocks=(8, 16),
+                                kv_quants=(quant,), kv_retains=(retain,))
+
+    bcells = {}
+    brefs = {}
+    for name, quant, retain in (("fp", "none", 0), ("int8", "int8", 0),
+                                ("int4", "int4", 0),
+                                ("int8_retain", "int8", 2)):
+        _, splan = XP.plan_serving(bcfg, bshape, n_devices=1,
+                                   hbm_budget=bbudget, cls=bcls,
+                                   space=bspace(quant, retain), kv="paged",
+                                   seq_lens=blens)
+        n_slots = splan.slots(cap=min(BEND_LANE_CAP, len(btrace)))
+        n_blocks = splan.pool_blocks(n_slots, bcontext)
+
+        def bbuild():
+            ex = PagedJaxExecutor(bparams, bcfg, n_lanes=n_slots,
+                                  n_blocks=n_blocks, kv_block=splan.kv_block,
+                                  context=bcontext, kv_quant=quant,
+                                  kv_retain=retain)
+            alloc = BlockAllocator(n_blocks, splan.kv_block)
+            eng = Engine(ex, n_slots, allocator=alloc, kv_retain=retain)
+            return ex, alloc, eng
+
+        _, _, warm = bbuild()
+        warm.run(btrace)
+        ex, alloc, eng = bbuild()
+        t0 = time.perf_counter()
+        report = eng.run(btrace)
+        wall = time.perf_counter() - t0
+        agree = token_agreement(bparams, bcfg, btrace, report,
+                                context=bcontext, ref_cache=brefs)
+        bcells[name] = cell_metrics(
+            splan, report, alloc, n_slots, wall,
+            e_blocks=e_blocks(splan.kv_block, blens),
+            block_bytes=PR.kv_block_bytes_per_device(
+                bcfg, bshape, splan.execution.plan, mesh_shape),
+            agreement=agree)
+        bcells[name]["compiles"] = ex.compile_counts()
+        emit(f"serve.bend.{name}.{ARCH}", wall * 1e6,
+             f"concurrent={report.max_concurrent};"
+             f"agreement={agree.agreement:.4f};"
+             f"bytes_per_token={bcells[name]['bytes_per_admitted_token']:.0f};"
+             f"block_drops={report.block_drops}")
+    bratio = (bcells["int8"]["max_concurrent"]
+              / max(bcells["fp"]["max_concurrent"], 1))
+    bending = {
+        "requests": len(btrace),
+        "context": bcontext,
+        "head_dim": bcfg.head_dim,
+        "budget_bytes": bbudget,
+        "lane_cap": BEND_LANE_CAP,
+        "int8_concurrency_ratio": bratio,
+        "int8_agreement": bcells["int8"]["agreement"],
+        **bcells,
+    }
+    emit(f"serve.bend.frontier.{ARCH}", 0.0,
+         f"int8_vs_fp_concurrency={bratio:.2f}x;"
+         f"int8_agreement={bcells['int8']['agreement']:.4f};"
+         f"int4_agreement={bcells['int4']['agreement']:.4f};"
+         f"retain_agreement={bcells['int8_retain']['agreement']:.4f}")
+    if bcells["fp"]["agreement"] < 1.0:
+        raise SystemExit("bending: the fp paged cell must match "
+                         "greedy_generate exactly")
+    if bratio < 1.8:
+        raise SystemExit(f"bending: int8 blocks admitted only {bratio:.2f}x "
+                         "fp paged concurrency (pin: >= 1.8x)")
+    if bcells["int8"]["agreement"] < 0.99:
+        raise SystemExit("bending: int8 measured agreement "
+                         f"{bcells['int8']['agreement']:.4f} < 0.99")
+
     out = {
         "schema_version": SCHEMA_VERSION,
         "arch": ARCH,
@@ -324,6 +478,7 @@ def main():
         "lane_cap": LANE_CAP,
         "frontier": frontier,
         "overload": overload,
+        "bending": bending,
     }
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir,
                         "BENCH_serving.json")

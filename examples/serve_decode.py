@@ -1,6 +1,8 @@
 """Serving-engine example: replay a deterministic mixed-length trace
-through continuous batching over the slotted ring-KV pool, then compare
-against the fixed-batch baseline.
+through continuous batching over the PAGED KV block pool — compacted
+decode, chunked prefill, optimistic admission, prefix sharing — then bend
+the pool's capacity with int8 blocks and block-granular retention and
+measure what the bend costs in token agreement.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -11,28 +13,42 @@ import jax
 from repro.configs import get_config
 from repro.models import ModelSettings, init_params
 from repro.models.attention import AttnSettings
-from repro.serving import Engine, describe_trace, synthetic_trace, trace_context
-from repro.serving.executor import JaxExecutor
+from repro.serving import (BlockAllocator, Engine, describe_trace,
+                           length_stats, synthetic_trace, trace_context)
+from repro.serving.executor import PagedJaxExecutor
+from repro.serving.quality import token_agreement
 
 cfg = get_config("mistral-nemo-12b").reduced()
-settings = ModelSettings(attn=AttnSettings(backend="blocked",
-                                           q_block=32, kv_block=32))
-SLOTS = 3
+settings = ModelSettings(attn=AttnSettings(backend="naive"))
+SLOTS, KV_BLOCK, N_BLOCKS = 3, 4, 24
 
 params = init_params(jax.random.PRNGKey(0), cfg)
 trace = synthetic_trace(8, vocab_size=cfg.vocab_size, seed=1,
                         prompt_lens=(8, 16), gen_lens=(4, 12),
-                        mean_interarrival=1.0)
+                        mean_interarrival=1.0, prefix_len=4)
 context = trace_context(trace)
 print("trace:", describe_trace(trace))
 
-for policy in ("continuous", "static"):
-    executor = JaxExecutor(params, cfg, n_slots=SLOTS, context=context,
-                           settings=settings)
-    engine = Engine(executor, SLOTS, policy=policy)
+# (kv_quant, kv_retain): exact fp blocks, int8 codes, int8 + keep only the
+# 2 hottest blocks per sequence (plus the write tail)
+for kv_quant, kv_retain in (("none", 0), ("int8", 0), ("int8", 2)):
+    executor = PagedJaxExecutor(params, cfg, n_lanes=SLOTS,
+                                n_blocks=N_BLOCKS, kv_block=KV_BLOCK,
+                                context=context, settings=settings,
+                                compact=True, chunk=KV_BLOCK,
+                                kv_quant=kv_quant, kv_retain=kv_retain)
+    allocator = BlockAllocator(N_BLOCKS, KV_BLOCK, reservation="expected")
+    engine = Engine(executor, SLOTS, allocator=allocator,
+                    chunk_prefill=KV_BLOCK, prefix_share=True,
+                    stats=length_stats(trace), kv_retain=kv_retain)
     t0 = time.time()
     report = engine.run(trace)
-    print(report.describe() + f" wall={time.time() - t0:.2f}s")
+    wall = time.time() - t0
+    agree = token_agreement(params, cfg, trace, report, context=context,
+                            settings=settings)
+    print(f"[{kv_quant:4s} retain={kv_retain}] " + report.describe()
+          + f" wall={wall:.2f}s")
+    print(f"  {agree.describe()}")
 
 first = report.completions[0]
 print(f"  req{first.rid} tokens: {list(first.tokens)}")

@@ -29,6 +29,22 @@ BYTES_TOKEN = 4       # int32 ids
 REMAT_SCALE = {"none": 1.0, "dots": 0.55, "full": 0.30}
 FITTED_SAFETY = 1.15
 
+# Paged-KV storage codecs: bytes per K/V element under each kv_quant mode.
+# The dtype is EXPLICIT here (not inferred from the model dtype) so the
+# predictor, the allocator's byte ledger, and the pool layout in
+# runtime/serve_step.init_paged_pool can never silently disagree. int4
+# packs two elements per byte (head_dim is even on every config).
+KV_QUANTS = ("none", "int8", "int4")
+KV_ELEM_BYTES = {"none": float(BYTES_ACT), "int8": 1.0, "int4": 0.5}
+KV_SCALE_BYTES = 4    # f32 absmax scale per (position, kv head), K and V each
+
+
+def kv_elem_bytes(kv_quant: str) -> float:
+    """Bytes per stored K/V element for a kv_quant mode (excl. scales)."""
+    if kv_quant not in KV_ELEM_BYTES:
+        raise ValueError(f"unknown kv_quant {kv_quant!r}; known: {KV_QUANTS}")
+    return KV_ELEM_BYTES[kv_quant]
+
 
 @dataclasses.dataclass(frozen=True)
 class MemoryPlan:
@@ -42,6 +58,23 @@ class MemoryPlan:
     # slots). Only full-context attention layers page; the block size is the
     # allocation granule the serving engine's BlockAllocator hands out.
     kv_block_size: int = 0
+    # Paged-pool storage codec: "none" (bf16), "int8" or "int4" — per-token
+    # per-head absmax scales stored alongside the pool. A quantized block is
+    # a CHEAPER block, multiplying serving_block_capacity directly.
+    kv_quant: str = "none"
+    # Block-granular retention: keep at most this many attended KV blocks
+    # per sequence (0 = keep all). The engine evicts the coldest blocks back
+    # to the allocator free list, so a sequence's steady-state footprint is
+    # bounded by kv_retain + 1 blocks (retained + the growing tail block).
+    kv_retain: int = 0
+
+    def __post_init__(self):
+        if self.kv_quant not in KV_QUANTS:
+            raise ValueError(f"MemoryPlan.kv_quant {self.kv_quant!r} not in "
+                             f"{KV_QUANTS}")
+        if self.kv_retain < 0:
+            raise ValueError("MemoryPlan.kv_retain must be >= 0, got "
+                             f"{self.kv_retain}")
 
     @property
     def opt_state_bytes(self) -> float:
@@ -84,16 +117,22 @@ def mesh_factors(mesh_shape: dict) -> Tuple[int, int, int]:
 
 
 def _attn_ring_bytes(cfg: ModelConfig, plan: MemoryPlan, L: int,
-                     model: int) -> float:
+                     model: int, kv_quant: str = "none") -> float:
     """One sequence's ring-cache bytes for an attention layer of ring
-    length L, per device under the plan's kv sharding."""
+    length L, per device under the plan's kv sharding. `kv_quant` names the
+    storage codec EXPLICITLY (only the paged pool quantizes; lane rings and
+    ring-slot engines stay bf16), so element size is never inferred from
+    the model dtype."""
     hd = cfg.resolved_head_dim
     if plan.kv_shard == "seq":
         L = -(-L // model)
         kvh = cfg.n_kv_heads
     else:
         kvh = -(-cfg.n_kv_heads // model)      # padded uneven sharding
-    return 2 * L * kvh * hd * BYTES_ACT + L * 4           # K/V + pos buffer
+    eb = kv_elem_bytes(kv_quant)
+    # f32 absmax scale per (position, kv head) for K and V each
+    scales = 0.0 if kv_quant == "none" else 2 * kvh * KV_SCALE_BYTES
+    return 2 * L * kvh * hd * eb + L * scales + L * 4     # K/V + pos buffer
 
 
 def _seq_cache_terms(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan,
@@ -111,8 +150,12 @@ def _seq_cache_terms(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan,
     for blk in cfg.blocks():
         if blk.is_attn:
             L = blk.cache_len(shape.context)
-            bytes_ = _attn_ring_bytes(cfg, plan, L, model)
-            if L == shape.context:
+            full = L == shape.context
+            # full-context layers live in the (possibly quantized) paged
+            # pool when the plan pages; short windowed rings stay bf16
+            quant = plan.kv_quant if (full and plan.kv_block_size) else "none"
+            bytes_ = _attn_ring_bytes(cfg, plan, L, model, kv_quant=quant)
+            if full:
                 paged += bytes_
             else:
                 lane += bytes_
@@ -160,7 +203,8 @@ def kv_block_bytes_per_device(cfg: ModelConfig, shape: ShapeConfig,
     total = 0.0
     for blk in cfg.blocks():
         if blk.is_attn and blk.cache_len(shape.context) == shape.context:
-            total += _attn_ring_bytes(cfg, plan, plan.kv_block_size, model)
+            total += _attn_ring_bytes(cfg, plan, plan.kv_block_size, model,
+                                      kv_quant=plan.kv_quant)
     return total / pipe
 
 
@@ -383,10 +427,18 @@ def serving_block_capacity(cfg: ModelConfig, shape: ShapeConfig,
             - cache_bytes_per_device(cfg, sh, plan, mesh_shape))
     base += lanes * lane_bytes_per_device(cfg, sh, plan, mesh_shape)
     sh_t = sh
+    b = plan.kv_block_size
+    reach = shape.context
     if avg_context is not None:
         # block-align the expected reach; never beyond the worst case
-        b = plan.kv_block_size
         reach = min(-(-max(int(avg_context), 1) // b) * b, shape.context)
+    if plan.kv_retain > 0:
+        # block-granular retention bounds the attended context
+        # DETERMINISTICALLY (the engine never holds more than kv_retain
+        # live blocks plus the growing tail), so the cap applies even
+        # under worst-case admission
+        reach = min(reach, (plan.kv_retain + 1) * b)
+    if reach != shape.context:
         sh_t = dataclasses.replace(sh_t, seq_len=reach)
     if decode_width is not None:
         w = min(max(int(decode_width), 1), lanes)

@@ -116,10 +116,41 @@ def decode_attention_fwd(q, k_cache, v_cache, cache_pos, positions, *,
 # table entries (-1) clamp to physical block 0 (the serving engine's
 # scratch block) and are masked out in-kernel.
 
-def _paged_kernel(tbl_ref, pos_ref, cpos_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_ref, l_ref, acc_ref, *,
+def _dequant_block(raw, scale_row, quant: str):
+    """In-kernel dequant of one pool block: raw [bs, K, hd] int8 or
+    [bs, K, hd//2] uint8 (packed nibbles, offset +8), scale_row [bs, K]
+    f32 per-token per-head absmax scales -> f32 [bs, K, hd]. This is the
+    fused path: the DMA moved quantized bytes; no fp pool ever exists."""
+    if quant == "none":
+        return raw.astype(jnp.float32)
+    if quant == "int8":
+        return raw.astype(jnp.float32) * scale_row[..., None]
+    lo = (raw & 0xF).astype(jnp.int32) - 8           # elements 0, 2, 4, ...
+    hi = (raw >> 4).astype(jnp.int32) - 8            # elements 1, 3, 5, ...
+    bs, K, hd2 = raw.shape
+    full = jnp.stack([lo, hi], axis=-1).reshape(bs, K, hd2 * 2)
+    return full.astype(jnp.float32) * scale_row[..., None]
+
+
+def _paged_kernel(tbl_ref, pos_ref, cpos_ref, q_ref, k_ref, v_ref, *refs,
                   scale: float, window: Optional[int], chunk: Optional[int],
-                  nl: int):
+                  nl: int, quant: str = "none", mass: bool = False):
+    # refs layout (flags append, never reorder):
+    #   [ks_ref, vs_ref]  when quant != "none"   (per-row scale blocks)
+    #   o_ref
+    #   [bm_ref, bl_ref]  when mass              (per-block max / sumexp)
+    #   m_ref, l_ref, acc_ref                     (VMEM scratch)
+    i = 0
+    ks_ref = vs_ref = bm_ref = bl_ref = None
+    if quant != "none":
+        ks_ref, vs_ref = refs[0], refs[1]
+        i = 2
+    o_ref = refs[i]
+    i += 1
+    if mass:
+        bm_ref, bl_ref = refs[i], refs[i + 1]
+        i += 2
+    m_ref, l_ref, acc_ref = refs[i:i + 3]
     bi = pl.program_id(0)
     li = pl.program_id(1)
 
@@ -129,14 +160,22 @@ def _paged_kernel(tbl_ref, pos_ref, cpos_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    if mass:
+        # every grid cell owns its (bi, li) mass slot; unassigned blocks
+        # report an empty block (max = -inf, sumexp = 0)
+        bm_ref[...] = jnp.full_like(bm_ref, NEG_INF)
+        bl_ref[...] = jnp.zeros_like(bl_ref)
+
     # an unassigned logical block (table entry -1) contributes nothing to
     # the softmax — skip its whole merge (its DMA clamps to scratch block
     # 0, but the compute is predicated off)
     @pl.when(tbl_ref[bi, li] >= 0)
     def _merge():
         q = q_ref[0].astype(jnp.float32) * scale     # [K, G, hd]
-        k = k_ref[0].astype(jnp.float32)             # [bs, K, hd]
-        v = v_ref[0].astype(jnp.float32)
+        k = _dequant_block(k_ref[0], None if ks_ref is None else ks_ref[0],
+                           quant)                    # [bs, K, hd]
+        v = _dequant_block(v_ref[0], None if vs_ref is None else vs_ref[0],
+                           quant)
         pos = pos_ref[0, 0]                          # scalar
         cpos = cpos_ref[0, :]                        # [bs]
         s = jnp.einsum("kgh,lkh->kgl", q, k)         # [K, G, bs]
@@ -155,6 +194,14 @@ def _paged_kernel(tbl_ref, pos_ref, cpos_ref, q_ref, k_ref, v_ref, o_ref,
         acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
             "kgl,lkh->kgh", p, v)
         m_ref[...] = m_new
+        if mass:
+            # block-LOCAL softmax stats; combined across blocks outside
+            # the kernel (log-sum-exp merge, same algebra as (m, l))
+            bmax = s.max(axis=-1)                    # [K, G]
+            bm_ref[0, 0] = bmax
+            bl_ref[0, 0] = jnp.where(
+                mask[None, None, :], jnp.exp(s - bmax[..., None]),
+                0.0).sum(axis=-1)
 
     @pl.when(li == nl - 1)
     def _finalize():
@@ -162,53 +209,112 @@ def _paged_kernel(tbl_ref, pos_ref, cpos_ref, q_ref, k_ref, v_ref, o_ref,
                     jnp.maximum(l_ref[...], 1e-30)[..., None]).astype(o_ref.dtype)
 
 
+def paged_quant_of(k_pool) -> str:
+    """Pool storage codec, read off the pool's own dtype (self-describing,
+    mirroring models.attention.paged_quant_kind)."""
+    if k_pool.dtype == jnp.int8:
+        return "int8"
+    if k_pool.dtype == jnp.uint8:
+        return "int4"
+    return "none"
+
+
 def paged_decode_attention_fwd(q, k_pool, v_pool, pool_pos, block_tables,
                                positions, *,
                                window: Optional[int] = None,
                                chunk: Optional[int] = None,
+                               k_scales=None, v_scales=None,
+                               return_mass: bool = False,
                                interpret: bool = False):
-    """q [b,K,G,hd]; pools [n_blocks,block,K,hd]; pool_pos [n_blocks,block];
-    block_tables [b,max_blocks] int32 (-1 = unassigned); positions [b].
+    """q [b,K,G,hd]; pools [n_blocks,block,K,hd] bf16 — or int8 / uint8
+    (packed int4 nibbles) with per-row f32 scales [n_blocks,block,K] in
+    `k_scales`/`v_scales`; pool_pos [n_blocks,block]; block_tables
+    [b,max_blocks] int32 (-1 = unassigned); positions [b].
 
     The grid's KV extent is the TABLE width, not the pool-wide max-context
     block count: callers that trim tables to the blocks actually allocated
     (serving lane compaction does) shrink the grid — and the unassigned
     tail that remains is skipped by the in-kernel predicate — so decode
-    work tracks what sequences wrote, not what they could write."""
+    work tracks what sequences wrote, not what they could write.
+
+    Quantized pools are read DIRECTLY: the block-table DMA moves int8/int4
+    bytes (plus the tiny scale stripe, chased by the same index map) and
+    dequant happens in-kernel after the copy — no fp-dequantized pool is
+    ever materialized.
+
+    `return_mass=True` additionally returns per-logical-block attention
+    mass [b, max_blocks] (softmax weight captured by each block, averaged
+    over heads) — the serving engine's block-retention signal. Per-block
+    (max, sumexp) stats come out of the kernel and are merged outside with
+    the standard log-sum-exp algebra."""
     if pltpu is None:  # pragma: no cover
         raise NotImplementedError("paged decode needs pallas TPU grid specs")
     b, K, G, hd = q.shape
     m_blocks = block_tables.shape[1]
     bs = pool_pos.shape[1]
+    quant = paged_quant_of(k_pool)
+    if quant != "none" and (k_scales is None or v_scales is None):
+        raise ValueError(f"{quant} pool needs k_scales/v_scales")
+    hd_s = k_pool.shape[-1]                  # stored width (hd // 2 for int4)
     scale = 1.0 / np.sqrt(hd)
     kernel = functools.partial(_paged_kernel, scale=scale, window=window,
-                               chunk=chunk, nl=m_blocks)
+                               chunk=chunk, nl=m_blocks, quant=quant,
+                               mass=return_mass)
 
     def physical(bi, li, tbl):
         return jnp.maximum(tbl[bi, li], 0)
 
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda bi, li, tbl: (bi, 0)),
+        pl.BlockSpec((1, bs), lambda bi, li, tbl: (physical(bi, li, tbl), 0)),
+        pl.BlockSpec((1, K, G, hd), lambda bi, li, tbl: (bi, 0, 0, 0)),
+        pl.BlockSpec((1, bs, K, hd_s),
+                     lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0, 0)),
+        pl.BlockSpec((1, bs, K, hd_s),
+                     lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0, 0)),
+    ]
+    args = [block_tables, positions.reshape(b, 1), pool_pos, q,
+            k_pool, v_pool]
+    if quant != "none":
+        # scale stripes chase the same block table as their payload
+        in_specs += [
+            pl.BlockSpec((1, bs, K),
+                         lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0)),
+            pl.BlockSpec((1, bs, K),
+                         lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0)),
+        ]
+        args += [k_scales, v_scales]
+    out_specs = [pl.BlockSpec((1, K, G, hd),
+                              lambda bi, li, tbl: (bi, 0, 0, 0))]
+    out_shape = [jax.ShapeDtypeStruct((b, K, G, hd), q.dtype)]
+    if return_mass:
+        out_specs += [pl.BlockSpec((1, 1, K, G),
+                                   lambda bi, li, tbl: (bi, li, 0, 0))] * 2
+        out_shape += [jax.ShapeDtypeStruct((b, m_blocks, K, G),
+                                           jnp.float32)] * 2
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, m_blocks),
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda bi, li, tbl: (bi, 0)),
-            pl.BlockSpec((1, bs), lambda bi, li, tbl: (physical(bi, li, tbl), 0)),
-            pl.BlockSpec((1, K, G, hd), lambda bi, li, tbl: (bi, 0, 0, 0)),
-            pl.BlockSpec((1, bs, K, hd),
-                         lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0, 0)),
-            pl.BlockSpec((1, bs, K, hd),
-                         lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, K, G, hd), lambda bi, li, tbl: (bi, 0, 0, 0)),
+        in_specs=in_specs,
+        out_specs=out_specs if return_mass else out_specs[0],
         scratch_shapes=[
             _SCRATCH((K, G)),
             _SCRATCH((K, G)),
             _SCRATCH((K, G, hd)),
         ],
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, K, G, hd), q.dtype),
+        out_shape=out_shape if return_mass else out_shape[0],
         interpret=interpret,
-    )(block_tables, positions.reshape(b, 1), pool_pos, q, k_pool, v_pool)
+    )(*args)
+    if not return_mass:
+        return out
+    o, bm, bl = out
+    # merge block-local (max, sumexp) into each block's global softmax
+    # share: w_j = l_j * exp(m_j - M); mass_j = w_j / sum w
+    M = bm.max(axis=1, keepdims=True)                # [b, 1, K, G]
+    w = bl * jnp.exp(bm - M)                         # [b, nl, K, G]
+    mass = w / jnp.maximum(w.sum(axis=1, keepdims=True), 1e-30)
+    return o, mass.mean(axis=(2, 3))                 # [b, nl]

@@ -139,18 +139,25 @@ def decode_attention(q, k_cache, v_cache, cache_pos, positions, *,
 def paged_decode_attention(q, k_pool, v_pool, pool_pos, block_tables,
                            positions, *, window: Optional[int] = None,
                            chunk: Optional[int] = None,
-                           backend: Optional[str] = None):
+                           backend: Optional[str] = None,
+                           k_scales=None, v_scales=None,
+                           return_mass: bool = False):
     """Decode through a paged KV pool: q [b,K,G,hd]; pools
-    [n_blocks,block,K,hd]; pool_pos [n_blocks,block]; block_tables
-    [b,max_blocks] (-1 = unassigned) -> [b,K,G,hd]. Compiled Pallas on
-    TPU; interpret-mode kernel everywhere else (the CPU test tiers drive
-    the same block-table indirection the TPU kernel runs)."""
+    [n_blocks,block,K,hd] (bf16, int8, or uint8-packed int4 with per-row
+    f32 `k_scales`/`v_scales` [n_blocks,block,K]); pool_pos
+    [n_blocks,block]; block_tables [b,max_blocks] (-1 = unassigned) ->
+    [b,K,G,hd], or (out, mass [b,max_blocks]) with `return_mass`.
+    Quantized pools are DMA'd and dequantized inside the kernel — no fp
+    pool copy. Compiled Pallas on TPU; interpret-mode kernel everywhere
+    else (the CPU test tiers drive the same block-table indirection the
+    TPU kernel runs)."""
     backend = backend or default_backend()
     if backend not in ("pallas", "interpret"):
         backend = "interpret"       # no jnp twin: the kernel IS the gather
     return paged_decode_attention_fwd(
         q, k_pool, v_pool, pool_pos, block_tables, positions,
-        window=window, chunk=chunk, interpret=(backend == "interpret"))
+        window=window, chunk=chunk, k_scales=k_scales, v_scales=v_scales,
+        return_mass=return_mass, interpret=(backend == "interpret"))
 
 
 # ---------------------------------------------------------------------------

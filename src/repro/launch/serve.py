@@ -106,6 +106,29 @@ def main(argv=None):
     ap.add_argument("--prefix-len", type=int, default=0,
                     help="shared system-prompt tokens prepended to every "
                          "request's own prompt (0 = no shared prefix)")
+    ap.add_argument("--kv-quant", default="none",
+                    choices=["none", "int8", "int4"],
+                    help="paged only: per-block KV quantization. Blocks "
+                         "store int8 (or nibble-packed int4) codes plus "
+                         "per-position absmax scales; the decode kernel "
+                         "dequantizes on the block-table DMA path, so "
+                         "the fp pool is never materialized")
+    ap.add_argument("--kv-retain", type=int, default=0,
+                    help="paged only: keep only the k most-attended "
+                         "blocks per sequence (plus the write tail), "
+                         "evicting cold blocks back to the allocator "
+                         "free list after each decode tick (0 = exact, "
+                         "keep everything)")
+    ap.add_argument("--min-agreement", type=float, default=0.0,
+                    help="planner floor on predicted token agreement: "
+                         "bending candidates (quantized/retained) whose "
+                         "agreement prior falls below this are dropped "
+                         "before capacity scoring")
+    ap.add_argument("--measure-agreement", action="store_true",
+                    help="after serving, replay every request through "
+                         "exact greedy_generate and report the measured "
+                         "token-agreement fraction (slow: one reference "
+                         "decode per unique prompt)")
     ap.add_argument("--slo", type=_int_list, default=(0,),
                     help="SLO classes requests draw from (0 = strictest, "
                          "evicted last under pool pressure)")
@@ -132,6 +155,11 @@ def main(argv=None):
     if args.prefix_share and not args.prefix_len:
         ap.error("--prefix-share needs --prefix-len > 0 (there is no "
                  "shared prefix to share otherwise)")
+    if args.kv != "paged" and (args.kv_quant != "none" or args.kv_retain):
+        ap.error("--kv-quant/--kv-retain need --kv paged (quantized "
+                 "codes and retention both live on the block pool)")
+    if args.kv_retain < 0:
+        ap.error("--kv-retain must be >= 0")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -175,7 +203,10 @@ def main(argv=None):
                                   for r in trace],
                         compact=args.compact,
                         sigma_k=(args.sigma_k
-                                 if args.admission == "optimistic" else 0.0))
+                                 if args.admission == "optimistic" else 0.0),
+                        kv_quants=(args.kv_quant,),
+                        kv_retains=(args.kv_retain,),
+                        min_agreement=args.min_agreement)
     try:
         if args.mesh == "auto":
             measurer = None
@@ -197,7 +228,11 @@ def main(argv=None):
                 cfg, shape, max_devices=len(devices),
                 data=(host.mesh_shape.get("data", 1),),
                 model=(host.mesh_shape.get("model", 1),),
-                kv_blocks=kv_blocks if args.kv == "paged" else (0,))
+                kv_blocks=kv_blocks if args.kv == "paged" else (0,),
+                kv_quants=((args.kv_quant,) if args.kv == "paged"
+                           else ("none",)),
+                kv_retains=((args.kv_retain,) if args.kv == "paged"
+                            else (0,)))
             cls, splan = XP.plan_serving(cfg, shape, n_devices=len(devices),
                                          hbm_budget=budget,
                                          measurer=measurer, space=pinned,
@@ -233,7 +268,8 @@ def main(argv=None):
                 executor = PagedJaxExecutor(
                     params, cfg, n_lanes=n_slots, n_blocks=n_blocks,
                     kv_block=splan.kv_block, context=context,
-                    compact=args.compact, chunk=chunk)
+                    compact=args.compact, chunk=chunk,
+                    kv_quant=args.kv_quant, kv_retain=args.kv_retain)
                 allocator = BlockAllocator(
                     n_blocks, splan.kv_block,
                     reservation=("expected"
@@ -249,7 +285,9 @@ def main(argv=None):
                             stats=(length_stats(trace)
                                    if args.admission == "optimistic"
                                    else None),
-                            sigma_k=args.sigma_k)
+                            sigma_k=args.sigma_k,
+                            kv_retain=(args.kv_retain
+                                       if args.kv == "paged" else 0))
             t0 = time.time()
             report = engine.run(trace)
             dt = time.time() - t0
@@ -262,6 +300,11 @@ def main(argv=None):
                   f"ttft p50/p95/p99={tp['p50']:.0f}/{tp['p95']:.0f}/"
                   f"{tp['p99']:.0f} mean_ttft={report.mean_ttft():.1f} "
                   f"evictions={report.evictions}")
+            if args.measure_agreement:
+                from repro.serving.quality import token_agreement
+                agree = token_agreement(params, cfg, trace, report,
+                                        context=context)
+                print(f"  {agree.describe()}")
             reports.append(report)
 
     if args.policy == "both" and len(reports) == 2:

@@ -42,6 +42,11 @@ class AttnSettings:
     # ZeRO-3 gather-on-use: all-gather FSDP-sharded weights at each use
     # instead of psum-ing activation partials (§Perf iteration 2).
     gather_weights: bool = False
+    # Paged decode: emit per-logical-block attention mass ([b, max_blocks],
+    # softmax weight summed within each block, averaged over heads) in the
+    # attn aux dict — the signal the serving engine's block-granular
+    # retention policy (MemoryPlan.kv_retain) ranks blocks by.
+    track_mass: bool = False
 
 
 # ---------------------------------------------------------------------------
@@ -274,7 +279,8 @@ def _cache_from_prefill(k, v, positions, blk: BlockSpec, context: int):
     }
 
 
-def _decode_attend(q, cache, blk: BlockSpec, positions):
+def _decode_attend(q, cache, blk: BlockSpec, positions,
+                   return_probs: bool = False):
     """q [b,1,K,G,hd], cache k/v [b,L,K,hd]; positions [b]."""
     hd = q.shape[-1]
     scale = 1.0 / np.sqrt(hd)
@@ -283,6 +289,8 @@ def _decode_attend(q, cache, blk: BlockSpec, positions):
     s = jnp.where(msk[:, None, None, :, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = layers.einsum_f32("bkgqs,bskh->bqkgh", p, cache["v"])
+    if return_probs:
+        return o.astype(q.dtype), p
     return o.astype(q.dtype)
 
 
@@ -299,6 +307,56 @@ def _decode_attend(q, cache, blk: BlockSpec, positions):
 # -1) read and write it harmlessly, so one batched decode serves any pool
 # occupancy with a single compile. Only full-context layers page; short
 # windowed/chunked rings stay per-lane (see runtime.serve_step).
+#
+# QUANTIZED pools (MemoryPlan.kv_quant) additionally carry per-token
+# per-head f32 absmax scales {"ks": [n_blocks, block, K], "vs": ...}; the
+# pool is SELF-DESCRIBING — kb dtype int8 => "int8", uint8 => "int4"
+# (two nibbles per byte, offset +8) — so every read/write path picks the
+# codec from the cache itself and can never disagree with the layout
+# init_paged_pool allocated. Scales are per-token rows, so appending a
+# token to a block never rescales entries already written (block-granular
+# absmax would force a lossy requantize on every tail write).
+
+KV_QUANT_MAX = {"int8": 127.0, "int4": 7.0}
+
+
+def paged_quant_kind(cache) -> str:
+    """Storage codec of a paged layer cache, read off its own leaves."""
+    if "ks" not in cache:
+        return "none"
+    return "int8" if cache["kb"].dtype == jnp.int8 else "int4"
+
+
+def quantize_kv(x, kind: str):
+    """Encode K/V rows for pool storage: x [..., hd] fp ->
+    (q [..., hd] int8 | [..., hd//2] uint8, scale [...] f32). Per-row
+    (token, head) absmax scales: |dequant - x| <= scale / 2 per element."""
+    if kind == "none":
+        return x, None
+    qmax = KV_QUANT_MAX[kind]
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf), axis=-1) / qmax
+    q = jnp.round(xf / jnp.maximum(scale, 1e-30)[..., None])
+    q = jnp.clip(q, -qmax, qmax)
+    if kind == "int8":
+        return q.astype(jnp.int8), scale
+    nib = (q + 8.0).astype(jnp.uint8)            # 1..15 (0 unused)
+    lo, hi = nib[..., 0::2], nib[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8), scale
+
+
+def dequantize_kv(q, scale, kind: str, dtype=jnp.bfloat16):
+    """Decode pool-stored K/V rows back to fp (inverse of quantize_kv)."""
+    if kind == "none":
+        return q
+    if kind == "int8":
+        return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+    lo = (q & 0xF).astype(jnp.int32) - 8
+    hi = (q >> 4).astype(jnp.int32) - 8
+    full = jnp.stack([lo, hi], axis=-1).reshape(*q.shape[:-1],
+                                                q.shape[-1] * 2)
+    return (full.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
 
 def is_paged_cache(cache) -> bool:
     return isinstance(cache, dict) and "kb" in cache
@@ -318,11 +376,18 @@ def _paged_write(cache, block_tables, k1, v1, pos1):
     off = safe_pos % bsz
     phys = jnp.take_along_axis(block_tables, lb[:, None], axis=1)[:, 0]
     phys = jnp.where(live & (phys >= 0), phys, 0)        # scratch fallback
-    return {
-        "kb": cache["kb"].at[phys, off].set(k1.astype(cache["kb"].dtype)),
-        "vb": cache["vb"].at[phys, off].set(v1.astype(cache["vb"].dtype)),
+    kind = paged_quant_kind(cache)
+    kq, ks = quantize_kv(k1, kind)
+    vq, vs = quantize_kv(v1, kind)
+    out = {
+        "kb": cache["kb"].at[phys, off].set(kq.astype(cache["kb"].dtype)),
+        "vb": cache["vb"].at[phys, off].set(vq.astype(cache["vb"].dtype)),
         "pos": cache["pos"].at[phys, off].set(jnp.where(live, pos1, -1)),
     }
+    if kind != "none":
+        out["ks"] = cache["ks"].at[phys, off].set(ks)
+        out["vs"] = cache["vs"].at[phys, off].set(vs)
+    return out
 
 
 def _paged_gather(cache, block_tables):
@@ -334,9 +399,14 @@ def _paged_gather(cache, block_tables):
     bsz = cache["pos"].shape[1]
     safe = jnp.where(block_tables >= 0, block_tables, 0)
     pos = jnp.where(block_tables[..., None] >= 0, cache["pos"][safe], -1)
+    kind = paged_quant_kind(cache)
+    k, v = cache["kb"][safe], cache["vb"][safe]  # [b, mB, bs, K, hd']
+    if kind != "none":
+        k = dequantize_kv(k, cache["ks"][safe], kind)
+        v = dequantize_kv(v, cache["vs"][safe], kind)
     return {
-        "k": cache["kb"][safe].reshape(b, m_blocks * bsz, *cache["kb"].shape[2:]),
-        "v": cache["vb"][safe].reshape(b, m_blocks * bsz, *cache["vb"].shape[2:]),
+        "k": k.reshape(b, m_blocks * bsz, *k.shape[3:]),
+        "v": v.reshape(b, m_blocks * bsz, *v.shape[3:]),
         "pos": pos.reshape(b, m_blocks * bsz),
     }
 
@@ -355,12 +425,19 @@ def _paged_write_chunk(cache, block_tables, k, v, positions):
     phys = jnp.take_along_axis(block_tables, lb, axis=1)
     phys = jnp.where(valid & (phys >= 0), phys, 0)           # scratch
     off = safe_pos % bsz
-    return {
-        "kb": cache["kb"].at[phys, off].set(k.astype(cache["kb"].dtype)),
-        "vb": cache["vb"].at[phys, off].set(v.astype(cache["vb"].dtype)),
+    kind = paged_quant_kind(cache)
+    kq, ks = quantize_kv(k, kind)
+    vq, vs = quantize_kv(v, kind)
+    out = {
+        "kb": cache["kb"].at[phys, off].set(kq.astype(cache["kb"].dtype)),
+        "vb": cache["vb"].at[phys, off].set(vq.astype(cache["vb"].dtype)),
         "pos": cache["pos"].at[phys, off].set(
             jnp.where(valid, positions, -1)),
     }
+    if kind != "none":
+        out["ks"] = cache["ks"].at[phys, off].set(ks)
+        out["vs"] = cache["vs"].at[phys, off].set(vs)
+    return out
 
 
 def _chunk_append(q, k, v, cache, blk: BlockSpec, positions, block_tables):
@@ -409,16 +486,33 @@ def _paged_decode(q, cache, blk: BlockSpec, pos1, k1, v1, block_tables,
                   settings: AttnSettings):
     """One decode step against the paged pool: scatter the new K/V entry,
     then attend through the block table — via the Pallas paged kernel
-    (interpret-mode off-TPU) or the jnp gather fallback."""
+    (interpret-mode off-TPU; quantized pools dequant IN-kernel on the
+    block-table DMA path) or the jnp gather fallback. Returns
+    (o, new_cache, mass or None): `mass` [b, max_blocks] is each logical
+    block's softmax share, emitted when settings.track_mass."""
     new_cache = _paged_write(cache, block_tables, k1, v1, pos1)
+    b, m_blocks = block_tables.shape
+    bsz = cache["pos"].shape[1]
     if settings.backend == "pallas":
         from repro.kernels import ops as kops
-        o = kops.paged_decode_attention(
+        quant = paged_quant_kind(new_cache)
+        out = kops.paged_decode_attention(
             q[:, 0], new_cache["kb"], new_cache["vb"], new_cache["pos"],
-            block_tables, pos1, window=blk.window, chunk=blk.chunk)
-        return o[:, None], new_cache
+            block_tables, pos1, window=blk.window, chunk=blk.chunk,
+            k_scales=(new_cache["ks"] if quant != "none" else None),
+            v_scales=(new_cache["vs"] if quant != "none" else None),
+            return_mass=settings.track_mass)
+        if settings.track_mass:
+            o, mass = out
+            return o[:, None], new_cache, mass
+        return out[:, None], new_cache, None
     virt = _paged_gather(new_cache, block_tables)
-    return _decode_attend(q, virt, blk, pos1), new_cache
+    if settings.track_mass:
+        o, p = _decode_attend(q, virt, blk, pos1, return_probs=True)
+        # p [b, K, G, 1, mB*bs]: average heads, fold positions into blocks
+        mass = p.mean(axis=(1, 2))[:, 0].reshape(b, m_blocks, bsz).sum(-1)
+        return o, new_cache, mass
+    return _decode_attend(q, virt, blk, pos1), new_cache, None
 
 
 # ---------------------------------------------------------------------------
@@ -432,7 +526,9 @@ def attn_apply(params, cfg: ModelConfig, blk: BlockSpec, x, positions,
     [b, max_blocks] routes decode through a paged pool cache (see the
     paged-KV section above) when the layer's cache is paged.
 
-    Returns (y [b, s, d], new_cache or None).
+    Returns (y [b, s, d], new_cache or None, aux dict). `aux` carries
+    "attn_mass" [b, max_blocks] on paged decode when settings.track_mass
+    (the block-retention signal); empty otherwise.
     """
     b, s, d = x.shape
     K, hd = cfg.n_kv_heads, cfg.resolved_head_dim
@@ -467,14 +563,18 @@ def attn_apply(params, cfg: ModelConfig, blk: BlockSpec, x, positions,
                               cfg.rope_theta).reshape(b, s, K, G, hd)
         k = layers.apply_rope(k, positions, cfg.rope_theta)
 
+    aux = {}
     if decode:
         assert cache is not None and s == 1
         pos1 = positions.reshape(b)              # accept [b] or [b, 1]
         if is_paged_cache(cache):
             assert block_tables is not None, \
                 "paged cache needs block_tables at decode"
-            o, new_cache = _paged_decode(q, cache, blk, pos1, k[:, 0],
-                                         v[:, 0], block_tables, settings)
+            o, new_cache, mass = _paged_decode(q, cache, blk, pos1, k[:, 0],
+                                               v[:, 0], block_tables,
+                                               settings)
+            if mass is not None:
+                aux["attn_mass"] = mass
         else:
             L = cache["pos"].shape[1]
             # inert rows (pos1 < 0) drop their ring write entirely — slot L
@@ -510,4 +610,4 @@ def attn_apply(params, cfg: ModelConfig, blk: BlockSpec, x, positions,
 
     o = o.reshape(b, s, cfg.n_heads * hd)
     y = layers.matmul(o, wo)
-    return shard(y, "batch", "seq", "embed"), new_cache
+    return shard(y, "batch", "seq", "embed"), new_cache, aux

@@ -118,10 +118,11 @@ def block_apply(params, cfg: ModelConfig, blk: BlockSpec, x, positions,
     if blk.mixer == ATTN:
         cache_arg = cache if cache is not None else ("build" if building
                                                      else None)
-        delta, new_cache = attention.attn_apply(
+        delta, new_cache, attn_aux = attention.attn_apply(
             params["mixer"], cfg, blk, x, positions, cache=cache_arg,
             decode=decode, context=context, settings=settings.attn,
             block_tables=block_tables)
+        aux = {**aux, **attn_aux}
     else:
         if building:  # prefill: recurrent blocks start from zero state
             cache = block_cache_init(cfg, blk, x.shape[0], context)
@@ -227,7 +228,7 @@ def unit_stack_forward(units_params, cfg: ModelConfig, x, pos, *,
             x, _, aux = block_apply(unit_params[i], cfg, blk, x, pos,
                                     cache=None, decode=False, context=ctx,
                                     settings=settings)
-            aux_sum = {k: aux_sum[k] + aux[k] for k in aux_sum}
+            aux_sum = {k: aux_sum[k] + aux.get(k, 0) for k in aux_sum}
         return x, aux_sum
 
     unit_body = unit_wrapper(unit_body)
@@ -235,7 +236,7 @@ def unit_stack_forward(units_params, cfg: ModelConfig, x, pos, *,
     def scan_body(carry, xs):
         x, aux_acc = carry
         x, aux = unit_body(x, list(xs))
-        return (x, {k: aux_acc[k] + aux[k] for k in aux_acc}), ()
+        return (x, {k: aux_acc[k] + aux.get(k, 0) for k in aux_acc}), ()
 
     (x, aux_acc), _ = jax.lax.scan(scan_body, (x, _zero_aux()),
                                    tuple(units_params))
@@ -253,7 +254,7 @@ def tail_head_forward(params, cfg: ModelConfig, x, pos, *,
         x, _, aux = block_apply(params["tail"][i], cfg, blk, x, pos,
                                 cache=None, decode=False, context=ctx,
                                 settings=settings)
-        aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}
+        aux_acc = {k: aux_acc[k] + aux.get(k, 0) for k in aux_acc}
     x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     head = params["embed"] if cfg.tie_embeddings else params["head"]
     return layers.lm_head(head, cfg, x), aux_acc
@@ -296,6 +297,11 @@ def apply(params, cfg: ModelConfig, tokens, *, positions=None,
     ctx = context or s
 
     zero_aux = _zero_aux()
+    if decode and block_tables is not None and settings.attn.track_mass:
+        # per-block attention mass, summed over layers (relative heat is
+        # what the retention policy ranks on)
+        zero_aux["attn_mass"] = jnp.zeros(
+            (b, block_tables.shape[1]), jnp.float32)
     want_cache = decode or settings.build_cache
     have_cache = cache is not None
 
@@ -309,7 +315,7 @@ def apply(params, cfg: ModelConfig, tokens, *, positions=None,
                                      settings=settings,
                                      block_tables=block_tables)
             new_caches.append(nc)
-            aux_sum = {k: aux_sum[k] + aux[k] for k in aux_sum}
+            aux_sum = {k: aux_sum[k] + aux.get(k, 0) for k in aux_sum}
         return x, new_caches, aux_sum
 
     unit_body = unit_wrapper(unit_body)
@@ -329,7 +335,7 @@ def apply(params, cfg: ModelConfig, tokens, *, positions=None,
             unit_params = xs[:len(cfg.unit)]
             unit_caches = (list(xs[len(cfg.unit):]) if have_cache else None)
             x, new_caches, aux = unit_body(x, list(unit_params), unit_caches)
-            aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}
+            aux_acc = {k: aux_acc[k] + aux.get(k, 0) for k in aux_acc}
             ys = tuple(new_caches) if want_cache else ()
             return (x, aux_acc), ys
 
@@ -348,7 +354,7 @@ def apply(params, cfg: ModelConfig, tokens, *, positions=None,
             unit_caches = ([jax.tree.map(lambda a: a[r], t)
                             for t in cache["units"]] if have_cache else None)
             x, new_caches, aux = unit_body(x, unit_params, unit_caches)
-            aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}
+            aux_acc = {k: aux_acc[k] + aux.get(k, 0) for k in aux_acc}
             if want_cache:
                 collected.append(new_caches)
         if want_cache and collected:
@@ -370,7 +376,7 @@ def apply(params, cfg: ModelConfig, tokens, *, positions=None,
                                  settings=settings,
                                  block_tables=block_tables)
         new_tail_caches.append(nc)
-        aux_acc = {k: aux_acc[k] + aux[k] for k in aux_acc}
+        aux_acc = {k: aux_acc[k] + aux.get(k, 0) for k in aux_acc}
 
     x = layers.rmsnorm(params["final_norm"], x, cfg.norm_eps)
     if logits_last_only and not decode:

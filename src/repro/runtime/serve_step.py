@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.models import attention
 from repro.models import model as M
 
 
@@ -172,22 +173,45 @@ def is_paged_block(blk, context: int) -> bool:
 
 
 def init_paged_pool(cfg: ModelConfig, n_lanes: int, n_blocks: int,
-                    block: int, context: int, abstract: bool = False):
+                    block: int, context: int, abstract: bool = False,
+                    kv_quant: str = "none"):
     """The paged serving pool: paged layers get block-pool leaves (shared
     across lanes), everything else a per-lane cache like init_slot_pool.
-    `context` must be a multiple of `block` (the executor rounds up)."""
+    `context` must be a multiple of `block` (the executor rounds up).
+
+    kv_quant != "none" stores kb/vb quantized (int8, or int4 packed two
+    nibbles per uint8 byte halving the last dim) with per-(position, kv
+    head) f32 absmax scales in sibling "ks"/"vs" leaves. The pool is
+    self-describing: read/write paths pick the codec off the leaf dtypes
+    (attention.paged_quant_kind), so a quantized pool can never be
+    misread as fp."""
     if context % block:
         raise ValueError(f"paged pool context {context} must be a multiple "
                          f"of the kv block size {block}")
+    if kv_quant not in ("none", "int8", "int4"):
+        raise ValueError(f"unknown kv_quant {kv_quant!r}")
     hd = cfg.resolved_head_dim
     K = cfg.n_kv_heads
+    if kv_quant == "int4" and hd % 2:
+        raise ValueError(f"int4 KV packs nibble pairs; head_dim {hd} "
+                         "must be even")
 
     def paged_leaf():
+        if kv_quant == "none":
+            return {
+                "kb": jax.ShapeDtypeStruct((n_blocks, block, K, hd),
+                                           jnp.bfloat16),
+                "vb": jax.ShapeDtypeStruct((n_blocks, block, K, hd),
+                                           jnp.bfloat16),
+                "pos": jax.ShapeDtypeStruct((n_blocks, block), jnp.int32),
+            }
+        qdt = jnp.int8 if kv_quant == "int8" else jnp.uint8
+        qhd = hd if kv_quant == "int8" else hd // 2
         return {
-            "kb": jax.ShapeDtypeStruct((n_blocks, block, K, hd),
-                                       jnp.bfloat16),
-            "vb": jax.ShapeDtypeStruct((n_blocks, block, K, hd),
-                                       jnp.bfloat16),
+            "kb": jax.ShapeDtypeStruct((n_blocks, block, K, qhd), qdt),
+            "vb": jax.ShapeDtypeStruct((n_blocks, block, K, qhd), qdt),
+            "ks": jax.ShapeDtypeStruct((n_blocks, block, K), jnp.float32),
+            "vs": jax.ShapeDtypeStruct((n_blocks, block, K), jnp.float32),
             "pos": jax.ShapeDtypeStruct((n_blocks, block), jnp.int32),
         }
 
@@ -232,17 +256,27 @@ def write_paged_prefill(cfg: ModelConfig, pool, one, lanes, tables,
         return f
 
     def paged_upd(P, o, batch_axis):
-        # o k/v: [..., W, L, K, hd] with L = mB * block; pos: [..., W, L]
+        # o k/v: [..., W, L, K, hd] with L = mB * block; pos: [..., W, L].
+        # Quantized pools quantize the prefill ring here (the exact same
+        # per-row codec _paged_write applies on decode appends).
+        kind = attention.paged_quant_kind(P)
         W, mB = tables.shape
         flat = jnp.where(tables >= 0, tables, 0).reshape(-1)      # [W*mB]
-        new = {}
-        for kk, pk in (("k", "kb"), ("v", "vb"), ("pos", "pos")):
-            o_l = o[kk]
+        idx = (slice(None),) * batch_axis + (flat,)
+
+        def blocked(o_l):
             shp = o_l.shape[:batch_axis] + (W * mB, block) \
                 + o_l.shape[batch_axis + 2:]
-            o_b = o_l.reshape(shp)
-            idx = (slice(None),) * batch_axis + (flat,)
-            new[pk] = P[pk].at[idx].set(o_b.astype(P[pk].dtype))
+            return o_l.reshape(shp)
+
+        new = dict(P)
+        for kk, pk, sk in (("k", "kb", "ks"), ("v", "vb", "vs")):
+            q, s = attention.quantize_kv(o[kk], kind)
+            new[pk] = P[pk].at[idx].set(blocked(q).astype(P[pk].dtype))
+            if s is not None:
+                new[sk] = P[sk].at[idx].set(blocked(s))
+        new["pos"] = P["pos"].at[idx].set(
+            blocked(o["pos"]).astype(P["pos"].dtype))
         return new
 
     units = []
@@ -286,11 +320,13 @@ def make_paged_decode_step(cfg: ModelConfig,
     settings = settings or M.ModelSettings()
 
     def decode_paged(params, tokens, positions, tables, pool, context: int):
-        logits, new_pool, _ = M.apply(params, cfg, tokens,
-                                      positions=positions, cache=pool,
-                                      decode=True, settings=settings,
-                                      context=context, block_tables=tables)
-        return logits[:, -1], new_pool
+        logits, new_pool, aux = M.apply(params, cfg, tokens,
+                                        positions=positions, cache=pool,
+                                        decode=True, settings=settings,
+                                        context=context, block_tables=tables)
+        # mass [b, max_blocks] (layer-summed per-block attention mass) when
+        # settings.attn.track_mass, else None — the retention policy's feed
+        return logits[:, -1], new_pool, aux.get("attn_mass")
 
     return decode_paged
 
@@ -352,11 +388,12 @@ def make_compact_decode_step(cfg: ModelConfig,
     def decode_compact(params, tokens, positions, tables, lane_ids, pool,
                        context: int):
         sub = gather_pool_lanes(pool, lane_ids)
-        logits, new_sub, _ = M.apply(params, cfg, tokens,
-                                     positions=positions, cache=sub,
-                                     decode=True, settings=settings,
-                                     context=context, block_tables=tables)
-        return logits[:, -1], scatter_pool_lanes(pool, new_sub, lane_ids)
+        logits, new_sub, aux = M.apply(params, cfg, tokens,
+                                       positions=positions, cache=sub,
+                                       decode=True, settings=settings,
+                                       context=context, block_tables=tables)
+        return (logits[:, -1], scatter_pool_lanes(pool, new_sub, lane_ids),
+                aux.get("attn_mass"))
 
     return decode_compact
 

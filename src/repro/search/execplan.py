@@ -201,6 +201,9 @@ class ServingPlan:
     blocks: int = 0                  # global paged-pool block budget
     admission: str = "optimistic"    # reservation discipline the capacity
                                      # inversion assumed (worst | optimistic)
+    agreement: float = 1.0           # PRIOR token-agreement estimate of the
+                                     # picked bend (1.0 = exact; measured
+                                     # agreement comes from serving.quality)
 
     def slots(self, cap: Optional[int] = None) -> int:
         """Engine slot-pool size (ring) / decode-lane count (paged): the
@@ -223,12 +226,37 @@ class ServingPlan:
                  if self.kv_block else "")
         if self.admission != "optimistic":
             paged += f" admission={self.admission}"
+        p = self.execution.plan
+        if p.kv_quant != "none":
+            paged += f" kv_quant={p.kv_quant}"
+        if p.kv_retain:
+            paged += f" kv_retain={p.kv_retain}"
+        if self.agreement < 1.0:
+            paged += f" agreement>={self.agreement:.3f}"
         return (f"{self.execution.describe()} capacity={self.capacity}"
                 f"{paged} (budget={self.hbm_budget / 2**30:.1f} GiB, "
                 f"considered={self.considered})")
 
 
 DEFAULT_KV_BLOCKS = (8, 16, 32, 64, 128)
+
+# Prior token-agreement estimates for the capacity-bending knobs: what the
+# search GATE assumes before anything is measured. int8 per-row absmax is
+# near-lossless on KV (error <= scale/2 per element); int4 and block
+# dropping are real bends. The benchmark's quality harness
+# (serving.quality.token_agreement) replaces these priors with measurement.
+QUANT_AGREEMENT = {"none": 1.0, "int8": 0.995, "int4": 0.97}
+RETAIN_AGREEMENT = 0.95
+
+
+def predicted_agreement(plan: MemoryPlan, max_seq_blocks: int) -> float:
+    """Prior token-agreement of a bent candidate vs exact greedy decode.
+    Retention only costs quality when it would actually drop blocks —
+    a reach cap wider than the longest sequence never fires."""
+    a = QUANT_AGREEMENT[plan.kv_quant]
+    if plan.kv_retain and plan.kv_retain + 1 < max_seq_blocks:
+        a *= RETAIN_AGREEMENT
+    return a
 
 
 def _expected_blocks(seq_lens: Sequence[int], block: int) -> float:
@@ -274,17 +302,26 @@ def _paged_concurrency(cfg, shape, cand, cls, budget, mode, hw, factors,
     from repro.core import predictor as PR
     _, dp, _ = PR.mesh_factors(cand.mesh_shape)
     block = cand.plan.kv_block_size
-    e_blocks = _expected_blocks(seq_lens, block)
     lens = [max(int(s), 1) for s in seq_lens] or [1]
     avg_context = -(-sum(lens) // len(lens))
     # the pool must also hold the LONGEST request outright, or the engine
     # could never admit it (expected demand alone would undersize the pool
-    # on a short-heavy trace with a long tail)
+    # on a short-heavy trace with a long tail). Retention does NOT lower
+    # this floor: whole-prompt prefill lands every prompt block before the
+    # first drop.
     max_seq_blocks = max(-(-s // block) for s in lens)
     e_frac = (sum(lens) / len(lens)) / max(lens)     # mean/max in (0, 1]
     nb = [-(-s // block) for s in lens]
-    std_blocks = (sum((b - e_blocks) ** 2 for b in nb) / len(nb)) ** 0.5
     worst = admission == "worst"
+    retain = cand.plan.kv_retain
+    if retain and not worst:
+        # block retention caps each lane's steady-state live blocks at
+        # retain+1 (the engine drops the coldest past that). Worst-mode
+        # engines still reserve the uncapped footprint (deadlock-free by
+        # construction), so the cap only bends optimistic sizing.
+        nb = [min(b, retain + 1) for b in nb]
+    e_blocks = sum(nb) / len(nb)
+    std_blocks = (sum((b - e_blocks) ** 2 for b in nb) / len(nb)) ** 0.5
     _blocks_memo: dict = {}
 
     def blocks_at(lanes: int) -> int:
@@ -331,7 +368,10 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
                  kv_blocks: Sequence[int] = DEFAULT_KV_BLOCKS,
                  seq_lens: Optional[Sequence[int]] = None,
                  compact: bool = False, admission: str = "optimistic",
-                 sigma_k: float = 0.0):
+                 sigma_k: float = 0.0,
+                 kv_quants: Sequence[str] = ("none",),
+                 kv_retains: Sequence[int] = (0,),
+                 min_agreement: float = 0.0):
     """The serving-engine planning entry: walk the serving lattice
     (kv_shard x kv_block_size x data x model, pipe pinned —
     space.serving_space) and pick the candidate that maximizes admitted
@@ -353,7 +393,14 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
     sigmas, pairing with an eviction-capable engine) or "worst" (every
     lane charged the longest request, the deadlock-free sizing); a
     candidate's own `admission` extra (when `serving_space` searches it)
-    overrides the call-level value per candidate. Returns
+    overrides the call-level value per candidate.
+
+    `kv_quants` / `kv_retains` (paged only) widen the lattice with the
+    capacity-bending knobs; `min_agreement` is the quality floor on the
+    bend — candidates whose `predicted_agreement` prior falls below it are
+    dropped before scoring, so the planner walks the quality/capacity
+    frontier instead of always taking the cheapest bytes. Exact candidates
+    (kv_quant="none", kv_retain=0) always pass the gate. Returns
     (Classification, ServingPlan)."""
     from repro.core import predictor as PR   # lazy, like profiler below
     from repro.core import profiler as PF
@@ -371,7 +418,9 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
         space = SP.serving_space(
             cfg, shape, max_devices=n_devices,
             data=_axis_values(n_devices), model=_axis_values(n_devices),
-            kv_blocks=tuple(kv_blocks) if kv == "paged" else (0,))
+            kv_blocks=tuple(kv_blocks) if kv == "paged" else (0,),
+            kv_quants=tuple(kv_quants) if kv == "paged" else ("none",),
+            kv_retains=tuple(kv_retains) if kv == "paged" else (0,))
     if kv == "paged" and seq_lens is None:
         seq_lens = (shape.context,)
     cands = space.candidates(cfg, shape)
@@ -379,6 +428,17 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
         cands = [c for c in cands if c.plan.kv_block_size > 0]
     if not cands:
         raise ValueError(f"{space.name}: no valid serving candidates")
+    if min_agreement > 0 and kv == "paged":
+        lens = [max(int(s), 1) for s in seq_lens]
+        kept = []
+        for c in cands:
+            msb = max(-(-s // c.plan.kv_block_size) for s in lens)
+            if predicted_agreement(c.plan, msb) >= min_agreement:
+                kept.append(c)
+        cands = kept
+        if not cands:
+            raise ValueError(f"{space.name}: no serving candidate meets "
+                             f"min_agreement={min_agreement}")
     best, best_cap, best_blocks = None, -1, 0
     best_adm = admission
     for cand in cands:                       # fastest-first => ties keep speed
@@ -397,10 +457,16 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
             best, best_cap, best_blocks, best_adm = cand, cap, blocks, adm
     eplan = for_mesh(cfg, shape, best.plan, best.mesh_shape,
                      policy="max_concurrency")
+    agree = 1.0
+    if kv == "paged":
+        lens = [max(int(s), 1) for s in seq_lens]
+        msb = max(-(-s // best.plan.kv_block_size) for s in lens)
+        agree = predicted_agreement(best.plan, msb)
     return cls, ServingPlan(execution=eplan, capacity=best_cap,
                             hbm_budget=budget, considered=len(cands),
                             kv_block=best.plan.kv_block_size,
-                            blocks=best_blocks, admission=best_adm)
+                            blocks=best_blocks, admission=best_adm,
+                            agreement=agree)
 
 
 def plan_execution(cfg: ModelConfig, shape: ShapeConfig,

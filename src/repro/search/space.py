@@ -215,6 +215,30 @@ def _check_kv_block(cfg, shape, cand) -> bool:
 KV_BLOCK_LEGAL = Constraint("kv block size within the context", _check_kv_block)
 
 
+def _check_kv_quant(cfg, shape, cand) -> bool:
+    """Quantized KV lives in the paged block pool (per-row scales ride the
+    block leaves), and int4 packs nibble pairs over the head dim."""
+    q = cand.plan.kv_quant
+    if q == "none":
+        return True
+    if cand.plan.kv_block_size <= 0:
+        return False
+    return q != "int4" or cfg.resolved_head_dim % 2 == 0
+
+KV_QUANT_LEGAL = Constraint("kv quantization needs a paged pool "
+                            "(int4: even head_dim)", _check_kv_quant)
+
+
+def _check_kv_retain(cfg, shape, cand) -> bool:
+    """Block-granular retention evicts paged blocks — meaningless on ring
+    slots; a reach cap must also leave at least one block of context."""
+    r = cand.plan.kv_retain
+    return r == 0 or cand.plan.kv_block_size > 0
+
+KV_RETAIN_LEGAL = Constraint("kv retention needs a paged pool",
+                             _check_kv_retain)
+
+
 def mesh_budget(max_devices: int) -> Constraint:
     def check(cfg, shape, cand) -> bool:
         n = 1
@@ -422,7 +446,9 @@ def serving_space(cfg: ModelConfig, shape: ShapeConfig, *,
                   data: Sequence[int] = (1, 2, 4, 8, 16, 32),
                   model: Sequence[int] = (1, 2, 4, 8, 16),
                   kv_blocks: Sequence[int] = (0,),
-                  admission: Sequence[str] = ()) -> ConfigSpace:
+                  admission: Sequence[str] = (),
+                  kv_quants: Sequence[str] = ("none",),
+                  kv_retains: Sequence[int] = (0,)) -> ConfigSpace:
     """The serving-engine planning lattice: mesh axes searchable (pipe
     pinned to 1 — the serving runtime is single-shot) and kv_shard a REAL
     knob rather than auto-resolved, because the admission controller cares:
@@ -436,21 +462,26 @@ def serving_space(cfg: ModelConfig, shape: ShapeConfig, *,
     vs "worst" deadlock-free-by-construction) — ABSENT by default so
     `plan_serving(admission=...)` governs; pass a non-empty tuple to make
     it a searched knob (candidate extras then override the argument).
-    `plan_serving` scores each candidate by `predictor.serving_capacity`
-    (ring) or expected admitted concurrency over the block pool (paged)
-    instead of step time."""
+    `kv_quant` / `kv_retain` are the capacity-bending knobs (int8/int4
+    block storage, top-k block retention) — legal only over a paged pool,
+    and `plan_serving(min_agreement=...)` gates how aggressive a bend the
+    planner may pick. `plan_serving` scores each candidate by
+    `predictor.serving_capacity` (ring) or expected admitted concurrency
+    over the block pool (paged) instead of step time."""
     knobs = [Knob("remat", ("none",)), Knob("microbatches", (1,)),
              Knob("optimizer", ("adamw_f32",)),
              Knob("kv_shard", ("heads", "seq")),
              Knob("kv_block_size", tuple(kv_blocks)),
+             Knob("kv_quant", tuple(kv_quants)),
+             Knob("kv_retain", tuple(int(r) for r in kv_retains)),
              *([Knob("admission", tuple(admission), group="extra")]
                if admission else []),
              Knob("data", tuple(data), group="mesh"),
              Knob("model", tuple(model), group="mesh"),
              Knob("pipe", (1,), group="mesh")]
     return ConfigSpace(f"serving[{cfg.name}|{shape.name}]", knobs,
-                       (KV_HEADS_DIVISIBLE, KV_BLOCK_LEGAL,
-                        mesh_budget(max_devices)))
+                       (KV_HEADS_DIVISIBLE, KV_BLOCK_LEGAL, KV_QUANT_LEGAL,
+                        KV_RETAIN_LEGAL, mesh_budget(max_devices)))
 
 
 def hillclimb_space(

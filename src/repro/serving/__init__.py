@@ -19,4 +19,7 @@ def __getattr__(name):
     if name in ("JaxExecutor", "PagedJaxExecutor"):
         from repro.serving import executor
         return getattr(executor, name)
+    if name in ("AgreementReport", "token_agreement", "measure_bend"):
+        from repro.serving import quality
+        return getattr(quality, name)
     raise AttributeError(name)

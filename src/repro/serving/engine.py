@@ -179,6 +179,22 @@ class BlockAllocator:
         self._free.extend(ids)           # FIFO reuse: deterministic
         return ids
 
+    def free_block(self, rid: int, bid: int) -> None:
+        """Return ONE of `rid`'s own blocks to the free list mid-flight
+        (the retention policy dropping a cold block). The reservation
+        stays — only the physical block is recycled. Shared prefix blocks
+        are never in a request's owned list, so retention can't free one
+        through here; freeing a block twice (or one the request never
+        owned) raises."""
+        owned = self._owned.get(rid)
+        if owned is None:
+            raise RuntimeError(f"request {rid} owns no blocks")
+        if bid not in owned:
+            raise RuntimeError(f"request {rid} does not own block {bid} "
+                               "(double free, or a shared prefix block)")
+        owned.remove(bid)
+        self._free.append(bid)
+
     # -- shared prefixes ----------------------------------------------------
 
     def create_prefix(self, key, n: int) -> Optional[List[int]]:
@@ -256,6 +272,8 @@ class _Active:
                                  # re-prefill appends them to the prompt)
     prefix_key: Optional[object] = None   # shared prefix this lane reads
     first_token: int = -1        # tick the FIRST token was emitted (-1: none)
+    shared: int = 0              # leading table entries that are SHARED
+                                 # prefix blocks (never retention-dropped)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -317,6 +335,7 @@ class ServeReport:
                                  # x decode_ticks without lane compaction)
     chunk_calls: int = 0         # batched chunk-prefill invocations
     evictions: int = 0           # evict-and-requeue events (expected mode)
+    block_drops: int = 0         # cold blocks freed by the retention policy
 
     @property
     def generated_tokens(self) -> int:
@@ -366,6 +385,8 @@ class ServeReport:
             paged += f" chunk_calls={self.chunk_calls}"
         if self.evictions:
             paged += f" evictions={self.evictions}"
+        if self.block_drops:
+            paged += f" block_drops={self.block_drops}"
         lp = self.latency_percentiles()
         tp = self.ttft_percentiles()
         return (f"[{self.policy}] slots={self.n_slots} "
@@ -409,6 +430,10 @@ class ScriptedExecutor:
         self.tick_widths: List[int] = []
         # lane -> (start of accumulation, tokens accumulated so far)
         self._partial: Dict[int, Tuple[int, List[int]]] = {}
+        # lane -> per-logical-block mass from the last decode (scripted
+        # stand-in for attention mass: later blocks are hotter, so the
+        # retention policy deterministically drops oldest-first)
+        self._last_mass: Dict[int, List[float]] = {}
 
     def _token_at(self, last: int, pos: int) -> int:
         """The token emitted after consuming token `last` at position
@@ -473,7 +498,15 @@ class ScriptedExecutor:
         n_active = len(lanes) if lanes is not None else len(tokens)
         width = self.decode_width(n_active)
         self.tick_widths.append(width if width is not None else len(tokens))
+        if tables is not None:
+            act = lanes if lanes is not None else range(len(tokens))
+            self._last_mass = {
+                int(i): [float(j + 1) for j in range(len(tables[i]))]
+                for i in act}
         return [self._token_at(t, p) for t, p in zip(tokens, positions)]
+
+    def block_masses(self) -> Dict[int, List[float]]:
+        return self._last_mass
 
 
 class Engine:
@@ -502,7 +535,7 @@ class Engine:
                  allocator: Optional[BlockAllocator] = None,
                  chunk_prefill: int = 0, prefix_share: bool = False,
                  stats: Optional[LengthStats] = None,
-                 sigma_k: float = 1.0):
+                 sigma_k: float = 1.0, kv_retain: int = 0):
         if n_slots < 1:
             raise ValueError(f"Engine needs n_slots >= 1, got {n_slots} "
                              "(serving_capacity said nothing fits — lower "
@@ -526,6 +559,11 @@ class Engine:
                              "path)")
         if sigma_k < 0:
             raise ValueError(f"sigma_k must be >= 0, got {sigma_k}")
+        if kv_retain < 0:
+            raise ValueError(f"kv_retain must be >= 0, got {kv_retain}")
+        if kv_retain and allocator is None:
+            raise ValueError("kv_retain needs a BlockAllocator (retention "
+                             "drops paged blocks back to the free list)")
         self.executor = executor
         self.n_slots = int(n_slots)
         self.policy = policy
@@ -536,6 +574,9 @@ class Engine:
         self.prefix_share = bool(prefix_share)
         self.stats = stats
         self.sigma_k = float(sigma_k)
+        # keep only the kv_retain most-attended own blocks per lane (plus
+        # the tail block being written); 0 = keep everything
+        self.kv_retain = int(kv_retain)
         # per-run state (reset by run()): rid -> resume record after an
         # eviction; prefix key -> {"ready": bool, "writer": rid|None}
         self._resume: Dict[int, Dict] = {}
@@ -560,6 +601,11 @@ class Engine:
             return worst_own
         exp = self.stats.expected_written(len(req.prompt), self.sigma_k)
         exp_own = -(-int(exp) // alloc.block_size) - n_shared
+        if self.kv_retain:
+            # retention bounds steady-state own blocks at retain+1; the
+            # floor below still covers the whole-prompt prefill burst
+            # (drops begin only after the first decode tick)
+            exp_own = min(exp_own, self.kv_retain + 1)
         now_own = 0 if chunked else (-(-eff_len // alloc.block_size)
                                      - n_shared)
         return max(now_own, min(worst_own, max(exp_own, 0)))
@@ -676,7 +722,7 @@ class Engine:
                     req=req, admitted=(meta["admitted"] if meta else tick),
                     pos=0, remaining=req.max_new - len(prior), tokens=[],
                     table=list(seed), pending=eff[skip:], prior=prior,
-                    prefix_key=key,
+                    prefix_key=key, shared=len(seed),
                     first_token=(meta["first_token"] if meta else -1))
                 continue
             by_len.setdefault(len(eff), []).append(item)
@@ -710,11 +756,40 @@ class Engine:
                     pos=plen, remaining=req.max_new - len(prior) - 1,
                     tokens=list(prior) + [int(firsts[gi])],
                     table=(tables[gi] if tables is not None else []),
-                    prior=prior, prefix_key=key, first_token=ft)
+                    prior=prior, prefix_key=key, shared=len(seed),
+                    first_token=ft)
                 if key is not None and writer:
                     # whole-prompt prefill wrote the prefix blocks in full
                     self._prefix_state[key]["ready"] = True
         return len(picked), calls
+
+    def _retain(self, a: _Active, mass: Optional[Sequence[float]]) -> int:
+        """Enforce the retention cap on one lane: keep the `kv_retain`
+        most-attended OWN blocks plus the tail block being written, free
+        the rest back to the allocator (their table entries go -1 =
+        unassigned, so decode masks them — H2O-style block dropping).
+        Shared prefix blocks (leading `a.shared` entries) are untouchable:
+        the allocator doesn't own-list them and other lanes read through
+        them. Ranking: lowest attention mass first, ties oldest-first
+        (lowest logical index) — with no mass signal everything ties, so
+        the policy degenerates to drop-oldest."""
+        alloc = self.allocator
+        tail = max(a.pos - 1, 0) // alloc.block_size
+        live = [j for j in range(len(a.table))
+                if a.table[j] >= 0 and j >= a.shared and j != tail]
+        if len(live) <= self.kv_retain:
+            return 0
+
+        def key(j):
+            m = (float(mass[j]) if mass is not None and j < len(mass)
+                 else 0.0)
+            return (m, j)
+
+        drop = sorted(live, key=key)[:len(live) - self.kv_retain]
+        for j in drop:
+            alloc.free_block(a.req.rid, a.table[j])
+            a.table[j] = -1
+        return len(drop)
 
     def _pick_victim(self, slots: List[Optional[_Active]]) -> int:
         """The lane to evict under pool pressure: loosest SLO class first
@@ -848,7 +923,7 @@ class Engine:
         slots: List[Optional[_Active]] = [None] * self.n_slots
         completions: List[Completion] = []
         tick = decode_ticks = useful = idle = 0
-        admit_only = lane_tokens = chunk_calls = 0
+        admit_only = lane_tokens = chunk_calls = block_drops = 0
         peak_queue = max_concurrent = prefills = prefill_calls = 0
         alloc = self.allocator
         self._resume = {}
@@ -938,6 +1013,13 @@ class Engine:
                     a.remaining -= 1
                     if a.remaining == 0:
                         finish(i, tick)
+                if alloc is not None and self.kv_retain:
+                    mass_fn = getattr(self.executor, "block_masses", None)
+                    masses = mass_fn() if mass_fn is not None else {}
+                    for i in active:
+                        if slots[i] is not None:
+                            block_drops += self._retain(slots[i],
+                                                        masses.get(i))
             elif admitted or chunked or self._evictions > ev0:
                 # at-admission completions / prompt chunks / evictions did
                 # real work this tick even though no decode ran — the
@@ -965,4 +1047,5 @@ class Engine:
                            admit_ticks=admit_only,
                            decode_lane_tokens=lane_tokens,
                            chunk_calls=chunk_calls,
-                           evictions=self._evictions)
+                           evictions=self._evictions,
+                           block_drops=block_drops)

@@ -28,7 +28,8 @@ tables.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+import dataclasses
+from typing import Dict, List, Optional, Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -201,11 +202,22 @@ class PagedJaxExecutor:
                  settings: Optional[M.ModelSettings] = None,
                  compact: bool = False,
                  lane_buckets: Optional[Sequence[int]] = None,
-                 chunk: int = 0):
+                 chunk: int = 0, kv_quant: str = "none",
+                 kv_retain: int = 0):
         if kv_block < 1:
             raise ValueError(f"kv_block must be >= 1, got {kv_block}")
+        if kv_retain < 0:
+            raise ValueError(f"kv_retain must be >= 0, got {kv_retain}")
         self.params = params
         self.cfg = cfg
+        self.kv_quant = str(kv_quant)
+        self.kv_retain = int(kv_retain)
+        if self.kv_retain:
+            # retention ranks blocks by attention mass — decode steps must
+            # account it, so bake track_mass into the jitted settings
+            base = settings or M.ModelSettings()
+            settings = dataclasses.replace(
+                base, attn=dataclasses.replace(base.attn, track_mass=True))
         self.settings = settings
         self.n_lanes = int(n_lanes)
         self.kv_block = int(kv_block)
@@ -237,10 +249,14 @@ class PagedJaxExecutor:
                     f"{bad[0]} restarts its sequence scan from zeros), "
                     f"got {cfg.name}")
         self.pool = SS.init_paged_pool(cfg, self.n_lanes, self.n_blocks + 1,
-                                       kv_block, self.context)
+                                       kv_block, self.context,
+                                       kv_quant=self.kv_quant)
         self.prefills = 0
         self.decodes = 0
         self.chunk_calls = 0
+        # lane -> per-logical-block attention mass from the LAST decode
+        # tick (only populated when kv_retain forces track_mass)
+        self._last_mass: Dict[int, np.ndarray] = {}
 
     def _steps(self):
         return SS.paged_serve_steps(self.cfg, self.settings)
@@ -309,9 +325,14 @@ class PagedJaxExecutor:
         t = jnp.asarray(list(tokens), jnp.int32)[:, None]
         p = jnp.asarray(list(positions), jnp.int32)
         tbl = jnp.asarray(self._table_array(tables, self.n_lanes))
-        logits, self.pool = decode_step(self.params, t, p, tbl, self.pool,
-                                        context=self.context)
+        logits, self.pool, mass = decode_step(self.params, t, p, tbl,
+                                              self.pool,
+                                              context=self.context)
         self.decodes += 1
+        if mass is not None:
+            m = np.asarray(mass)
+            act = lanes if lanes is not None else range(len(m))
+            self._last_mass = {int(i): m[int(i)] for i in act}
         return np.asarray(jnp.argmax(logits, axis=-1)).astype(int).tolist()
 
     def _decode_compact(self, tokens, positions, tables, lanes) -> List[int]:
@@ -335,11 +356,16 @@ class PagedJaxExecutor:
                 raise ValueError(f"lane {i}: table of {len(tables[i])} "
                                  f"blocks exceeds bucketed width {mb}")
             tbl[j, :len(tables[i])] = tables[i]
-        logits, self.pool = compact_step(self.params, jnp.asarray(t),
-                                         jnp.asarray(p), jnp.asarray(tbl),
-                                         jnp.asarray(lane_arr), self.pool,
-                                         context=self.context)
+        logits, self.pool, mass = compact_step(self.params, jnp.asarray(t),
+                                               jnp.asarray(p),
+                                               jnp.asarray(tbl),
+                                               jnp.asarray(lane_arr),
+                                               self.pool,
+                                               context=self.context)
         self.decodes += 1
+        if mass is not None:
+            m = np.asarray(mass)
+            self._last_mass = {int(i): m[j] for j, i in enumerate(lanes)}
         out = np.asarray(jnp.argmax(logits, axis=-1))
         res = [0] * self.n_lanes
         for j, i in enumerate(lanes):
@@ -386,6 +412,12 @@ class PagedJaxExecutor:
             self.prefills += sum(bool(f) for f in final)
         out = np.asarray(jnp.argmax(logits, axis=-1))
         return [int(out[j]) for j in range(len(lanes))]
+
+    def block_masses(self) -> Dict[int, np.ndarray]:
+        """Per-lane attention mass over the lane's logical blocks from the
+        last decode tick ({} when mass tracking is off) — the retention
+        policy's ranking signal."""
+        return self._last_mass
 
     def compile_counts(self) -> dict:
         prefill_step, decode_step, reset_step, compact_step, chunk_step = \

@@ -405,11 +405,12 @@ def test_paged_steps_preserve_pool_shapes():
     decode = SS.make_paged_decode_step(cfg)
     tok1 = jax.ShapeDtypeStruct((lanes, 1), jnp.int32)
     pos = jax.ShapeDtypeStruct((lanes,), jnp.int32)
-    logits, new_pool = jax.eval_shape(
+    logits, new_pool, mass = jax.eval_shape(
         lambda p, t, po, tb, P: decode(p, t, po, tb, P, context=context),
         params, tok1, pos, tables, pool)
     assert jax.tree.map(lambda a: a.shape, new_pool) == shapes
     assert logits.shape == (lanes, cfg.padded_vocab_size)
+    assert mass is None                   # track_mass off by default
 
     ids = jax.ShapeDtypeStruct((lanes,), jnp.int32)
     reset = jax.eval_shape(SS.reset_pool_blocks, pool, ids)
@@ -460,12 +461,13 @@ def test_compact_decode_step_shapes():
     pos = jax.ShapeDtypeStruct((w,), jnp.int32)
     tables = jax.ShapeDtypeStruct((w, mb), jnp.int32)
     lane_ids = jax.ShapeDtypeStruct((w,), jnp.int32)
-    logits, new_pool = jax.eval_shape(
+    logits, new_pool, mass = jax.eval_shape(
         lambda p, t, po, tb, l, P: compact(p, t, po, tb, l, P,
                                            context=context),
         params, tok, pos, tables, lane_ids, pool)
     assert jax.tree.map(lambda a: a.shape, new_pool) == shapes
     assert logits.shape == (w, cfg.padded_vocab_size)
+    assert mass is None
 
 
 def test_chunk_prefill_step_appends_in_place():
