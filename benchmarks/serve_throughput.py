@@ -36,8 +36,22 @@ over generated tokens; 0.0 for ring, whose KV bytes are not block-priced)
 and a MEASURED token-agreement rate against exact `greedy_generate`
 (shared reference cache, one reference decode per unique prompt).
 Bending pins: int8 admits >= 1.8x the fp paged concurrency with measured
-agreement >= 0.99; exact cells stay at agreement 1.0. Results land in
-BENCH_serving.json at the repo root (schema_version 3).
+agreement >= 0.99; exact cells stay at agreement 1.0.
+
+The PR-9 PREFILL section makes the prefill transient a priced axis: a
+prefill-heavy burst (long prompts, short generations) is planned twice
+per HBM budget — once charging the tiled flash-prefill kernel's
+O(tokens x d) working set, once charging the dense jnp fallback's
+O(tokens x context) score matrix — and each plan is replayed through a
+token-budgeted chunked engine (Engine(prefill_budget=...)). Every cell
+carries prefill_tokens, prefill tokens/tick, and TTFT columns (mean +
+percentiles; schema v4 asserts the TTFT columns on every cell in the
+file). Prefill pins: at the TIGHTEST budget the tiled-kernel plan must
+admit >= 1.3x the dense-plan lanes with LOWER mean TTFT,
+token-identically; at the loose budget the two plans converge — the
+prefill term only binds where headroom is scarce, which is exactly the
+regime the paper targets. Results land in BENCH_serving.json at the
+repo root (schema_version 4).
 """
 from __future__ import annotations
 
@@ -56,7 +70,12 @@ OVERLOAD_LANE_CAP = 12               # overload section: admission is the
                                      # contended resource, so more lanes
 BEND_LANE_CAP = 24                   # bending section: pool bytes are the
                                      # contended resource, lanes must not cap
-SCHEMA_VERSION = 3
+PREFILL_LANE_CAP = 16                # prefill section: transient headroom is
+                                     # the contended resource
+PREFILL_BUDGET_TOKENS = 32           # prompt tokens/tick the budgeted engine
+                                     # grants (and the planner charges)
+PREFILL_CHUNK = 8                    # chunk_prefill: budget covers 4 chunks
+SCHEMA_VERSION = 4
 
 
 def main():
@@ -160,6 +179,8 @@ def main():
             "mean_decode_width": widths,
             "chunk_calls": report.chunk_calls,
             "prefill_calls": report.prefill_calls,
+            "prefill_tokens": report.prefill_tokens,
+            "prefill_tokens_per_tick": report.prefill_throughput(),
             "evictions": report.evictions,
             "block_drops": report.block_drops,
             "kv_quant": splan.execution.plan.kv_quant,
@@ -339,7 +360,7 @@ def main():
         emit(f"serve.overload.{mode}.{ARCH}", wall * 1e6,
              f"concurrent={report.max_concurrent};"
              f"ticks={report.ticks};evictions={report.evictions};"
-             f"lat_p95={report.latency_percentiles()['p95']:.0f}")
+             f"lat_p95={report.latency_percentiles().get('p95', 0.0):.0f}")
     osame = (otokens["worst"] == otokens["optimistic"]
              == otokens["optimistic_prefix"])
     oratio = (ocells["optimistic_prefix"]["max_concurrent"]
@@ -469,6 +490,137 @@ def main():
         raise SystemExit("bending: int8 measured agreement "
                          f"{bcells['int8']['agreement']:.4f} < 0.99")
 
+    # -- prefill-bound: the prefill transient as a priced capacity term -----
+    # Long prompts, short generations, burst arrivals: ticks are dominated
+    # by chunked prefill, so the transient the planner must hold back is
+    # the PREFILL tick's, not the decode tick's. Each budget is planned
+    # twice — charging the tiled flash-prefill kernel's O(tokens x d)
+    # working set vs the dense jnp fallback's O(tokens x context) score
+    # matrix — and replayed through a token-budgeted engine
+    # (prefill_budget=32 over chunk=8: four chunk grants per tick,
+    # fair-shared). The pin: at the tightest budget the tiled plan admits
+    # >= 1.3x the dense lanes with lower mean TTFT; at the loose budget
+    # the plans converge (the term stops binding) — token-identical
+    # everywhere, because the budget changes WHEN chunks land, never WHAT
+    # tokens emerge.
+    ptrace = synthetic_trace(12, vocab_size=cfg.vocab_size, seed=TRACE_SEED,
+                             prompt_lens=(32, 64), gen_lens=(4, 8),
+                             mean_interarrival=0.0)
+    pcontext = trace_context(ptrace)
+    pshape = ShapeConfig("bench_prefill", DECODE, pcontext, PREFILL_LANE_CAP)
+    plens = [len(r.prompt) + r.max_new - 1 for r in ptrace]
+    psim = MM.SimulatedMeasurer(mesh_shape)
+    pcls = PF.classify_workload(cfg, pshape, None, n_points=2, base_seq=64,
+                                measurer=psim)
+    prompt_total = sum(len(r.prompt) for r in ptrace)
+
+    def preq(n):
+        sh = dataclasses.replace(pshape, global_batch=n)
+        return PR.predict(cfg, sh, PR.MemoryPlan(), pcls,
+                          mesh_shape).capacity_bytes
+
+    def pspace():
+        return SP.serving_space(cfg, pshape, max_devices=1, data=(1,),
+                                model=(1,), kv_blocks=(4, 8))
+
+    prefill_rows = []
+    ptokens_all = {}
+    prefs = {}
+    for tag, pbudget in (("tight", (preq(2) + preq(3)) / 2),
+                         ("loose", (preq(3) + preq(4)) / 2)):
+        pcells = {}
+        for kern in ("tiled", "dense"):
+            _, splan = XP.plan_serving(cfg, pshape, n_devices=1,
+                                       hbm_budget=pbudget, cls=pcls,
+                                       space=pspace(), kv="paged",
+                                       seq_lens=plens,
+                                       prefill_budget=PREFILL_BUDGET_TOKENS,
+                                       prefill_kernel=kern,
+                                       chunk=PREFILL_CHUNK)
+            n_slots = splan.slots(cap=min(PREFILL_LANE_CAP, len(ptrace)))
+            n_blocks = splan.pool_blocks(n_slots, pcontext)
+
+            def pbuild():
+                ex = PagedJaxExecutor(params, cfg, n_lanes=n_slots,
+                                      n_blocks=n_blocks,
+                                      kv_block=splan.kv_block,
+                                      context=pcontext, chunk=PREFILL_CHUNK)
+                alloc = BlockAllocator(n_blocks, splan.kv_block)
+                eng = Engine(ex, n_slots, allocator=alloc,
+                             chunk_prefill=PREFILL_CHUNK,
+                             prefill_budget=splan.prefill_budget)
+                return ex, alloc, eng
+
+            _, _, warm = pbuild()
+            warm.run(ptrace)
+            ex, alloc, eng = pbuild()
+            t0 = time.perf_counter()
+            report = eng.run(ptrace)
+            wall = time.perf_counter() - t0
+            ptokens_all[(tag, kern)] = [list(c.tokens)
+                                        for c in report.completions]
+            if report.chunk_calls <= 0:
+                raise SystemExit(f"prefill/{tag}/{kern}: never chunked")
+            if report.prefill_tokens != prompt_total:
+                raise SystemExit(f"prefill/{tag}/{kern}: accounted "
+                                 f"{report.prefill_tokens} prefill tokens, "
+                                 f"trace holds {prompt_total}")
+            agree = token_agreement(params, cfg, ptrace, report,
+                                    context=pcontext, ref_cache=prefs)
+            if agree.agreement < 1.0:
+                raise SystemExit(f"prefill/{tag}/{kern}: exact engine "
+                                 "drifted from greedy_generate: "
+                                 f"{agree.describe()}")
+            pcells[kern] = cell_metrics(
+                splan, report, alloc, n_slots, wall,
+                e_blocks=e_blocks(splan.kv_block, plens),
+                block_bytes=PR.kv_block_bytes_per_device(
+                    cfg, pshape, splan.execution.plan, mesh_shape),
+                agreement=agree)
+            pcells[kern]["prefill_budget"] = splan.prefill_budget
+            pcells[kern]["prefill_kernel"] = kern
+            pcells[kern]["compiles"] = ex.compile_counts()
+            emit(f"serve.prefill.{tag}.{kern}.{ARCH}", wall * 1e6,
+                 f"lanes={n_slots};mean_ttft={report.mean_ttft():.1f};"
+                 f"prefill_tps={report.prefill_throughput():.2f};"
+                 f"chunk_calls={report.chunk_calls}")
+        pratio = (pcells["tiled"]["n_slots"]
+                  / max(pcells["dense"]["n_slots"], 1))
+        prefill_rows.append({
+            "budget": tag,
+            "budget_bytes": pbudget,
+            "lane_ratio": pratio,
+            "token_identical": bool(ptokens_all[(tag, "tiled")]
+                                    == ptokens_all[(tag, "dense")]),
+            **pcells,
+        })
+        emit(f"serve.prefill.frontier.{tag}.{ARCH}", 0.0,
+             f"tiled_vs_dense_lanes={pratio:.1f}x;"
+             f"tiled_ttft={pcells['tiled']['mean_ttft_ticks']:.1f};"
+             f"dense_ttft={pcells['dense']['mean_ttft_ticks']:.1f}")
+    if len({tuple(map(tuple, t)) for t in ptokens_all.values()}) != 1:
+        raise SystemExit("prefill: token streams diverged across plans")
+    ptight = prefill_rows[0]
+    if ptight["lane_ratio"] < 1.3:
+        raise SystemExit("prefill: at the tightest budget the tiled plan "
+                         f"admitted only {ptight['lane_ratio']:.2f}x the "
+                         "dense-plan lanes (pin: >= 1.3x)")
+    if (ptight["tiled"]["mean_ttft_ticks"]
+            >= ptight["dense"]["mean_ttft_ticks"]):
+        raise SystemExit("prefill: the tiled plan's extra lanes must lower "
+                         "mean TTFT at the tightest budget "
+                         f"({ptight['tiled']['mean_ttft_ticks']:.1f} vs "
+                         f"{ptight['dense']['mean_ttft_ticks']:.1f})")
+    prefill_bound = {
+        "requests": len(ptrace),
+        "context": pcontext,
+        "lane_cap": PREFILL_LANE_CAP,
+        "prefill_budget": PREFILL_BUDGET_TOKENS,
+        "chunk": PREFILL_CHUNK,
+        "tight_lane_ratio": ptight["lane_ratio"],
+        "rows": prefill_rows,
+    }
+
     out = {
         "schema_version": SCHEMA_VERSION,
         "arch": ARCH,
@@ -479,7 +631,25 @@ def main():
         "frontier": frontier,
         "overload": overload,
         "bending": bending,
+        "prefill_bound": prefill_bound,
     }
+    # schema v4: every benchmark cell carries the TTFT columns — walk the
+    # whole document and refuse to write a file that silently dropped them
+    def check_ttft(node, where):
+        if isinstance(node, dict):
+            if "capacity" in node:       # a cell_metrics cell
+                for col in ("mean_ttft_ticks", "ttft_ticks",
+                            "prefill_tokens", "prefill_tokens_per_tick"):
+                    if col not in node:
+                        raise SystemExit(f"schema v{SCHEMA_VERSION}: "
+                                         f"{where} lacks the {col} column")
+            for k, v in node.items():
+                check_ttft(v, f"{where}.{k}")
+        elif isinstance(node, list):
+            for i, v in enumerate(node):
+                check_ttft(v, f"{where}[{i}]")
+
+    check_ttft(out, "BENCH_serving")
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir,
                         "BENCH_serving.json")
     with open(os.path.normpath(path), "w") as f:

@@ -15,8 +15,8 @@ import dataclasses
 from typing import Optional, Tuple
 
 from repro import hw as HW
-from repro.configs.base import (DECODE, TRAIN, ModelConfig, ShapeConfig,
-                                block_param_count, param_count)
+from repro.configs.base import (DECODE, PREFILL, TRAIN, ModelConfig,
+                                ShapeConfig, block_param_count, param_count)
 from repro.core.classifier import Classification
 from repro.core.expansion import BYTES_ACT, embedded_input_bytes
 
@@ -308,6 +308,47 @@ def transient_bytes(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan,
     return pred
 
 
+PREFILL_KERNELS = ("dense", "tiled")
+
+
+def prefill_transient_bytes(cfg: ModelConfig, shape: ShapeConfig,
+                            plan: MemoryPlan, cls: Classification,
+                            mesh_shape: dict, *, prefill_tokens: int,
+                            reach: int, width: int = 1,
+                            kernel: str = "dense", mode: str = "paper",
+                            factors: Optional[dict] = None) -> float:
+    """Transient of one chunked-prefill tick appending `prefill_tokens`
+    prompt positions (summed over the `width` mid-prefill lanes the token
+    budget admits) that attend up to `reach` earlier positions.
+
+    Both kernels pay Eq. 6 on the chunk itself (a prefill-shaped input of
+    `prefill_tokens` positions). The DENSE jnp path additionally
+    materializes, per full-context attention layer step, the f32 score
+    matrix (q_heads × tokens × reach) plus a dequantized fp gather of each
+    lane's attended ring (reach × kv_heads × head_dim) — O(tokens × reach)
+    HBM the tiled flash kernel never allocates: it streams K/V block tiles
+    through VMEM with an online softmax, so its only extra state is
+    O(tokens × head_dim) accumulators, already inside the Eq. 6 term.
+    Layers run sequentially (lax.scan body), so one layer's score matrix
+    is live at the peak, not n_layers of them.
+    """
+    if kernel not in PREFILL_KERNELS:
+        raise ValueError(f"unknown prefill kernel {kernel!r}; known: "
+                         f"{PREFILL_KERNELS}")
+    _, dp, model = mesh_factors(mesh_shape)
+    sh_p = dataclasses.replace(shape, kind=PREFILL, global_batch=dp,
+                               seq_len=max(int(prefill_tokens), 1))
+    base = transient_bytes(cfg, sh_p, plan, cls, mesh_shape, mode, factors)
+    if kernel == "tiled":
+        return base
+    qh = -(-cfg.n_heads // model)
+    kvh = -(-cfg.n_kv_heads // model)
+    hd = cfg.resolved_head_dim
+    scores = qh * prefill_tokens * reach * 4.0
+    gathered = max(int(width), 1) * reach * kvh * hd * 4.0
+    return base + scores + gathered
+
+
 def predict(cfg: ModelConfig, shape: ShapeConfig, plan: MemoryPlan,
             cls: Classification, mesh_shape: dict, mode: str = "paper",
             hw: HW.HardwareSpec = HW.TPU_V5E,
@@ -372,6 +413,9 @@ def serving_block_capacity(cfg: ModelConfig, shape: ShapeConfig,
                            avg_context: Optional[int] = None,
                            decode_width: Optional[int] = None,
                            admission: str = "optimistic",
+                           prefill_tokens: int = 0,
+                           prefill_kernel: str = "dense",
+                           prefill_width: int = 1,
                            max_per_device: int = 1 << 22) -> int:
     """Eq. 11 run backwards over KV BLOCKS instead of whole-sequence slots.
 
@@ -406,6 +450,18 @@ def serving_block_capacity(cfg: ModelConfig, shape: ShapeConfig,
     regardless, the deadlock-free-by-construction sizing for
     `reservation="worst"` engines where a prediction miss has no eviction
     path to fall back on.
+
+    `prefill_tokens` > 0 makes the prefill transient a first-class term:
+    a chunked engine's ticks alternate decode steps with prefill chunks
+    of up to that many prompt tokens (the engine's token budget, spread
+    over `prefill_width` lanes), and the charged transient is the MAX of
+    the two — whichever tick shape peaks governs the headroom Eq. 11
+    must hold back. `prefill_kernel` picks the prefill cost model:
+    "dense" charges the O(tokens × context) score matrix the jnp SDPA
+    fallback materializes; "tiled" the fused flash-prefill kernel's
+    O(tokens × d) working set (see prefill_transient_bytes) — at tight
+    budgets the tiled term frees headroom that converts into more
+    admitted blocks/lanes.
     """
     if plan.kv_block_size < 1:
         raise ValueError("serving_block_capacity needs a paged plan "
@@ -444,6 +500,12 @@ def serving_block_capacity(cfg: ModelConfig, shape: ShapeConfig,
         w = min(max(int(decode_width), 1), lanes)
         sh_t = dataclasses.replace(sh_t, global_batch=w * dp)
     tra = transient_bytes(cfg, sh_t, plan, cls, mesh_shape, mode, factors)
+    if prefill_tokens > 0:
+        tra = max(tra, prefill_transient_bytes(
+            cfg, shape, plan, cls, mesh_shape,
+            prefill_tokens=int(prefill_tokens), reach=reach,
+            width=prefill_width, kernel=prefill_kernel,
+            mode=mode, factors=factors))
     per_block = kv_block_bytes_per_device(cfg, sh, plan, mesh_shape)
 
     def fits(nb: int) -> bool:

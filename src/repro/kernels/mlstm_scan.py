@@ -28,7 +28,7 @@ except Exception:  # pragma: no cover
 NEG_INF = -1e30
 
 
-def _kernel(q_ref, k_ref, v_ref, i_ref, f_ref,
+def _kernel(q_ref, k_ref, v_ref, i_ref, f_ref, c0_ref, n0_ref, m0_ref,
             o_ref, c_out_ref, n_out_ref, m_out_ref,
             c_ref, n_ref, m_ref, *,
             scale: float, nc: int, chunk: int):
@@ -36,9 +36,9 @@ def _kernel(q_ref, k_ref, v_ref, i_ref, f_ref,
 
     @pl.when(ci == 0)
     def _init():
-        c_ref[...] = jnp.zeros_like(c_ref)
-        n_ref[...] = jnp.zeros_like(n_ref)
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        c_ref[...] = c0_ref[0]
+        n_ref[...] = n0_ref[0][:, None]
+        m_ref[0, 0] = m0_ref[0, 0]
 
     q = q_ref[0].astype(jnp.float32) * scale      # [c, dk]
     k = k_ref[0].astype(jnp.float32)              # [c, dk]
@@ -100,10 +100,13 @@ def _kernel(q_ref, k_ref, v_ref, i_ref, f_ref,
 
 
 def mlstm_scan_fwd(q, k, v, i_gate, f_gate, *, chunk: int = 128,
-                   interpret: bool = False):
+                   interpret: bool = False, initial=None):
     """Chunked mLSTM over folded heads.
 
     q, k [bh, s, dk]; v [bh, s, dv]; i_gate/f_gate [bh, s].
+    `initial` optionally seeds the carried state: (C0 [bh, dk, dv],
+    n0 [bh, dk], m0 [bh, 1]) — a mid-prompt chunk continues a sequence
+    whose earlier chunks already ran (serving chunked prefill).
     Returns (out [bh, s, dv], (C [bh, dk, dv], n [bh, dk], m [bh, 1])).
     """
     bh, s, dk = q.shape
@@ -112,6 +115,12 @@ def mlstm_scan_fwd(q, k, v, i_gate, f_gate, *, chunk: int = 128,
     assert s % chunk == 0, (s, chunk)
     nc = s // chunk
     scale = 1.0 / np.sqrt(dk)
+    if initial is None:
+        C0 = jnp.zeros((bh, dk, dv), jnp.float32)
+        n0 = jnp.zeros((bh, dk), jnp.float32)
+        m0 = jnp.full((bh, 1), NEG_INF, jnp.float32)
+    else:
+        C0, n0, m0 = (t.astype(jnp.float32) for t in initial)
     kernel = functools.partial(_kernel, scale=scale, nc=nc, chunk=chunk)
     out, C, n, m = pl.pallas_call(
         kernel,
@@ -122,6 +131,9 @@ def mlstm_scan_fwd(q, k, v, i_gate, f_gate, *, chunk: int = 128,
             pl.BlockSpec((1, chunk, dv), lambda bi, ci: (bi, ci, 0)),
             pl.BlockSpec((1, chunk), lambda bi, ci: (bi, ci)),
             pl.BlockSpec((1, chunk), lambda bi, ci: (bi, ci)),
+            pl.BlockSpec((1, dk, dv), lambda bi, ci: (bi, 0, 0)),
+            pl.BlockSpec((1, dk), lambda bi, ci: (bi, 0)),
+            pl.BlockSpec((1, 1), lambda bi, ci: (bi, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, chunk, dv), lambda bi, ci: (bi, ci, 0)),
@@ -141,5 +153,5 @@ def mlstm_scan_fwd(q, k, v, i_gate, f_gate, *, chunk: int = 128,
             _SCRATCH((1, 1)),
         ],
         interpret=interpret,
-    )(q, k, v, i_gate, f_gate)
+    )(q, k, v, i_gate, f_gate, C0, n0, m0)
     return out, (C, n, m)

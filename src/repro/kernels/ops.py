@@ -29,6 +29,7 @@ from repro.kernels.flash_attention_bwd import flash_attention_bwd
 from repro.kernels.decode_attention import (decode_attention_fwd,
                                             paged_decode_attention_fwd)
 from repro.kernels.mlstm_scan import mlstm_scan_fwd
+from repro.kernels.prefill_attention import paged_prefill_attention_fwd
 
 NEG_INF = -1e30
 
@@ -160,12 +161,40 @@ def paged_decode_attention(q, k_pool, v_pool, pool_pos, block_tables,
         return_mass=return_mass, interpret=(backend == "interpret"))
 
 
+def paged_prefill_attention(q, k_new, v_new, k_pool, v_pool, pool_pos,
+                            block_tables, positions, *,
+                            window: Optional[int] = None,
+                            chunk: Optional[int] = None,
+                            backend: Optional[str] = None,
+                            k_scales=None, v_scales=None):
+    """Fused chunked prefill through a paged KV pool: write the chunk's
+    K/V into the pool via the block tables (quantize-on-write in-kernel
+    for int8/int4 pools — no fp intermediate in HBM) and flash-attend the
+    chunk's queries over history + chunk in O(chunk x block) tiles.
+
+    q [b,C,K,G,hd]; k_new/v_new [b,C,K,hd]; pools [n_blocks,block,K,hd]
+    (bf16, int8, or uint8-packed int4 with f32 `k_scales`/`v_scales`);
+    pool_pos [n_blocks,block]; block_tables [b,max_blocks]; positions
+    [b,C] (-1 = padding). Returns (o, pool_pos', k_pool', v_pool'[, ks',
+    vs']). Compiled Pallas on TPU; interpret-mode elsewhere — like paged
+    decode there is no jnp twin: the kernel IS the scatter + gather."""
+    backend = backend or default_backend()
+    if backend not in ("pallas", "interpret"):
+        backend = "interpret"
+    return paged_prefill_attention_fwd(
+        q, k_new, v_new, k_pool, v_pool, pool_pos, block_tables, positions,
+        window=window, chunk_mask=chunk, k_scales=k_scales,
+        v_scales=v_scales, interpret=(backend == "interpret"))
+
+
 # ---------------------------------------------------------------------------
 # mLSTM chunked scan
 # ---------------------------------------------------------------------------
 
-def _mlstm_chunked_jnp(q, k, v, i_gate, f_gate, chunk: int):
-    """Blocked jnp mirror of the Pallas kernel: lax.scan over chunks."""
+def _mlstm_chunked_jnp(q, k, v, i_gate, f_gate, chunk: int, initial=None):
+    """Blocked jnp mirror of the Pallas kernel: lax.scan over chunks.
+    `initial` = (C0 [bh,dk,dv], n0 [bh,dk], m0 [bh]) continues a sequence
+    mid-prompt (serving chunked prefill); None starts from scratch."""
     bh, s, dk = q.shape
     dv = v.shape[-1]
     chunk = min(chunk, s)
@@ -209,9 +238,12 @@ def _mlstm_chunked_jnp(q, k, v, i_gate, f_gate, chunk: int):
         n = decay[:, None] * n + (kc * a[..., None]).sum(axis=1)
         return (C, n, m_new), out
 
-    C0 = jnp.zeros((bh, dk, dv), f32)
-    n0 = jnp.zeros((bh, dk), f32)
-    m0 = jnp.full((bh,), NEG_INF, f32)
+    if initial is None:
+        C0 = jnp.zeros((bh, dk, dv), f32)
+        n0 = jnp.zeros((bh, dk), f32)
+        m0 = jnp.full((bh,), NEG_INF, f32)
+    else:
+        C0, n0, m0 = (t.astype(f32) for t in initial)
     (C, n, m), outs = jax.lax.scan(body, (C0, n0, m0),
                                    (qs, ks, vs, igs, fgs))
     out = jnp.moveaxis(outs, 0, 1).reshape(bh, s, dv).astype(v.dtype)
@@ -219,9 +251,12 @@ def _mlstm_chunked_jnp(q, k, v, i_gate, f_gate, chunk: int):
 
 
 def mlstm_scan(q, k, v, i_gate, f_gate, *, chunk: int = 128,
-               backend: Optional[str] = None):
+               backend: Optional[str] = None, initial=None):
     """q, k [b,s,h,dk]; v [b,s,h,dv]; gates [b,s,h].
 
+    `initial` optionally continues a sequence mid-prompt from carried
+    state (C [b,h,dk,dv], n [b,h,dk], m [b,h,1]) — serving chunked
+    prefill; None is a fresh sequence.
     Returns (out [b,s,h,dv], state (C [b,h,dk,dv], n [b,h,dk], m [b,h,1])).
     """
     backend = backend or default_backend()
@@ -229,15 +264,26 @@ def mlstm_scan(q, k, v, i_gate, f_gate, *, chunk: int = 128,
     dv = v.shape[-1]
     fold = lambda t: jnp.moveaxis(t, 2, 1).reshape((b * h, s) + t.shape[3:])
     if backend == "ref":
-        out, (C, n, m) = kref.mlstm_ref(q, k, v, i_gate, f_gate)
+        init = (None if initial is None
+                else (initial[0], initial[1], initial[2][..., 0]))
+        out, (C, n, m) = kref.mlstm_ref(q, k, v, i_gate, f_gate,
+                                        initial_state=init)
         return out, (C, n, m[..., None])
     qf, kf, vf = fold(q), fold(k), fold(v)
     igf, fgf = fold(i_gate), fold(f_gate)
+    init_f = (None if initial is None
+              else (initial[0].reshape(b * h, dk, dv),
+                    initial[1].reshape(b * h, dk),
+                    initial[2].reshape(b * h, 1)))
     if backend in ("pallas", "interpret"):
         out, (C, n, m) = mlstm_scan_fwd(qf, kf, vf, igf, fgf, chunk=chunk,
-                                        interpret=(backend == "interpret"))
+                                        interpret=(backend == "interpret"),
+                                        initial=init_f)
     else:
-        out, (C, n, m) = _mlstm_chunked_jnp(qf, kf, vf, igf, fgf, chunk)
+        init_j = None if init_f is None else (init_f[0], init_f[1],
+                                              init_f[2][:, 0])
+        out, (C, n, m) = _mlstm_chunked_jnp(qf, kf, vf, igf, fgf, chunk,
+                                            initial=init_j)
     out = jnp.moveaxis(out.reshape(b, h, s, dv), 1, 2)
     return out, (C.reshape(b, h, dk, dv), n.reshape(b, h, dk),
                  m.reshape(b, h, 1))

@@ -1,0 +1,300 @@
+"""Pallas TPU fused paged flash-prefill: write a prompt chunk into the
+paged KV pool THROUGH the block table and attend over history + chunk in
+O(chunk x block) tiles — online softmax, no [chunk, context] score matrix.
+
+This is the prefill sibling of decode_attention._paged_kernel. The jnp
+chunk-append path (models.attention._chunk_append) first scatters the chunk
+into the pool and then gathers every allocated block back into a contiguous
+fp "virtual ring" before running dense SDPA — an O(chunk x context) f32
+score matrix plus, for quantized pools, a dequantized fp copy of the whole
+context. Neither transient exists here: grid cell (b, j) DMAs exactly one
+physical block, merges the chunk rows that land in it (quantize-on-write:
+int8/int4 encoding happens in-kernel, so quantized pools never see an fp
+intermediate in HBM), and folds the block into the running (m, l, acc)
+softmax state. `core.predictor.prefill_transient_bytes` prices exactly this
+difference, which is how tiled-prefill plans buy more lanes at tight
+budgets.
+
+Grid: (batch, max_blocks) — logical blocks iterate sequentially (innermost)
+so the VMEM softmax state carries across blocks and a block's write-merge
+always precedes its own attend. Block tables ride in as scalar prefetch and
+the index maps chase the indirection, identical to paged decode; the pool
+leaves alias their outputs so unvisited physical blocks keep their contents.
+
+Within-chunk causality needs no ordering tricks: every chunk row landing in
+block j is merged before block j is attended, rows in later blocks have
+strictly larger positions, and the (cpos <= qpos) mask orders everything.
+Write hazards can't occur — a physical block is written by at most one lane
+(block tables partition the pool; shared prefix blocks are read-only by the
+engine's CoW rule), and unmapped table entries clamp to the scratch block
+where the merge is predicated off (identity write-back).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.decode_attention import _dequant_block, paged_quant_of
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+    _SCRATCH = lambda shape: pltpu.VMEM(shape, jnp.float32)
+except Exception:  # pragma: no cover
+    pltpu = None
+    _SCRATCH = lambda shape: pl.MemorySpace.ANY(shape, jnp.float32)
+
+NEG_INF = -1e30
+_QMAX = {"int8": 127.0, "int4": 7.0}
+
+
+def _quantize_rows(x, quant: str):
+    """In-kernel mirror of models.attention.quantize_kv: x [C, K, hd] f32 ->
+    (codes f32 [C, K, hd] int-valued, scale [C, K] f32). Per-row absmax so a
+    row's encoding never depends on its neighbours — merging a chunk row
+    into a half-full block can't requantize what's already there."""
+    qmax = _QMAX[quant]
+    scale = jnp.max(jnp.abs(x), axis=-1) / qmax
+    q = jnp.round(x / jnp.maximum(scale, 1e-30)[..., None])
+    return jnp.clip(q, -qmax, qmax), scale
+
+
+def _pack_int4(codes):
+    """codes [C, K, hd] f32 in [-8, 7] -> packed f32 [C, K, hd//2] holding
+    uint8 byte values (lo | hi << 4, offset +8) — same layout quantize_kv
+    stores. Kept in f32 so the one-hot merge matmul stays exact."""
+    c, k, hd = codes.shape
+    nib = codes + 8.0
+    pair = nib.reshape(c, k, hd // 2, 2)
+    return pair[..., 0] + pair[..., 1] * 16.0
+
+
+def _prefill_kernel(tbl_ref, qpos_ref, q_ref, kn_ref, vn_ref,
+                    pp_ref, kp_ref, vp_ref, *refs,
+                    scale: float, window: Optional[int],
+                    chunk_mask: Optional[int], nl: int, bs: int, quant: str):
+    # refs layout (mirrors decode_attention: flags append, never reorder):
+    #   [ks_ref, vs_ref]          when quant != "none" (scale stripes in)
+    #   o_ref, pp_out, kp_out, vp_out
+    #   [ks_out, vs_out]          when quant != "none"
+    #   m_ref, l_ref, acc_ref     (VMEM scratch)
+    i = 0
+    ks_ref = vs_ref = ks_out = vs_out = None
+    if quant != "none":
+        ks_ref, vs_ref = refs[0], refs[1]
+        i = 2
+    o_ref, pp_out, kp_out, vp_out = refs[i:i + 4]
+    i += 4
+    if quant != "none":
+        ks_out, vs_out = refs[i], refs[i + 1]
+        i += 2
+    m_ref, l_ref, acc_ref = refs[i:i + 3]
+    bi = pl.program_id(0)
+    li = pl.program_id(1)
+    f32 = jnp.float32
+
+    @pl.when(li == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mapped = tbl_ref[bi, li] >= 0
+    qpos = qpos_ref[0]                               # [C] int32
+    C = qpos.shape[0]
+    valid = qpos >= 0
+
+    # ---- phase A: merge the chunk rows that land in this logical block.
+    # sel [bs, C] one-hot: slot s takes chunk row c iff c's position maps
+    # to (block li, slot s). Positions are distinct, so each slot matches
+    # at most one row and the one-hot matmul is an exact gather.
+    overlap = valid & (qpos // bs == li) & mapped    # [C]
+    slot_of = jnp.where(overlap, qpos % bs, -1)
+    slots = jax.lax.broadcasted_iota(jnp.int32, (bs, C), 0)
+    sel = (slot_of[None, :] == slots)                # [bs, C]
+    written = sel.any(axis=1)                        # [bs]
+    self_ = sel.astype(f32)
+
+    kn = kn_ref[0].astype(f32)                       # [C, K, hd]
+    vn = vn_ref[0].astype(f32)
+    old_pos = pp_ref[0]                              # [bs]
+    new_pos = jnp.einsum("sc,c->s", self_, qpos.astype(f32)).astype(jnp.int32)
+    merged_pos = jnp.where(written, new_pos, old_pos)
+    pp_out[0] = merged_pos
+
+    if quant == "none":
+        # fp pool: cast through the pool dtype so the chunk's own keys are
+        # attended exactly as a later reader would see them
+        mk = jnp.einsum("sc,ckh->skh", self_, kn).astype(kp_ref.dtype)
+        mv = jnp.einsum("sc,ckh->skh", self_, vn).astype(vp_ref.dtype)
+        merged_kraw = jnp.where(written[:, None, None], mk, kp_ref[0])
+        merged_vraw = jnp.where(written[:, None, None], mv, vp_ref[0])
+        kp_out[0] = merged_kraw
+        vp_out[0] = merged_vraw
+        kblk = merged_kraw.astype(f32)
+        vblk = merged_vraw.astype(f32)
+    else:
+        # quantize-on-write: encode the chunk rows in-register, merge the
+        # integer codes + scale stripes into the block, and attend against
+        # the DEQUANTIZED merge — bit-for-bit what the pool now stores, and
+        # no fp copy of the pool ever reaches HBM.
+        kq, ksc = _quantize_rows(kn, quant)          # [C,K,hd], [C,K]
+        vq, vsc = _quantize_rows(vn, quant)
+        if quant == "int4":
+            kq, vq = _pack_int4(kq), _pack_int4(vq)  # [C,K,hd//2] uint8 vals
+        mk = jnp.einsum("sc,ckh->skh", self_, kq)
+        mv = jnp.einsum("sc,ckh->skh", self_, vq)
+        merged_kraw = jnp.where(
+            written[:, None, None],
+            mk.astype(jnp.int32).astype(kp_ref.dtype), kp_ref[0])
+        merged_vraw = jnp.where(
+            written[:, None, None],
+            mv.astype(jnp.int32).astype(vp_ref.dtype), vp_ref[0])
+        merged_ks = jnp.where(written[:, None],
+                              jnp.einsum("sc,ck->sk", self_, ksc), ks_ref[0])
+        merged_vs = jnp.where(written[:, None],
+                              jnp.einsum("sc,ck->sk", self_, vsc), vs_ref[0])
+        kp_out[0] = merged_kraw
+        vp_out[0] = merged_vraw
+        ks_out[0] = merged_ks
+        vs_out[0] = merged_vs
+        kblk = _dequant_block(merged_kraw, merged_ks, quant)
+        vblk = _dequant_block(merged_vraw, merged_vs, quant)
+
+    # ---- phase B: fold this (post-write) block into the online softmax
+    @pl.when(mapped)
+    def _merge():
+        qv = q_ref[0].astype(f32) * scale            # [C, K, G, hd]
+        s = jnp.einsum("ckgh,skh->ckgs", qv, kblk)   # [C, K, G, bs]
+        cpos = merged_pos
+        mask = (cpos[None, :] <= qpos[:, None]) & (cpos[None, :] >= 0) \
+            & valid[:, None]                         # [C, bs]
+        if window is not None:
+            mask &= cpos[None, :] > qpos[:, None] - window
+        if chunk_mask is not None:
+            mask &= (cpos[None, :] // chunk_mask) == \
+                (qpos[:, None] // chunk_mask)
+        s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+        m_prev = m_ref[...]                          # [C, K, G]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.where(mask[:, None, None, :],
+                      jnp.exp(s - m_new[..., None]), 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+            "ckgs,skh->ckgh", p, vblk)
+        m_ref[...] = m_new
+
+    @pl.when(li == nl - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[..., None]
+                    ).astype(o_ref.dtype)
+
+
+def paged_prefill_attention_fwd(q, k_new, v_new, k_pool, v_pool, pool_pos,
+                                block_tables, positions, *,
+                                window: Optional[int] = None,
+                                chunk_mask: Optional[int] = None,
+                                k_scales=None, v_scales=None,
+                                interpret: bool = False):
+    """Fused chunk write + causal flash attend through a paged KV pool.
+
+    q [b,C,K,G,hd]; k_new/v_new [b,C,K,hd] fp; pools [n_blocks,block,K,hd]
+    bf16 — or int8 / uint8 (packed int4) with per-row f32 scales
+    [n_blocks,block,K] in `k_scales`/`v_scales`; pool_pos [n_blocks,block];
+    block_tables [b,max_blocks] int32 (-1 = unassigned); positions [b,C]
+    int32 (-1 = padding rows of a short final chunk).
+
+    Returns (o [b,C,K,G,hd], pool_pos', k_pool', v_pool'[, k_scales',
+    v_scales']) — the pool leaves are updated IN PLACE via
+    input_output_aliases; physical blocks no table entry points at keep
+    their contents. As with paged decode, the grid's KV extent is the
+    table width, so trimmed tables shrink prefill work too."""
+    if pltpu is None:  # pragma: no cover
+        raise NotImplementedError("paged prefill needs pallas TPU grid specs")
+    b, C, K, G, hd = q.shape
+    m_blocks = block_tables.shape[1]
+    bs = pool_pos.shape[1]
+    quant = paged_quant_of(k_pool)
+    if quant != "none" and (k_scales is None or v_scales is None):
+        raise ValueError(f"{quant} pool needs k_scales/v_scales")
+    hd_s = k_pool.shape[-1]                  # stored width (hd // 2 for int4)
+    scale = 1.0 / np.sqrt(hd)
+    kernel = functools.partial(_prefill_kernel, scale=scale, window=window,
+                               chunk_mask=chunk_mask, nl=m_blocks, bs=bs,
+                               quant=quant)
+
+    def physical(bi, li, tbl):
+        return jnp.maximum(tbl[bi, li], 0)
+
+    in_specs = [
+        pl.BlockSpec((1, C), lambda bi, li, tbl: (bi, 0)),
+        pl.BlockSpec((1, C, K, G, hd), lambda bi, li, tbl: (bi, 0, 0, 0, 0)),
+        pl.BlockSpec((1, C, K, hd), lambda bi, li, tbl: (bi, 0, 0, 0)),
+        pl.BlockSpec((1, C, K, hd), lambda bi, li, tbl: (bi, 0, 0, 0)),
+        pl.BlockSpec((1, bs), lambda bi, li, tbl: (physical(bi, li, tbl), 0)),
+        pl.BlockSpec((1, bs, K, hd_s),
+                     lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0, 0)),
+        pl.BlockSpec((1, bs, K, hd_s),
+                     lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0, 0)),
+    ]
+    args = [block_tables, positions, q, k_new, v_new, pool_pos,
+            k_pool, v_pool]
+    if quant != "none":
+        in_specs += [
+            pl.BlockSpec((1, bs, K),
+                         lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0)),
+            pl.BlockSpec((1, bs, K),
+                         lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0)),
+        ]
+        args += [k_scales, v_scales]
+    out_specs = [
+        pl.BlockSpec((1, C, K, G, hd), lambda bi, li, tbl: (bi, 0, 0, 0, 0)),
+        pl.BlockSpec((1, bs), lambda bi, li, tbl: (physical(bi, li, tbl), 0)),
+        pl.BlockSpec((1, bs, K, hd_s),
+                     lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0, 0)),
+        pl.BlockSpec((1, bs, K, hd_s),
+                     lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, C, K, G, hd), q.dtype),
+        jax.ShapeDtypeStruct(pool_pos.shape, pool_pos.dtype),
+        jax.ShapeDtypeStruct(k_pool.shape, k_pool.dtype),
+        jax.ShapeDtypeStruct(v_pool.shape, v_pool.dtype),
+    ]
+    # alias indices COUNT the scalar-prefetch operand: block_tables is
+    # input 0, so pool_pos / k_pool / v_pool sit at 5 / 6 / 7
+    aliases = {5: 1, 6: 2, 7: 3}
+    if quant != "none":
+        out_specs += [
+            pl.BlockSpec((1, bs, K),
+                         lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0)),
+            pl.BlockSpec((1, bs, K),
+                         lambda bi, li, tbl: (physical(bi, li, tbl), 0, 0)),
+        ]
+        out_shape += [jax.ShapeDtypeStruct(k_scales.shape, k_scales.dtype),
+                      jax.ShapeDtypeStruct(v_scales.shape, v_scales.dtype)]
+        aliases.update({8: 4, 9: 5})
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, m_blocks),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[
+            _SCRATCH((C, K, G)),
+            _SCRATCH((C, K, G)),
+            _SCRATCH((C, K, G, hd)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        input_output_aliases=aliases,
+        interpret=interpret,
+    )(*args)

@@ -85,6 +85,21 @@ def main(argv=None):
                          "chunks of this many positions, interleaved with "
                          "decode ticks (rounded up to a kv-block multiple; "
                          "0 = whole-prompt prefill at admission)")
+    ap.add_argument("--prefill-budget", type=int, default=0,
+                    help="paged only: cap on prompt tokens prefilled per "
+                         "tick across all mid-prefill lanes, fair-shared "
+                         "over SLO classes (needs --chunk-prefill; 0 = "
+                         "every pending lane advances one chunk per tick). "
+                         "The planner charges the budget — not the whole "
+                         "prompt — as the prefill transient, so a tight "
+                         "budget converts transient headroom into lanes")
+    ap.add_argument("--prefill-kernel", default="tiled",
+                    choices=["tiled", "dense"],
+                    help="prefill transient model for planning: 'tiled' = "
+                         "the fused flash-prefill kernel (O(chunk x block) "
+                         "tiles, no score matrix or dequantized fp context "
+                         "in HBM); 'dense' = the jnp oracle path that "
+                         "materializes O(chunk x context) scores")
     ap.add_argument("--admission", default="worst",
                     choices=["worst", "optimistic"],
                     help="paged only: block reservation discipline. "
@@ -155,6 +170,13 @@ def main(argv=None):
     if args.prefix_share and not args.prefix_len:
         ap.error("--prefix-share needs --prefix-len > 0 (there is no "
                  "shared prefix to share otherwise)")
+    if args.prefill_budget < 0:
+        ap.error("--prefill-budget must be >= 0")
+    if args.prefill_budget and not (args.kv == "paged"
+                                    and args.chunk_prefill):
+        ap.error("--prefill-budget needs --kv paged and --chunk-prefill "
+                 "(the budget schedules prompt chunks over block tables; "
+                 "whole-prompt prefill is all-or-nothing)")
     if args.kv != "paged" and (args.kv_quant != "none" or args.kv_retain):
         ap.error("--kv-quant/--kv-retain need --kv paged (quantized "
                  "codes and retention both live on the block pool)")
@@ -206,7 +228,10 @@ def main(argv=None):
                                  if args.admission == "optimistic" else 0.0),
                         kv_quants=(args.kv_quant,),
                         kv_retains=(args.kv_retain,),
-                        min_agreement=args.min_agreement)
+                        min_agreement=args.min_agreement,
+                        prefill_budget=args.prefill_budget,
+                        prefill_kernel=args.prefill_kernel,
+                        chunk=args.chunk_prefill)
     try:
         if args.mesh == "auto":
             measurer = None
@@ -281,6 +306,7 @@ def main(argv=None):
                 allocator = None
             engine = Engine(executor, n_slots, policy=policy,
                             allocator=allocator, chunk_prefill=chunk,
+                            prefill_budget=args.prefill_budget,
                             prefix_share=args.prefix_share,
                             stats=(length_stats(trace)
                                    if args.admission == "optimistic"
@@ -295,11 +321,12 @@ def main(argv=None):
             tp = report.ttft_percentiles()
             print(report.describe() + f" wall={dt:.2f}s "
                   f"compiles={executor.compile_counts()}")
-            print(f"  latency p50/p95/p99={lp['p50']:.0f}/{lp['p95']:.0f}/"
-                  f"{lp['p99']:.0f} ticks "
-                  f"ttft p50/p95/p99={tp['p50']:.0f}/{tp['p95']:.0f}/"
-                  f"{tp['p99']:.0f} mean_ttft={report.mean_ttft():.1f} "
-                  f"evictions={report.evictions}")
+            if lp and tp:  # both empty when nothing completed
+                print(f"  latency p50/p95/p99={lp['p50']:.0f}/"
+                      f"{lp['p95']:.0f}/{lp['p99']:.0f} ticks "
+                      f"ttft p50/p95/p99={tp['p50']:.0f}/{tp['p95']:.0f}/"
+                      f"{tp['p99']:.0f} mean_ttft={report.mean_ttft():.1f} "
+                      f"evictions={report.evictions}")
             if args.measure_agreement:
                 from repro.serving.quality import token_agreement
                 agree = token_agreement(params, cfg, trace, report,

@@ -440,21 +440,39 @@ def _paged_write_chunk(cache, block_tables, k, v, positions):
     return out
 
 
-def _chunk_append(q, k, v, cache, blk: BlockSpec, positions, block_tables):
+def _chunk_append(q, k, v, cache, blk: BlockSpec, positions, block_tables,
+                  settings: AttnSettings = AttnSettings()):
     """Chunked prefill: append a prompt chunk to an EXISTING cache and
     attend over history + chunk — exactly the chunk's slice of a full
     prefill, so interleaving chunks with decode ticks changes scheduling
-    but never tokens. Paged layers scatter through the block table first
-    and attend over the gathered virtual ring (the chunk's own keys
-    included, causal mask ordering them); per-lane rings attend over
-    concat(ring, chunk) and then keep only the last cache_len positions
-    (slot = pos % L stays collision-free because the kept span is at most
-    L consecutive positions)."""
+    but never tokens. Paged layers go through the fused flash-prefill
+    kernel when settings.backend == "pallas" (write + attend in one pass,
+    O(chunk x block) tiles, quantize-on-write in-kernel) and otherwise
+    scatter through the block table and attend over the gathered virtual
+    ring (the jnp oracle: O(chunk x context) scores plus, for quantized
+    pools, a dequantized fp copy of the context — the transient the tiled
+    kernel exists to avoid); per-lane rings attend over concat(ring,
+    chunk) and then keep only the last cache_len positions (slot = pos % L
+    stays collision-free because the kept span is at most L consecutive
+    positions)."""
     b, C = positions.shape
     valid = positions >= 0
     if is_paged_cache(cache):
         assert block_tables is not None, \
             "paged cache needs block_tables for chunked prefill"
+        if settings.backend == "pallas":
+            from repro.kernels import ops as kops
+            quant = paged_quant_kind(cache)
+            out = kops.paged_prefill_attention(
+                q, k, v, cache["kb"], cache["vb"], cache["pos"],
+                block_tables, positions, window=blk.window, chunk=blk.chunk,
+                k_scales=(cache["ks"] if quant != "none" else None),
+                v_scales=(cache["vs"] if quant != "none" else None))
+            o, ppos, kb, vb = out[:4]
+            new_cache = {"kb": kb, "vb": vb, "pos": ppos}
+            if quant != "none":
+                new_cache["ks"], new_cache["vs"] = out[4], out[5]
+            return o, new_cache
         new_cache = _paged_write_chunk(cache, block_tables, k, v, positions)
         virt = _paged_gather(new_cache, block_tables)
         o = _sdpa(q, virt["k"], virt["v"],
@@ -591,7 +609,7 @@ def attn_apply(params, cfg: ModelConfig, blk: BlockSpec, x, positions,
         # chunked prefill: a real cache on the sequence path means "append
         # this chunk to what the earlier chunks already wrote"
         o, new_cache = _chunk_append(q, k, v, cache, blk, positions,
-                                     block_tables)
+                                     block_tables, settings)
     else:
         kpos = positions
         if use_repeat:

@@ -130,8 +130,14 @@ def conv1d_init(width: int, channels: int, dtype) -> jax.Array:
 
 
 def causal_conv1d(w: jax.Array, x: jax.Array,
-                  state: Optional[jax.Array] = None):
+                  state: Optional[jax.Array] = None,
+                  valid_len: Optional[jax.Array] = None):
     """Depthwise causal conv. x: [b, s, c]; state: [b, width-1, c] history.
+
+    `valid_len` [b] marks rows whose trailing positions are padding
+    (serving chunked prefill): the carried history must then end at the
+    last VALID input, not at the padded tail. valid_len == s reproduces
+    the default carry; valid_len == 0 passes `state` through unchanged.
 
     Returns (y [b, s, c], new_state [b, width-1, c]).
     """
@@ -143,7 +149,16 @@ def causal_conv1d(w: jax.Array, x: jax.Array,
     for i in range(width):  # width is tiny (4): unrolled taps
         y = y + w[i].astype(x.dtype) * jax.lax.dynamic_slice_in_dim(
             xp, i, x.shape[1], axis=1)
-    new_state = xp[:, -(width - 1):, :] if width > 1 else state
+    if width <= 1:
+        new_state = state
+    elif valid_len is None:
+        new_state = xp[:, -(width - 1):, :]
+    else:
+        # window of width-1 inputs ending at the last valid position:
+        # xp rows are [state (width-1) | x (s)], so that window starts
+        # at offset valid_len
+        idx = valid_len[:, None] + jnp.arange(width - 1, dtype=jnp.int32)
+        new_state = jnp.take_along_axis(xp, idx[..., None], axis=1)
     return y, new_state
 
 

@@ -129,15 +129,27 @@ def block_apply(params, cfg: ModelConfig, blk: BlockSpec, x, positions,
         if blk.mixer == MLSTM:
             delta, new_cache = recurrent.mlstm_apply(
                 params["mixer"], cfg, x, state=cache, decode=decode,
-                backend=settings.mlstm_backend, chunk=settings.mlstm_chunk)
+                backend=settings.mlstm_backend, chunk=settings.mlstm_chunk,
+                positions=positions)
         elif blk.mixer == SLSTM:
             delta, new_cache = recurrent.slstm_apply(
-                params["mixer"], cfg, x, state=cache, decode=decode)
+                params["mixer"], cfg, x, state=cache, decode=decode,
+                positions=positions)
         elif blk.mixer == RGLRU:
             delta, new_cache = recurrent.rglru_apply(
-                params["mixer"], cfg, x, state=cache, decode=decode)
+                params["mixer"], cfg, x, state=cache, decode=decode,
+                positions=positions)
         else:
             raise ValueError(blk.mixer)
+        if decode and cache is not None:
+            # full-width serving ticks include INERT rows (position -1:
+            # empty lanes, lanes mid-chunk-prefill) — their pad-token
+            # step must not advance the lane's recurrent state
+            live = positions[:, 0] >= 0
+            new_cache = jax.tree.map(
+                lambda nw, old: jnp.where(
+                    live.reshape((-1,) + (1,) * (nw.ndim - 1)), nw, old),
+                new_cache, cache)
     x = x + delta
     if blk.mlp == MLP_DENSE:
         x = x + mlp_apply(params["mlp"], cfg, x,

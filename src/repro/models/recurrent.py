@@ -78,20 +78,38 @@ def mlstm_state_init(cfg: ModelConfig, batch: int, abstract: bool = False):
 
 
 def mlstm_apply(params, cfg: ModelConfig, x, state=None, decode: bool = False,
-                backend: Optional[str] = None, chunk: int = 128):
-    """x [b, s, d] -> (y, new_state or None)."""
+                backend: Optional[str] = None, chunk: int = 128,
+                positions=None):
+    """x [b, s, d] -> (y, new_state or None).
+
+    `positions` [b, s] (serving chunked prefill) marks -1 entries as
+    trailing padding — padded steps are made state-transparent (forget
+    gate pinned open, input gate shut, conv carry ends at the last valid
+    input) — and rows whose chunk starts at position 0 restart the scan
+    from a fresh state instead of the lane's previous occupant's.
+    """
     from repro.kernels import ops as kops
     b, s, d = x.shape
     inner = int(cfg.mlstm_proj_factor * d)
     h_heads = cfg.n_heads
     hd = inner // h_heads
+    chunked = state is not None and positions is not None and not decode
+    if chunked:
+        valid = positions >= 0                          # [b, s]
+        fresh = positions[:, 0] == 0                    # [b]
 
     hin = layers.rmsnorm(params["norm"], x, cfg.norm_eps)
     up = layers.matmul(hin, params["w_up"])
     x_m, z = jnp.split(up, 2, axis=-1)
     x_m = shard(x_m, "batch", "seq", "inner")
     conv_state = state["conv"] if state is not None else None
-    xc, new_conv = layers.causal_conv1d(params["conv"], x_m, conv_state)
+    if chunked:
+        conv_state = jnp.where(fresh[:, None, None],
+                               jnp.zeros_like(conv_state), conv_state)
+        xc, new_conv = layers.causal_conv1d(params["conv"], x_m, conv_state,
+                                            valid_len=valid.sum(axis=1))
+    else:
+        xc, new_conv = layers.causal_conv1d(params["conv"], x_m, conv_state)
     xc = jax.nn.silu(xc.astype(jnp.float32)).astype(x.dtype)
 
     q = _blockdiag(xc, params["wq"]).reshape(b, s, h_heads, hd)
@@ -101,6 +119,13 @@ def mlstm_apply(params, cfg: ModelConfig, x, state=None, decode: bool = False,
               + params["b_i"])
     f_gate = (jnp.einsum("bsi,ih->bsh", xc.astype(jnp.float32), params["w_f"])
               + params["b_f"])
+    if chunked:
+        # padded steps: log_sigmoid(1e4) == 0.0 exactly in f32 (state
+        # decays by exp(0) = 1) and the -1e30 input gate contributes
+        # exp(-1e30 - m) == 0 — the scan passes state straight through
+        v3 = valid[..., None]
+        i_gate = jnp.where(v3, i_gate, kops.NEG_INF)
+        f_gate = jnp.where(v3, f_gate, 1e4)
 
     if decode:
         assert state is not None and s == 1
@@ -109,6 +134,21 @@ def mlstm_apply(params, cfg: ModelConfig, x, state=None, decode: bool = False,
             (state["C"], state["n"], state["m"]))
         out = out[:, None]
         new_state = {"C": C, "n": n, "m": m, "conv": new_conv}
+    elif state is not None:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+        if chunked:
+            C0 = jnp.where(fresh[:, None, None, None],
+                           jnp.zeros_like(C0), C0)
+            n0 = jnp.where(fresh[:, None, None], jnp.zeros_like(n0), n0)
+            # a fresh scan's stabilizer starts at -inf, not 0 — anything
+            # else shifts the denominator clamp exp(-m_t) on chunk 1
+            m0 = jnp.where(fresh[:, None, None], kops.NEG_INF, m0)
+        scan_fn = jax.checkpoint(
+            lambda q_, k_, v_, i_, f_, C_, n_, m_: kops.mlstm_scan(
+                q_, k_, v_, i_, f_, chunk=chunk, backend=backend,
+                initial=(C_, n_, m_)))
+        out, (C, n, m) = scan_fn(q, k, v, i_gate, f_gate, C0, n0, m0)
+        new_state = {"C": C, "n": n, "m": m, "conv": new_conv}
     else:
         # checkpoint: backward recomputes the chunk scan instead of stashing
         # every chunk's (dk×dv) carry for every layer simultaneously
@@ -116,8 +156,7 @@ def mlstm_apply(params, cfg: ModelConfig, x, state=None, decode: bool = False,
         scan_fn = jax.checkpoint(
             lambda *a: kops.mlstm_scan(*a, chunk=chunk, backend=backend))
         out, (C, n, m) = scan_fn(q, k, v, i_gate, f_gate)
-        new_state = ({"C": C, "n": n, "m": m, "conv": new_conv}
-                     if state is not None else None)
+        new_state = None
 
     out = out.reshape(b, s, inner)
     out = layers.groupnorm_heads(params["gnorm"], out, h_heads, cfg.norm_eps)
@@ -186,12 +225,24 @@ def _slstm_step(params, cfg, xw_t, state):
     return {"c": c, "n": n, "h": h_new, "m": m_new}
 
 
-def slstm_apply(params, cfg: ModelConfig, x, state=None, decode: bool = False):
+def slstm_apply(params, cfg: ModelConfig, x, state=None, decode: bool = False,
+                positions=None):
     b, s, d = x.shape
     hin = layers.rmsnorm(params["norm"], x, cfg.norm_eps)
     xw = layers.matmul(hin, params["w"])                      # [b, s, 4d]
     st = state if state is not None else slstm_state_init(cfg, b)
     core = {k: st[k] for k in ("c", "n", "h", "m")}
+    chunked = state is not None and positions is not None and not decode
+    if chunked:
+        # serving chunked prefill: first chunks (position 0) restart from
+        # zero state; -1 positions are trailing padding and must leave the
+        # carried state untouched (per-step select below)
+        fresh = (positions[:, 0] == 0)[:, None]
+        core = {k: jnp.where(fresh, jnp.zeros_like(v_), v_)
+                for k, v_ in core.items()}
+        valid = positions >= 0
+    else:
+        valid = jnp.ones((b, s), jnp.bool_)
     if decode:
         assert s == 1
         core = _slstm_step(params, cfg, xw[:, 0], core)
@@ -199,12 +250,16 @@ def slstm_apply(params, cfg: ModelConfig, x, state=None, decode: bool = False):
         new_state = core
     else:
         @jax.checkpoint  # recompute the time scan in backward (one layer
-        def _scan(core, xw_):  # of per-step carries live at a time)
-            def step(carry, xw_t):
-                carry = _slstm_step(params, cfg, xw_t, carry)
-                return carry, carry["h"]
-            return jax.lax.scan(step, core, xw_)
-        core, hs = _scan(core, jnp.moveaxis(xw, 1, 0))
+        def _scan(core, xw_, valid_):  # of per-step carries live at a time)
+            def step(carry, xs):
+                xw_t, v_t = xs
+                nxt = _slstm_step(params, cfg, xw_t, carry)
+                nxt = {k: jnp.where(v_t[:, None], nxt[k], carry[k])
+                       for k in nxt}
+                return nxt, nxt["h"]
+            return jax.lax.scan(step, core, (xw_, valid_))
+        core, hs = _scan(core, jnp.moveaxis(xw, 1, 0),
+                         jnp.moveaxis(valid, 1, 0))
         hs = jnp.moveaxis(hs, 0, 1)
         new_state = core if state is not None else None
     y = x + hs.astype(x.dtype)                                 # residual core
@@ -252,28 +307,50 @@ def rglru_state_init(cfg: ModelConfig, batch: int, abstract: bool = False):
     }
 
 
-def rglru_apply(params, cfg: ModelConfig, x, state=None, decode: bool = False):
-    """Griffin recurrent block: gelu branch ⊙ RG-LRU branch -> out proj."""
+def rglru_apply(params, cfg: ModelConfig, x, state=None, decode: bool = False,
+                positions=None):
+    """Griffin recurrent block: gelu branch ⊙ RG-LRU branch -> out proj.
+
+    `positions` [b, s] (serving chunked prefill): -1 padding steps become
+    identity elements of the scan (a = 1, B = 0) and rows starting at
+    position 0 restart from h = 0 / empty conv history.
+    """
     b, s, d = x.shape
     wdt = params["w_x"].shape[1]
+    chunked = state is not None and positions is not None and not decode
+    if chunked:
+        valid = positions >= 0                               # [b, s]
+        fresh = positions[:, 0] == 0                         # [b]
     hin = layers.rmsnorm(params["norm"], x, cfg.norm_eps)
     branch_y = jax.nn.gelu(layers.matmul(hin, params["w_y"])
                            .astype(jnp.float32)).astype(x.dtype)
     bx = layers.matmul(hin, params["w_x"])
     bx = shard(bx, "batch", "seq", "lru")
     conv_state = state["conv"] if state is not None else None
-    xc, new_conv = layers.causal_conv1d(params["conv"], bx, conv_state)
+    if chunked:
+        conv_state = jnp.where(fresh[:, None, None],
+                               jnp.zeros_like(conv_state), conv_state)
+        xc, new_conv = layers.causal_conv1d(params["conv"], bx, conv_state,
+                                            valid_len=valid.sum(axis=1))
+    else:
+        xc, new_conv = layers.causal_conv1d(params["conv"], bx, conv_state)
 
     xf = xc.astype(jnp.float32)
     r_pre = params["gate_r"] * xf
     i_pre = params["gate_i"] * xf
     log_a = (-8.0 * jax.nn.softplus(params["a_param"])
              * jax.nn.sigmoid(r_pre))                        # [b, s, w] < 0
+    if chunked:
+        log_a = jnp.where(valid[..., None], log_a, 0.0)
     a = jnp.exp(log_a)
     beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
     gated = beta * jax.nn.sigmoid(i_pre) * xf                # B term
+    if chunked:
+        gated = jnp.where(valid[..., None], gated, 0.0)
 
     h0 = state["h"] if state is not None else jnp.zeros((b, wdt), jnp.float32)
+    if chunked:
+        h0 = jnp.where(fresh[:, None], jnp.zeros_like(h0), h0)
     if decode:
         assert s == 1
         h = a[:, 0] * h0 + gated[:, 0]

@@ -204,6 +204,12 @@ class ServingPlan:
     agreement: float = 1.0           # PRIOR token-agreement estimate of the
                                      # picked bend (1.0 = exact; measured
                                      # agreement comes from serving.quality)
+    prefill_budget: int = 0          # prompt tokens per tick the inversion
+                                     # charged the prefill transient for
+                                     # (0 = prefill not modeled)
+    prefill_kernel: str = "dense"    # prefill cost model the inversion
+                                     # assumed: dense SDPA score matrix vs
+                                     # tiled flash kernel (O(chunk·d))
 
     def slots(self, cap: Optional[int] = None) -> int:
         """Engine slot-pool size (ring) / decode-lane count (paged): the
@@ -226,6 +232,9 @@ class ServingPlan:
                  if self.kv_block else "")
         if self.admission != "optimistic":
             paged += f" admission={self.admission}"
+        if self.prefill_budget:
+            paged += (f" prefill_budget={self.prefill_budget}"
+                      f" prefill_kernel={self.prefill_kernel}")
         p = self.execution.plan
         if p.kv_quant != "none":
             paged += f" kv_quant={p.kv_quant}"
@@ -279,7 +288,8 @@ def _bucket_cover(n: int, cap: int) -> int:
 def _paged_concurrency(cfg, shape, cand, cls, budget, mode, hw, factors,
                        seq_lens, max_lanes: int = 1 << 14,
                        compact: bool = False, admission: str = "optimistic",
-                       sigma_k: float = 0.0):
+                       sigma_k: float = 0.0, prefill_tokens: int = 0,
+                       prefill_kernel: str = "dense", chunk: int = 0):
     """Expected admitted concurrency for one paged serving candidate: the
     largest per-device lane count whose block pool still covers the
     EXPECTED per-sequence demand (blocks(lanes) >= lanes * E[blocks/seq]).
@@ -298,9 +308,16 @@ def _paged_concurrency(cfg, shape, cand, cls, budget, mode, hw, factors,
     deviations (per-sequence block std scaled by sqrt(lanes) — independent
     lengths concentrate), trusting the engine's eviction path on a miss.
     sigma_k=0 is the bare-expected sizing every pre-existing call pinned.
+
+    `prefill_tokens` > 0 also charges each tick's prefill transient (a
+    chunked engine under that token budget, spread over ceil(tokens /
+    chunk) lanes) at the `prefill_kernel` cost model — the decode-or-
+    prefill max governs the headroom (predictor.prefill_transient_bytes).
     Returns (global_concurrency, global_blocks)."""
     from repro.core import predictor as PR
     _, dp, _ = PR.mesh_factors(cand.mesh_shape)
+    pwidth = (-(-int(prefill_tokens) // int(chunk))
+              if prefill_tokens and chunk else 1)
     block = cand.plan.kv_block_size
     lens = [max(int(s), 1) for s in seq_lens] or [1]
     avg_context = -(-sum(lens) // len(lens))
@@ -332,7 +349,9 @@ def _paged_concurrency(cfg, shape, cand, cls, budget, mode, hw, factors,
                 cfg, shape, cand.plan, cls, cand.mesh_shape, lanes=lanes,
                 mode=mode, hw=hw, hbm_budget=budget, factors=factors,
                 avg_context=avg_context, decode_width=width,
-                admission=admission) // dp
+                admission=admission, prefill_tokens=int(prefill_tokens),
+                prefill_kernel=prefill_kernel,
+                prefill_width=pwidth) // dp
         return _blocks_memo[lanes]
 
     def feasible(lanes: int) -> bool:
@@ -371,7 +390,10 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
                  sigma_k: float = 0.0,
                  kv_quants: Sequence[str] = ("none",),
                  kv_retains: Sequence[int] = (0,),
-                 min_agreement: float = 0.0):
+                 min_agreement: float = 0.0,
+                 prefill_budget: int = 0,
+                 prefill_budgets: Sequence[int] = (),
+                 prefill_kernel: str = "dense", chunk: int = 0):
     """The serving-engine planning entry: walk the serving lattice
     (kv_shard x kv_block_size x data x model, pipe pinned —
     space.serving_space) and pick the candidate that maximizes admitted
@@ -400,7 +422,14 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
     bend — candidates whose `predicted_agreement` prior falls below it are
     dropped before scoring, so the planner walks the quality/capacity
     frontier instead of always taking the cheapest bytes. Exact candidates
-    (kv_quant="none", kv_retain=0) always pass the gate. Returns
+    (kv_quant="none", kv_retain=0) always pass the gate.
+
+    `prefill_budget` > 0 (paged only; needs `chunk`, the engine's
+    chunk_prefill) makes the prefill transient a scored term: each tick
+    is charged max(decode, prefill-at-budget) headroom under the
+    `prefill_kernel` cost model ("dense" SDPA vs "tiled" flash-prefill).
+    `prefill_budgets` makes the budget a searched knob (candidate extras
+    override the call-level value, like `admission`). Returns
     (Classification, ServingPlan)."""
     from repro.core import predictor as PR   # lazy, like profiler below
     from repro.core import profiler as PF
@@ -408,6 +437,13 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
         raise ValueError(f"plan_serving: unknown kv mode {kv!r}")
     if admission not in ("optimistic", "worst"):
         raise ValueError(f"plan_serving: unknown admission {admission!r}")
+    if prefill_kernel not in PR.PREFILL_KERNELS:
+        raise ValueError(f"plan_serving: unknown prefill_kernel "
+                         f"{prefill_kernel!r}; known: {PR.PREFILL_KERNELS}")
+    if (prefill_budget or prefill_budgets) and not chunk:
+        raise ValueError("plan_serving: prefill_budget needs chunk > 0 "
+                         "(the budget schedules chunk_prefill-sized "
+                         "pieces; whole-prompt prefill is all-or-nothing)")
     if measurer is None:
         measurer = MM.SimulatedMeasurer({"data": n_devices}, cache=cache)
     if cls is None:
@@ -420,7 +456,9 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
             data=_axis_values(n_devices), model=_axis_values(n_devices),
             kv_blocks=tuple(kv_blocks) if kv == "paged" else (0,),
             kv_quants=tuple(kv_quants) if kv == "paged" else ("none",),
-            kv_retains=tuple(kv_retains) if kv == "paged" else (0,))
+            kv_retains=tuple(kv_retains) if kv == "paged" else (0,),
+            prefill_budgets=(tuple(prefill_budgets)
+                             if kv == "paged" else ()))
     if kv == "paged" and seq_lens is None:
         seq_lens = (shape.context,)
     cands = space.candidates(cfg, shape)
@@ -440,21 +478,26 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
             raise ValueError(f"{space.name}: no serving candidate meets "
                              f"min_agreement={min_agreement}")
     best, best_cap, best_blocks = None, -1, 0
-    best_adm = admission
+    best_adm, best_pb = admission, int(prefill_budget)
     for cand in cands:                       # fastest-first => ties keep speed
         adm = cand.extra("admission", admission)
+        pb = int(cand.extra("prefill_budget", prefill_budget) or 0)
         if kv == "paged":
             cap, blocks = _paged_concurrency(cfg, shape, cand, cls, budget,
                                              mode, hw, factors, seq_lens,
                                              compact=compact, admission=adm,
-                                             sigma_k=sigma_k)
+                                             sigma_k=sigma_k,
+                                             prefill_tokens=pb,
+                                             prefill_kernel=prefill_kernel,
+                                             chunk=chunk)
         else:
             cap = PR.serving_capacity(cfg, shape, cand.plan, cls,
                                       cand.mesh_shape, mode=mode, hw=hw,
                                       hbm_budget=budget, factors=factors)
             blocks = 0
         if cap > best_cap:
-            best, best_cap, best_blocks, best_adm = cand, cap, blocks, adm
+            best, best_cap, best_blocks = cand, cap, blocks
+            best_adm, best_pb = adm, pb
     eplan = for_mesh(cfg, shape, best.plan, best.mesh_shape,
                      policy="max_concurrency")
     agree = 1.0
@@ -466,7 +509,9 @@ def plan_serving(cfg: ModelConfig, shape: ShapeConfig, *, n_devices: int,
                             hbm_budget=budget, considered=len(cands),
                             kv_block=best.plan.kv_block_size,
                             blocks=best_blocks, admission=best_adm,
-                            agreement=agree)
+                            agreement=agree,
+                            prefill_budget=best_pb if kv == "paged" else 0,
+                            prefill_kernel=prefill_kernel)
 
 
 def plan_execution(cfg: ModelConfig, shape: ShapeConfig,

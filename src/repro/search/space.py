@@ -52,6 +52,7 @@ EXTRA_GROUPS = {
     "ep": "strategy",
     "fsdp": "strategy",
     "admission": "serving",
+    "prefill_budget": "serving",
 }
 
 
@@ -448,7 +449,8 @@ def serving_space(cfg: ModelConfig, shape: ShapeConfig, *,
                   kv_blocks: Sequence[int] = (0,),
                   admission: Sequence[str] = (),
                   kv_quants: Sequence[str] = ("none",),
-                  kv_retains: Sequence[int] = (0,)) -> ConfigSpace:
+                  kv_retains: Sequence[int] = (0,),
+                  prefill_budgets: Sequence[int] = ()) -> ConfigSpace:
     """The serving-engine planning lattice: mesh axes searchable (pipe
     pinned to 1 — the serving runtime is single-shot) and kv_shard a REAL
     knob rather than auto-resolved, because the admission controller cares:
@@ -465,9 +467,14 @@ def serving_space(cfg: ModelConfig, shape: ShapeConfig, *,
     `kv_quant` / `kv_retain` are the capacity-bending knobs (int8/int4
     block storage, top-k block retention) — legal only over a paged pool,
     and `plan_serving(min_agreement=...)` gates how aggressive a bend the
-    planner may pick. `plan_serving` scores each candidate by
-    `predictor.serving_capacity` (ring) or expected admitted concurrency
-    over the block pool (paged) instead of step time."""
+    planner may pick. `prefill_budgets` (absent by default, like
+    `admission`) makes the engine's prefill token budget a searched knob:
+    a tighter budget shrinks the prefill-tick transient the capacity
+    inversion must hold headroom for, admitting more blocks at tight HBM
+    budgets at the cost of slower prompt ramp-in. `plan_serving` scores
+    each candidate by `predictor.serving_capacity` (ring) or expected
+    admitted concurrency over the block pool (paged) instead of step
+    time."""
     knobs = [Knob("remat", ("none",)), Knob("microbatches", (1,)),
              Knob("optimizer", ("adamw_f32",)),
              Knob("kv_shard", ("heads", "seq")),
@@ -476,6 +483,9 @@ def serving_space(cfg: ModelConfig, shape: ShapeConfig, *,
              Knob("kv_retain", tuple(int(r) for r in kv_retains)),
              *([Knob("admission", tuple(admission), group="extra")]
                if admission else []),
+             *([Knob("prefill_budget",
+                     tuple(int(p) for p in prefill_budgets), group="extra")]
+               if prefill_budgets else []),
              Knob("data", tuple(data), group="mesh"),
              Knob("model", tuple(model), group="mesh"),
              Knob("pipe", (1,), group="mesh")]

@@ -336,6 +336,10 @@ class ServeReport:
     chunk_calls: int = 0         # batched chunk-prefill invocations
     evictions: int = 0           # evict-and-requeue events (expected mode)
     block_drops: int = 0         # cold blocks freed by the retention policy
+    prefill_tokens: int = 0      # prompt tokens prefilled (whole-prompt +
+                                 # chunked), so prefill work is visible in
+                                 # occupancy accounting instead of folded
+                                 # into admit ticks
 
     @property
     def generated_tokens(self) -> int:
@@ -353,16 +357,27 @@ class ServeReport:
         """Generated tokens per engine tick."""
         return self.generated_tokens / self.ticks if self.ticks else 0.0
 
+    def prefill_throughput(self) -> float:
+        """Prompt tokens prefilled per engine tick."""
+        return self.prefill_tokens / self.ticks if self.ticks else 0.0
+
     def mean_latency(self) -> float:
         if not self.completions:
             return 0.0
         return sum(c.latency for c in self.completions) / len(self.completions)
 
     def latency_percentiles(self, qs: Sequence[int] = (50, 95, 99)) -> Dict[str, float]:
+        """Empty dict when nothing completed (an overload trace can evict
+        every request before its first token) — callers probe `.get`."""
+        if not self.completions:
+            return {}
         lat = [c.latency for c in self.completions]
         return {f"p{q}": _percentile(lat, q) for q in qs}
 
     def ttft_percentiles(self, qs: Sequence[int] = (50, 95, 99)) -> Dict[str, float]:
+        """Empty dict when nothing completed, like latency_percentiles."""
+        if not self.completions:
+            return {}
         t = [c.ttft for c in self.completions]
         return {f"p{q}": _percentile(t, q) for q in qs}
 
@@ -387,16 +402,21 @@ class ServeReport:
             paged += f" evictions={self.evictions}"
         if self.block_drops:
             paged += f" block_drops={self.block_drops}"
+        if self.prefill_tokens:
+            paged += (f" prefill_tokens={self.prefill_tokens} "
+                      f"({self.prefill_throughput():.2f} tok/tick)")
         lp = self.latency_percentiles()
         tp = self.ttft_percentiles()
+        tails = (f"lat_p50/p95/p99={lp['p50']:.0f}/{lp['p95']:.0f}/"
+                 f"{lp['p99']:.0f} ttft_p95={tp['p95']:.0f} "
+                 if lp else "lat_p50/p95/p99=-/-/- ttft_p95=- ")
         return (f"[{self.policy}] slots={self.n_slots} "
                 f"completed={len(self.completions)} "
                 f"tokens={self.generated_tokens} ticks={self.ticks} "
                 f"occupancy={self.occupancy():.3f} "
                 f"throughput={self.throughput():.2f} tok/tick "
                 f"mean_latency={self.mean_latency():.1f} ticks "
-                f"lat_p50/p95/p99={lp['p50']:.0f}/{lp['p95']:.0f}/"
-                f"{lp['p99']:.0f} ttft_p95={tp['p95']:.0f} "
+                f"{tails}"
                 f"peak_queue={self.peak_queue} "
                 f"max_concurrent={self.max_concurrent}"
                 f"{paged}")
@@ -533,7 +553,8 @@ class Engine:
 
     def __init__(self, executor, n_slots: int, policy: str = "continuous",
                  allocator: Optional[BlockAllocator] = None,
-                 chunk_prefill: int = 0, prefix_share: bool = False,
+                 chunk_prefill: int = 0, prefill_budget: int = 0,
+                 prefix_share: bool = False,
                  stats: Optional[LengthStats] = None,
                  sigma_k: float = 1.0, kv_retain: int = 0):
         if n_slots < 1:
@@ -550,6 +571,13 @@ class Engine:
             raise ValueError(f"chunk_prefill={chunk_prefill} must be a "
                              f"multiple of the kv block size "
                              f"{allocator.block_size}")
+        if prefill_budget < 0:
+            raise ValueError(f"prefill_budget must be >= 0, got "
+                             f"{prefill_budget}")
+        if prefill_budget and not chunk_prefill:
+            raise ValueError("prefill_budget needs chunk_prefill > 0 (the "
+                             "token budget schedules prompt CHUNKS; "
+                             "whole-prompt prefill is all-or-nothing)")
         if prefix_share and allocator is None:
             raise ValueError("prefix_share needs a BlockAllocator (shared "
                              "prefixes live in the paged block pool)")
@@ -557,6 +585,11 @@ class Engine:
             raise ValueError("prefix_share needs chunk_prefill > 0 (a "
                              "sharer's suffix prefill rides the chunked "
                              "path)")
+        if prefix_share and getattr(executor, "has_recurrent", False):
+            raise ValueError("prefix_share is attention-only: shared "
+                             "prefix blocks carry KV, not the recurrent "
+                             "scan state at the prefix boundary, so a "
+                             "sharer cannot resume mid-prompt")
         if sigma_k < 0:
             raise ValueError(f"sigma_k must be >= 0, got {sigma_k}")
         if kv_retain < 0:
@@ -571,6 +604,11 @@ class Engine:
         # prompts longer than this prefill `chunk_prefill` positions per
         # tick (0 = whole-prompt prefill at admission)
         self.chunk_prefill = int(chunk_prefill)
+        # cap on prompt tokens prefilled per tick across ALL mid-prefill
+        # lanes (0 = advance every lane one chunk per tick). The budget is
+        # fair-shared over SLO classes — see _advance_chunks — and one
+        # chunk always lands per tick so TTFT can never stall outright.
+        self.prefill_budget = int(prefill_budget)
         self.prefix_share = bool(prefix_share)
         self.stats = stats
         self.sigma_k = float(sigma_k)
@@ -613,13 +651,13 @@ class Engine:
     # -- scheduling core ---------------------------------------------------
 
     def _admit(self, queue: Deque[Request], slots: List[Optional[_Active]],
-               tick: int) -> Tuple[int, int]:
+               tick: int) -> Tuple[int, int, int]:
         """Claim free slots for queued requests under the active policy.
         Admissions landing in the same tick and prompt bucket share ONE
         padded prefill call (engine-level batched prefill). Returns
-        (admissions, prefill calls)."""
+        (admissions, prefill calls, prompt tokens prefilled)."""
         if self.policy == "static" and any(s is not None for s in slots):
-            return 0, 0                   # fixed batch: wait for the pool
+            return 0, 0, 0                # fixed batch: wait for the pool
         alloc = self.allocator
         # physical blocks this tick's admissions may immediately consume —
         # pre-checked so the admission path can never hit PoolExhausted
@@ -703,7 +741,7 @@ class Engine:
                 del self._resume[req.rid]
             picked.append((i, req, eff, meta, seed, key, writer, chunked))
         if not picked:
-            return 0, 0
+            return 0, 0, 0
         by_len: Dict[int, List[Tuple]] = {}
         for item in picked:
             i, req, eff, meta, seed, key, writer, chunked = item
@@ -727,9 +765,9 @@ class Engine:
                 continue
             by_len.setdefault(len(eff), []).append(item)
         if not by_len:
-            return len(picked), 0
+            return len(picked), 0, 0
         alloc = self.allocator
-        calls = 0
+        calls = tokens = 0
         for plen in sorted(by_len):
             group = by_len[plen]
             lanes = [item[0] for item in group]
@@ -746,6 +784,7 @@ class Engine:
             firsts = self.executor.prefill_batch(lanes, prompts,
                                                  tables=tables)
             calls += 1
+            tokens += plen * len(group)
             for gi, (i, req, eff, meta, seed, key, writer, _) \
                     in enumerate(group):
                 prior = tuple(meta["tokens"]) if meta else ()
@@ -761,7 +800,7 @@ class Engine:
                 if key is not None and writer:
                     # whole-prompt prefill wrote the prefix blocks in full
                     self._prefix_state[key]["ready"] = True
-        return len(picked), calls
+        return len(picked), calls, tokens
 
     def _retain(self, a: _Active, mass: Optional[Sequence[float]]) -> int:
         """Enforce the retention cap on one lane: keep the `kv_retain`
@@ -850,16 +889,52 @@ class Engine:
             fresh.append(bid)
         return True
 
+    def _schedule_chunks(self, slots: List[Optional[_Active]],
+                         lanes: List[int]) -> List[int]:
+        """Pick which mid-prefill lanes advance this tick under the token
+        budget. No budget: all of them. With one: interleave chunks
+        round-robin over SLO classes (tightest class leads each round,
+        FIFO by admission within a class) and grant whole chunks in that
+        order until the budget is spent — the first grant is unconditional
+        so a budget below the chunk size still makes progress."""
+        if not self.prefill_budget:
+            return lanes
+        by_class: Dict[int, List[int]] = {}
+        for i in lanes:
+            by_class.setdefault(slots[i].req.slo, []).append(i)
+        classes = sorted(by_class)
+        rr = {c: collections.deque(
+                 sorted(by_class[c],
+                        key=lambda i: (slots[i].admitted, slots[i].req.rid)))
+              for c in classes}
+        order: List[int] = []
+        while any(rr[c] for c in classes):
+            for c in classes:
+                if rr[c]:
+                    order.append(rr[c].popleft())
+        picked: List[int] = []
+        spent = 0
+        for i in order:
+            cost = min(len(slots[i].pending), self.chunk_prefill)
+            if picked and spent + cost > self.prefill_budget:
+                break
+            picked.append(i)
+            spent += cost
+        return sorted(picked)
+
     def _advance_chunks(self, slots: List[Optional[_Active]],
-                        queue: Deque[Request]) -> int:
-        """Advance every mid-prefill lane by one prompt chunk in ONE
+                        queue: Deque[Request]) -> Tuple[int, int]:
+        """Advance mid-prefill lanes by one prompt chunk each in ONE
         batched call (blocks allocated lazily per chunk, freshly re-linked
-        ones invalidated first). A lane whose final chunk lands gets its
-        first token and decode cursor. Returns chunk calls made (0/1)."""
+        ones invalidated first) — every pending lane, or the
+        `prefill_budget`-token fair share picked by _schedule_chunks. A
+        lane whose final chunk lands gets its first token and decode
+        cursor. Returns (chunk calls made (0/1), chunk tokens issued)."""
         lanes = [i for i in range(self.n_slots)
                  if slots[i] is not None and slots[i].pending]
         if not lanes:
-            return 0
+            return 0, 0
+        lanes = self._schedule_chunks(slots, lanes)
         alloc = self.allocator
         chunks, starts, tables, final, live = [], [], [], [], []
         fresh: List[int] = []
@@ -884,7 +959,7 @@ class Engine:
             tables.append(list(a.table))
             final.append(not a.pending)
         if not live:
-            return 0
+            return 0, 0
         if fresh:
             self.executor.fresh_blocks(fresh)
         firsts = self.executor.prefill_chunks(
@@ -900,7 +975,7 @@ class Engine:
                     st = self._prefix_state.get(a.prefix_key)
                     if st is not None and st["writer"] == a.req.rid:
                         st["ready"] = True   # prefix KV fully written
-        return 1
+        return 1, sum(len(c) for c in chunks)
 
     def run(self, trace: Sequence[Request],
             max_ticks: int = 1_000_000) -> ServeReport:
@@ -925,6 +1000,7 @@ class Engine:
         tick = decode_ticks = useful = idle = 0
         admit_only = lane_tokens = chunk_calls = block_drops = 0
         peak_queue = max_concurrent = prefills = prefill_calls = 0
+        prefill_tokens = 0
         alloc = self.allocator
         self._resume = {}
         self._prefix_state = {}
@@ -949,12 +1025,14 @@ class Engine:
             ev0 = self._evictions
             while pending and pending[0].arrival <= tick:
                 queue.append(pending.popleft())
-            admitted, calls = self._admit(queue, slots, tick)
+            admitted, calls, ptoks = self._admit(queue, slots, tick)
             prefills += admitted
             prefill_calls += calls
-            chunked = (self._advance_chunks(slots, queue)
-                       if self.chunk_prefill else 0)
+            prefill_tokens += ptoks
+            chunked, ctoks = (self._advance_chunks(slots, queue)
+                              if self.chunk_prefill else (0, 0))
             chunk_calls += chunked
+            prefill_tokens += ctoks
             peak_queue = max(peak_queue, len(queue))
             concurrent = sum(s is not None for s in slots)
             max_concurrent = max(max_concurrent, concurrent)
@@ -1048,4 +1126,5 @@ class Engine:
                            decode_lane_tokens=lane_tokens,
                            chunk_calls=chunk_calls,
                            evictions=self._evictions,
-                           block_drops=block_drops)
+                           block_drops=block_drops,
+                           prefill_tokens=prefill_tokens)

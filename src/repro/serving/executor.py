@@ -237,17 +237,15 @@ class PagedJaxExecutor:
             self.lane_buckets = tuple(bk)
         self.table_buckets = _pow2_buckets(self.max_blocks)
         self.chunk = int(chunk)
-        if self.chunk:
-            if self.chunk % self.kv_block:
-                raise ValueError(f"chunk={self.chunk} must be a multiple "
-                                 f"of kv_block={self.kv_block}")
-            bad = [b.mixer for b in cfg.blocks() if not b.is_attn]
-            if bad:
-                raise ValueError(
-                    f"chunked prefill needs an all-attention block tree "
-                    f"(attention caches carry the full mid-prompt state; "
-                    f"{bad[0]} restarts its sequence scan from zeros), "
-                    f"got {cfg.name}")
+        if self.chunk and self.chunk % self.kv_block:
+            raise ValueError(f"chunk={self.chunk} must be a multiple "
+                             f"of kv_block={self.kv_block}")
+        # recurrent mixers carry their scan state across chunks through
+        # the per-lane pool leaves (mlstm_scan initial=, rglru h0, slstm
+        # core), so chunked prefill works for any block tree; the engine
+        # still refuses prefix_share here — shared prefix blocks hold
+        # attention KV only, not the recurrent state at the boundary
+        self.has_recurrent = any(not b.is_attn for b in cfg.blocks())
         self.pool = SS.init_paged_pool(cfg, self.n_lanes, self.n_blocks + 1,
                                        kv_block, self.context,
                                        kv_quant=self.kv_quant)

@@ -265,3 +265,134 @@ def test_flash_fwd_lse_matches_ref():
     lse_ref = jnp.moveaxis(lse_ref.reshape(b, K * G, s), 1, 2)
     np.testing.assert_allclose(np.asarray(lse), np.asarray(lse_ref),
                                atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused paged flash-prefill
+# ---------------------------------------------------------------------------
+
+def _prefill_case(seed, b, bs, m_blocks, n_blocks, C, K, G, hd, dtype,
+                  quant, starts, n_valid):
+    """Build one chunked-prefill scenario: per-lane history written through
+    the jnp oracle writer (positions 0..starts[i]-1), block tables covering
+    history + chunk, and a chunk at starts[i]..starts[i]+n_valid[i]-1 with
+    trailing padding rows (-1). Returns (q, kn, vn, cache, tables, pos)."""
+    from repro.models.attention import _paged_write_chunk, quantize_kv
+    rng = np.random.default_rng(seed)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    q = jax.random.normal(ks[0], (b, C, K, G, hd), dtype)
+    kn = jax.random.normal(ks[1], (b, C, K, hd), dtype)
+    vn = jax.random.normal(ks[2], (b, C, K, hd), dtype)
+    pool_dtype = {"none": dtype, "int8": jnp.int8, "int4": jnp.uint8}[quant]
+    hd_s = hd // 2 if quant == "int4" else hd
+    cache = {
+        "kb": jnp.zeros((n_blocks, bs, K, hd_s), pool_dtype),
+        "vb": jnp.zeros((n_blocks, bs, K, hd_s), pool_dtype),
+        "pos": jnp.full((n_blocks, bs), -1, jnp.int32),
+    }
+    if quant != "none":
+        cache["ks"] = jnp.zeros((n_blocks, bs, K), jnp.float32)
+        cache["vs"] = jnp.zeros((n_blocks, bs, K), jnp.float32)
+    # tables cover ceil((start + n_valid) / bs) logical blocks per lane,
+    # drawn from a shared permutation of the non-scratch physical blocks
+    perm = rng.permutation(np.arange(1, n_blocks)).tolist()
+    tables = np.full((b, m_blocks), -1, np.int32)
+    for i in range(b):
+        need = -(-(starts[i] + n_valid[i]) // bs)
+        for j in range(need):
+            tables[i, j] = perm.pop()
+    tables = jnp.asarray(tables)
+    # history through the oracle writer: the kernel must merge ON TOP of
+    # previously written (possibly quantized) blocks without disturbing
+    # them
+    H = max(starts)
+    if H:
+        kh = jax.random.normal(ks[3], (b, H, K, hd), dtype)
+        vh = jax.random.normal(ks[4], (b, H, K, hd), dtype)
+        hpos = jnp.asarray([[p if p < st else -1 for p in range(H)]
+                            for st in starts], jnp.int32)
+        cache = _paged_write_chunk(cache, tables, kh, vh, hpos)
+    pos = jnp.asarray([[st + c if c < nv else -1 for c in range(C)]
+                       for st, nv in zip(starts, n_valid)], jnp.int32)
+    return q, kn, vn, cache, tables, pos
+
+
+def _run_chunk_append(q, kn, vn, cache, tables, pos, backend, window=None):
+    from repro.configs.base import BlockSpec
+    from repro.models import attention as A
+    return A._chunk_append(q, kn, vn, cache, BlockSpec(window=window), pos,
+                           tables, A.AttnSettings(backend=backend))
+
+
+def _assert_pools_match(got, want, quant):
+    """Pool leaves must agree EXCLUDING scratch block 0: the jnp oracle
+    parks padding rows there while the kernel predicates the merge off —
+    both are dead writes the mask can never surface. Codes and positions
+    are bit-exact; the f32 scale stripes get 1-ULP slack because XLA may
+    compile `max|x| / qmax` as a reciprocal multiply in one jit context
+    and a true division in the other."""
+    for key in ("kb", "vb", "pos"):
+        np.testing.assert_array_equal(
+            np.asarray(got[key])[1:].astype(np.float32),
+            np.asarray(want[key])[1:].astype(np.float32), err_msg=key)
+    if quant != "none":
+        for key in ("ks", "vs"):
+            np.testing.assert_allclose(np.asarray(got[key])[1:],
+                                       np.asarray(want[key])[1:],
+                                       rtol=1e-6, err_msg=key)
+
+
+@pytest.mark.parametrize("dtype,quant,atol", [
+    (jnp.float32, "none", 2e-5),
+    (jnp.bfloat16, "none", 3e-2),
+    (jnp.float32, "int8", 2e-2),
+    (jnp.float32, "int4", 8e-2),
+])
+@pytest.mark.parametrize("window", [None, 6])
+def test_paged_prefill_attention_sweep(dtype, quant, atol, window):
+    """The fused write+attend kernel vs the dense jnp oracle (scatter
+    through the table, gather the virtual ring, dense SDPA): odd chunk
+    lengths with padding rows, a fresh lane, multi-block chunks landing on
+    half-full history blocks, and int8/int4 quantize-on-write — outputs
+    agree and the pools agree EXACTLY (same codes, scales, positions)."""
+    b, bs, m_blocks, n_blocks, C, K, G, hd = 3, 4, 6, 14, 7, 2, 2, 16
+    starts, n_valid = (9, 0, 4), (5, 7, 3)   # odd + full + short chunks
+    q, kn, vn, cache, tables, pos = _prefill_case(
+        11, b, bs, m_blocks, n_blocks, C, K, G, hd, dtype, quant,
+        starts, n_valid)
+    o_ref, cache_ref = _run_chunk_append(q, kn, vn, cache, tables, pos,
+                                         "naive", window=window)
+    o_ker, cache_ker = _run_chunk_append(q, kn, vn, cache, tables, pos,
+                                         "pallas", window=window)
+    _assert_pools_match(cache_ker, cache_ref, quant)
+    valid = np.asarray(pos) >= 0
+    np.testing.assert_allclose(
+        np.asarray(o_ker, np.float32)[valid],
+        np.asarray(o_ref, np.float32)[valid], atol=atol, rtol=atol)
+
+
+@pytest.mark.parametrize("quant", ["none", "int8"])
+def test_paged_prefill_attention_trimmed_tables(quant):
+    """Like paged decode, the grid's KV extent is the table width: tables
+    trimmed to the widest allocated row must produce the same outputs and
+    the same pool as the full-width call."""
+    b, bs, m_blocks, n_blocks, C, K, G, hd = 3, 4, 8, 14, 4, 1, 4, 16
+    starts, n_valid = (8, 0, 4), (4, 4, 4)
+    q, kn, vn, cache, tables, pos = _prefill_case(
+        5, b, bs, m_blocks, n_blocks, C, K, G, hd, jnp.float32, quant,
+        starts, n_valid)
+    trim = int((np.asarray(tables) >= 0).sum(axis=1).max())
+    assert trim < m_blocks
+    o_full, cache_full = _run_chunk_append(q, kn, vn, cache, tables, pos,
+                                           "pallas")
+    o_trim, cache_trim = _run_chunk_append(q, kn, vn, cache,
+                                           tables[:, :trim], pos, "pallas")
+    _assert_pools_match(cache_trim, cache_full, quant)
+    np.testing.assert_allclose(np.asarray(o_trim, np.float32),
+                               np.asarray(o_full, np.float32),
+                               atol=2e-5, rtol=2e-5)
+    o_ref, _ = _run_chunk_append(q, kn, vn, cache, tables, pos, "naive")
+    atol = 2e-5 if quant == "none" else 2e-2
+    np.testing.assert_allclose(np.asarray(o_trim, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=atol, rtol=atol)

@@ -537,7 +537,211 @@ def test_paged_executor_bucket_and_chunk_validation():
     with pytest.raises(ValueError, match="kv_block"):
         PagedJaxExecutor(params, cfg, n_lanes=2, n_blocks=8, kv_block=4,
                          context=16, chunk=6)
+    # recurrent mixers now ride the chunked path (scan state carried in
+    # per-lane pool leaves) — the constructor accepts them and flags the
+    # tree so the engine can refuse prefix sharing
     rg = get_config("recurrentgemma-9b").reduced()
-    with pytest.raises(ValueError, match="chunked prefill"):
-        PagedJaxExecutor(params, rg, n_lanes=2, n_blocks=8, kv_block=4,
-                         context=16, chunk=4)
+    ex = PagedJaxExecutor(params, rg, n_lanes=2, n_blocks=8, kv_block=4,
+                          context=16, chunk=4)
+    assert ex.has_recurrent
+    attn_only = PagedJaxExecutor(params, cfg, n_lanes=2, n_blocks=8,
+                                 kv_block=4, context=16, chunk=4)
+    assert not attn_only.has_recurrent
+
+
+def test_prefix_share_refuses_recurrent_mixers():
+    """Shared prefix blocks carry attention KV only — a recurrent arch
+    cannot resume a sharer mid-prompt, so the engine refuses upfront."""
+    from repro.serving import BlockAllocator
+    from repro.serving.engine import Engine
+    from repro.serving.executor import PagedJaxExecutor
+    rg = get_config("recurrentgemma-9b").reduced()
+    ex = PagedJaxExecutor(None, rg, n_lanes=2, n_blocks=8, kv_block=4,
+                          context=16, chunk=4)
+    with pytest.raises(ValueError, match="prefix_share is attention-only"):
+        Engine(ex, 2, allocator=BlockAllocator(8, 4), chunk_prefill=4,
+               prefix_share=True)
+
+
+# --- prefill as a first-class capacity term ---------------------------------
+
+def test_prefill_transient_tiled_below_dense(cls):
+    """The tiled flash-prefill kernel never materializes the
+    O(chunk x context) score matrix or a dequantized fp copy of the
+    gathered context, so its modeled transient must sit strictly below the
+    dense jnp oracle's — and only the DENSE term may grow with reach."""
+    mesh = {"data": 1, "model": 1}
+    plan = PR.MemoryPlan(kv_block_size=64)
+    kw = dict(prefill_tokens=64, mode="paper")
+    dense = PR.prefill_transient_bytes(CFG, SHAPE, plan, cls, mesh,
+                                       reach=4096, kernel="dense", **kw)
+    tiled = PR.prefill_transient_bytes(CFG, SHAPE, plan, cls, mesh,
+                                       reach=4096, kernel="tiled", **kw)
+    assert dense > tiled > 0
+    dense_short = PR.prefill_transient_bytes(CFG, SHAPE, plan, cls, mesh,
+                                             reach=256, kernel="dense", **kw)
+    tiled_short = PR.prefill_transient_bytes(CFG, SHAPE, plan, cls, mesh,
+                                             reach=256, kernel="tiled", **kw)
+    assert dense_short < dense
+    assert tiled_short == tiled
+
+
+def test_serving_block_capacity_charges_prefill_transient(cls):
+    """Under a short expected reach (the regime paged serving plans for)
+    a context-sized prefill burst raises the transient peak above the
+    decode term, so blocks shrink — and the dense oracle (score matrix +
+    fp gather) loses strictly more of them than the tiled kernel."""
+    mesh = {"data": 1, "model": 1}
+    plan = PR.MemoryPlan(kv_block_size=64)
+    kw = dict(lanes=8, hbm_budget=48 * GIB, avg_context=128)
+    base = PR.serving_block_capacity(CFG, SHAPE, plan, cls, mesh, **kw)
+    tiled = PR.serving_block_capacity(CFG, SHAPE, plan, cls, mesh,
+                                      prefill_tokens=SHAPE.context,
+                                      prefill_kernel="tiled", **kw)
+    dense = PR.serving_block_capacity(CFG, SHAPE, plan, cls, mesh,
+                                      prefill_tokens=SHAPE.context,
+                                      prefill_kernel="dense", **kw)
+    assert base >= tiled > dense > 0
+    # a token-budgeted prefill (small chunked transient) costs less than
+    # admitting the whole prompt in one dense burst
+    budgeted = PR.serving_block_capacity(CFG, SHAPE, plan, cls, mesh,
+                                         prefill_tokens=64,
+                                         prefill_kernel="tiled", **kw)
+    assert budgeted >= tiled
+
+
+def test_plan_serving_prefill_budget_knob(monkeypatch, cls):
+    """plan_serving threads the prefill budget and kernel through to the
+    capacity term and the returned ServingPlan; the budget is searchable
+    as a serving-space knob; misuse raises before any planning work."""
+    _no_compile(monkeypatch)
+    lens = [60] * 7 + [2000]
+    kw = dict(n_devices=4, cls=cls, hbm_budget=12 * GIB, kv="paged",
+              seq_lens=lens)
+    _, splan = XP.plan_serving(CFG, SHAPE, chunk=8, prefill_budget=16,
+                               prefill_kernel="tiled", **kw)
+    assert splan.prefill_budget == 16
+    assert splan.prefill_kernel == "tiled"
+    assert "prefill_budget=16" in splan.describe()
+    _, dense = XP.plan_serving(CFG, SHAPE, chunk=8, prefill_budget=16,
+                               prefill_kernel="dense", **kw)
+    assert splan.capacity >= dense.capacity > 0
+    # searched as a knob: the chosen budget is one of the candidates and
+    # the lattice actually widened
+    _, plain = XP.plan_serving(CFG, SHAPE, **kw)
+    assert plain.prefill_budget == 0
+    assert "prefill_budget" not in plain.describe()
+    _, searched = XP.plan_serving(CFG, SHAPE, chunk=8,
+                                  prefill_budgets=(16, 256), **kw)
+    assert searched.prefill_budget in (16, 256)
+    assert searched.considered == 2 * plain.considered
+    with pytest.raises(ValueError, match="needs chunk > 0"):
+        XP.plan_serving(CFG, SHAPE, prefill_budget=16, **kw)
+    with pytest.raises(ValueError, match="unknown prefill_kernel"):
+        XP.plan_serving(CFG, SHAPE, chunk=8, prefill_kernel="bogus", **kw)
+
+
+def test_engine_prefill_budget_validation():
+    with pytest.raises(ValueError, match="prefill_budget"):
+        Engine(ScriptedExecutor(), 2, prefill_budget=-1,
+               chunk_prefill=4, allocator=BlockAllocator(8, 4))
+    with pytest.raises(ValueError, match="needs chunk_prefill"):
+        Engine(ScriptedExecutor(), 2, prefill_budget=4)
+
+
+def test_prefill_budget_token_identical_and_accounted():
+    """The token budget changes WHEN chunks land, never WHAT tokens come
+    out: a tightly budgeted run completes identically to the unbudgeted
+    chunked run, spreads the chunk work over more calls, counts every
+    prompt token exactly once in prefill_tokens, and keeps the tick
+    taxonomy a partition."""
+    trace = _burst(4, (2, 4), prompts=(8, 12))
+    total_prompt = sum(len(r.prompt) for r in trace)
+
+    def run(budget):
+        ex = ScriptedExecutor()
+        rep = Engine(ex, 4, allocator=BlockAllocator(24, 4),
+                     chunk_prefill=4, prefill_budget=budget).run(trace)
+        return ex, rep
+
+    ex0, free = run(0)
+    ex1, tight = run(4)              # one 4-token chunk per tick
+    assert ([c.tokens for c in free.completions]
+            == [c.tokens for c in tight.completions])
+    assert free.prefill_tokens == tight.prefill_tokens == total_prompt
+    assert free.prefill_throughput() > tight.prefill_throughput() > 0
+    assert ex1.chunk_calls >= ex0.chunk_calls
+    assert ex1.chunk_tokens == ex0.chunk_tokens
+    assert tight.ticks > free.ticks  # the budget really throttled
+    for rep in (free, tight):
+        assert rep.ticks == (rep.decode_ticks + rep.admit_ticks
+                             + rep.idle_ticks)
+
+
+def test_prefill_budget_fair_share_tightest_slo_first():
+    """Two same-length prompts in different SLO classes contend for a
+    budget that admits ONE chunk per tick: the tighter class must reach
+    its first token strictly earlier (round-robin leads with class 0)."""
+    trace = [Request(rid=0, arrival=0, prompt=(3,) * 12, max_new=2, slo=1),
+             Request(rid=1, arrival=0, prompt=(4,) * 12, max_new=2, slo=0)]
+    rep = Engine(ScriptedExecutor(), 2, allocator=BlockAllocator(24, 4),
+                 chunk_prefill=4, prefill_budget=4).run(trace)
+    assert len(rep.completions) == 2
+    by_rid = {c.rid: c for c in rep.completions}
+    assert by_rid[1].first_token < by_rid[0].first_token
+
+
+def test_report_percentiles_empty_without_completions():
+    """Zero completions (an overload trace can evict everything before a
+    first token) must yield empty percentile dicts and a describe() that
+    still renders — not a KeyError at the report line."""
+    from repro.serving.engine import ServeReport
+    rep = ServeReport(policy="continuous", n_slots=2, completions=[],
+                      ticks=5, decode_ticks=0, useful_slot_tokens=0,
+                      idle_ticks=5, peak_queue=3, max_concurrent=0,
+                      prefills=0)
+    assert rep.latency_percentiles() == {}
+    assert rep.ttft_percentiles() == {}
+    assert rep.mean_ttft() == 0.0
+    assert "lat_p50/p95/p99=-/-/-" in rep.describe()
+
+
+def test_fused_prefill_avoids_dense_score_transient():
+    """Jaxpr-level pin of the tentpole's memory claim: tracing the tiled
+    kernel produces NO top-level intermediate as large as the
+    O(chunk x context) score matrix, while the dense jnp oracle path
+    materializes one at least that large (trace-only, zero compiles)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ops as kops
+    b, C, K, G, hd = 1, 8, 2, 2, 16
+    bs, mB, nB = 8, 64, 16                   # context 512 >> chunk 8
+    ctx = mB * bs
+    q = jax.ShapeDtypeStruct((b, C, K, G, hd), jnp.float32)
+    kn = jax.ShapeDtypeStruct((b, C, K, hd), jnp.float32)
+    kp = jax.ShapeDtypeStruct((nB, bs, K, hd), jnp.bfloat16)
+    pp = jax.ShapeDtypeStruct((nB, bs), jnp.int32)
+    tb = jax.ShapeDtypeStruct((b, mB), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b, C), jnp.int32)
+
+    def tiled(q, kn, vn, kp, vp, pp, tb, pos):
+        return kops.paged_prefill_attention(q, kn, vn, kp, vp, pp, tb, pos,
+                                            backend="interpret")
+
+    def dense(q, kn, vn, kp, vp, pp, tb, pos):
+        from repro.configs.base import BlockSpec
+        from repro.models import attention as A
+        cache = {"kb": kp, "vb": vp, "pos": pp}
+        return A._chunk_append(q, kn, vn, cache, BlockSpec(), pos, tb,
+                               A.AttnSettings(backend="naive"))
+
+    score_elems = C * K * G * ctx            # the [C, heads, ctx] matrix
+
+    def max_intermediate(fn):
+        jaxpr = jax.make_jaxpr(fn)(q, kn, kn, kp, kp, pp, tb, pos).jaxpr
+        return max(int(np.prod(v.aval.shape))
+                   for eqn in jaxpr.eqns for v in eqn.outvars)
+
+    assert max_intermediate(dense) >= score_elems
+    assert max_intermediate(tiled) < score_elems
