@@ -50,8 +50,16 @@ file). Prefill pins: at the TIGHTEST budget the tiled-kernel plan must
 admit >= 1.3x the dense-plan lanes with LOWER mean TTFT,
 token-identically; at the loose budget the two plans converge — the
 prefill term only binds where headroom is scarce, which is exactly the
-regime the paper targets. Results land in BENCH_serving.json at the
-repo root (schema_version 4).
+regime the paper targets.
+
+The PR-10 DEGRADATION section prices fault tolerance: the same planned
+engine is replayed fault-free and then with a 25% mid-run HBM budget
+shrink (live block retirement via `FaultPlan`), with the graceful-
+degradation ladder armed and the strict every-tick ledger audit on.
+Degradation pins: the shrunk run must sustain >= 0.8x the fault-free
+goodput (completed tokens/tick), leak-check clean on the SHRUNKEN pool,
+and every completion token-identical to the fault-free replay. Results
+land in BENCH_serving.json at the repo root (schema_version 5).
 """
 from __future__ import annotations
 
@@ -75,7 +83,7 @@ PREFILL_LANE_CAP = 16                # prefill section: transient headroom is
 PREFILL_BUDGET_TOKENS = 32           # prompt tokens/tick the budgeted engine
                                      # grants (and the planner charges)
 PREFILL_CHUNK = 8                    # chunk_prefill: budget covers 4 chunks
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 
 def main():
@@ -91,7 +99,9 @@ def main():
     from repro.models import init_params
     from repro.search import execplan as XP
     from repro.search import space as SP
-    from repro.serving import (BlockAllocator, Engine, length_stats,
+    from repro.serving import (BlockAllocator, Engine, FaultPlan,
+                               LadderConfig, OnlineLengthStats, leak_check,
+                               length_stats, survivor_mismatches,
                                synthetic_trace, trace_context)
     from repro.serving.executor import JaxExecutor, PagedJaxExecutor
     from repro.serving.quality import token_agreement
@@ -621,6 +631,100 @@ def main():
         "rows": prefill_rows,
     }
 
+    # -- degradation: the ladder under a 25% mid-run budget shrink ----------
+    # The capacity model was WRONG mid-flight (a co-located tenant claimed
+    # a quarter of the pool): free blocks retire immediately, live blocks
+    # become retirement debt collected as lanes drain, and the degradation
+    # ladder works the committed-over-pool overhang off (tighten prefill ->
+    # SLO-ordered eviction -> shedding) instead of deadlocking. The pins:
+    # goodput (completed tokens/tick) stays >= 0.8x fault-free, the
+    # SHRUNKEN ledger leak-checks clean, and every completion is
+    # token-identical to the fault-free replay — the ladder trades
+    # latency, never correctness.
+    dtrace = synthetic_trace(16, vocab_size=cfg.vocab_size, seed=TRACE_SEED,
+                             prompt_lens=(4, 8), gen_lens=(8, 16, 24),
+                             mean_interarrival=0.5)
+    dcontext = trace_context(dtrace)
+    dshape = dataclasses.replace(shape, seq_len=dcontext)
+    dlens = [len(r.prompt) + r.max_new - 1 for r in dtrace]
+    dbudget = (req(3) + req(4)) / 2
+    dstats = length_stats(dtrace)
+    _, dplan = XP.plan_serving(cfg, dshape, n_devices=1, hbm_budget=dbudget,
+                               cls=cls, space=pinned((4, 8, 16)), kv="paged",
+                               seq_lens=dlens, admission="optimistic",
+                               sigma_k=1.0)
+    dn_slots = dplan.slots(cap=min(LANE_CAP, len(dtrace)))
+    dn_blocks = dplan.pool_blocks(dn_slots, dcontext)
+    dchunk = dplan.kv_block
+
+    def dbuild(faults=None, ladder=None):
+        ex = PagedJaxExecutor(params, cfg, n_lanes=dn_slots,
+                              n_blocks=dn_blocks, kv_block=dplan.kv_block,
+                              context=dcontext, chunk=dchunk)
+        alloc = BlockAllocator(dn_blocks, dplan.kv_block,
+                               reservation="expected")
+        eng = Engine(ex, dn_slots, allocator=alloc, chunk_prefill=dchunk,
+                     stats=OnlineLengthStats(base=dstats), sigma_k=1.0,
+                     faults=faults, ladder=ladder, audit="strict")
+        return ex, alloc, eng
+
+    _, _, dwarm = dbuild()
+    dwarm.run(dtrace)
+    dex, dalloc, deng = dbuild()
+    t0 = time.perf_counter()
+    dff = deng.run(dtrace)
+    dwall_ff = time.perf_counter() - t0
+    shrink_tick = max(2, dff.ticks // 3)
+    dfaults = FaultPlan(seed=TRACE_SEED,
+                        shrinks=((shrink_tick, 0.25),))
+    gex, galloc, geng = dbuild(faults=dfaults,
+                               ladder=LadderConfig(patience=1, high=0.9))
+    t0 = time.perf_counter()
+    dgr = geng.run(dtrace)
+    dwall_dg = time.perf_counter() - t0
+    dproblems = leak_check(galloc) + survivor_mismatches(dgr, dff)
+    dratio = (dgr.throughput() / dff.throughput()
+              if dff.throughput() else 0.0)
+    dcells = {}
+    for name, rep, al, wl in (("fault_free", dff, dalloc, dwall_ff),
+                              ("shrink_ladder", dgr, galloc, dwall_dg)):
+        dcells[name] = cell_metrics(dplan, rep, al, dn_slots, wl,
+                                    e_blocks=e_blocks(dplan.kv_block, dlens),
+                                    block_bytes=PR.kv_block_bytes_per_device(
+                                        cfg, dshape, dplan.execution.plan,
+                                        mesh_shape))
+        dcells[name].update({
+            "shrunk_blocks": rep.shrunk_blocks,
+            "cancelled": len(rep.cancellations),
+            "audits": rep.audits,
+            "max_rung": (rep.degradation or {}).get("max_rung_name",
+                                                    "normal"),
+            "rung_ticks": (rep.degradation or {}).get("rung_ticks", {}),
+        })
+    degradation = {
+        "requests": len(dtrace),
+        "context": dcontext,
+        "budget_bytes": dbudget,
+        "shrink_tick": shrink_tick,
+        "shrink_frac": 0.25,
+        "goodput_ratio": dratio,
+        "survivors_identical": not dproblems,
+        **dcells,
+    }
+    emit(f"serve.degradation.{ARCH}", dwall_dg * 1e6,
+         f"goodput_ratio={dratio:.2f}x;"
+         f"shrunk={dgr.shrunk_blocks};"
+         f"max_rung={dcells['shrink_ladder']['max_rung']};"
+         f"survivors_identical={not dproblems}")
+    if dproblems:
+        raise SystemExit("degradation: " + "; ".join(dproblems))
+    if dgr.shrunk_blocks <= 0:
+        raise SystemExit("degradation: the shrink never landed "
+                         f"(tick {shrink_tick}, run {dgr.ticks} ticks)")
+    if dratio < 0.8:
+        raise SystemExit(f"degradation: goodput under a 25% shrink fell to "
+                         f"{dratio:.2f}x fault-free (pin: >= 0.8x)")
+
     out = {
         "schema_version": SCHEMA_VERSION,
         "arch": ARCH,
@@ -632,6 +736,7 @@ def main():
         "overload": overload,
         "bending": bending,
         "prefill_bound": prefill_bound,
+        "degradation": degradation,
     }
     # schema v4: every benchmark cell carries the TTFT columns — walk the
     # whole document and refuse to write a file that silently dropped them

@@ -31,8 +31,11 @@ from repro.models import init_params
 from repro.parallel.axes import axis_rules
 from repro.search import execplan as XP
 from repro.search import space as SP
-from repro.serving import (BlockAllocator, Engine, describe_trace,
-                           length_stats, synthetic_trace, trace_context)
+from repro.serving import (AUDIT_MODES, BlockAllocator, ChaosAllocator,
+                           ChaosExecutor, Engine, FaultPlan, LadderConfig,
+                           OnlineLengthStats, describe_trace, leak_check,
+                           length_stats, survivor_mismatches,
+                           synthetic_trace, trace_context)
 from repro.serving.executor import JaxExecutor, PagedJaxExecutor
 
 
@@ -151,6 +154,25 @@ def main(argv=None):
                     help="cap on the engine's slot pool / decode lanes "
                          "(the WSMC capacity is the bound; this caps it "
                          "for small hosts)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="paged only: arm the deterministic chaos harness "
+                         "with this seed — transient executor/allocator "
+                         "faults, one mid-run 25%% pool shrink, request "
+                         "cancellations and a lane stall, all replayed "
+                         "identically per seed. After the run the driver "
+                         "leak-checks the allocator ledger and replays "
+                         "the trace fault-free to prove every surviving "
+                         "completion is token-identical")
+    ap.add_argument("--deadline", type=int, default=0,
+                    help="per-request deadline in ticks from arrival; "
+                         "requests still unfinished are cancelled cleanly "
+                         "(blocks freed, cause-tagged in the report). "
+                         "0 = no deadline")
+    ap.add_argument("--audit", default="off", choices=list(AUDIT_MODES),
+                    help="paged only: every-tick allocator ledger audit. "
+                         "'strict' fails the run on the first corrupt "
+                         "tick, 'count' tallies violations into the "
+                         "report, 'off' skips the sweep")
     ap.add_argument("--policy", default="continuous",
                     choices=["continuous", "static", "both"])
     ap.add_argument("--forbid-plan-compiles", action="store_true",
@@ -182,6 +204,14 @@ def main(argv=None):
                  "codes and retention both live on the block pool)")
     if args.kv_retain < 0:
         ap.error("--kv-retain must be >= 0")
+    if args.kv != "paged" and args.chaos_seed is not None:
+        ap.error("--chaos-seed needs --kv paged (pool shrinks and "
+                 "allocation faults inject into the block ledger)")
+    if args.kv != "paged" and args.audit != "off":
+        ap.error("--audit needs --kv paged (the audit sweeps the "
+                 "BlockAllocator ledger)")
+    if args.deadline < 0:
+        ap.error("--deadline must be >= 0")
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -276,11 +306,27 @@ def main(argv=None):
     n_blocks = splan.pool_blocks(n_slots, context)
     mesh, strategy = splan.execution.build(devices)
 
+    # -- chaos plan ---------------------------------------------------------
+    chaos = args.chaos_seed is not None
+    plan = None
+    if chaos:
+        # place shrinks inside the run: rough tick horizon = arrival span
+        # plus serial work over the lane count
+        work = sum(len(r.prompt) + r.max_new for r in trace)
+        horizon = max(64, max(r.arrival for r in trace)
+                      + work // max(n_slots, 1))
+        plan = FaultPlan.generate(args.chaos_seed, ticks=horizon,
+                                  n_requests=len(trace), n_lanes=n_slots,
+                                  n_cancels=max(1, len(trace) // 8),
+                                  n_stalls=1)
+        print("chaos:", plan.describe())
+
     # -- serve --------------------------------------------------------------
     params = init_params(jax.random.PRNGKey(args.seed), cfg)
     policies = (["continuous", "static"] if args.policy == "both"
                 else [args.policy])
     reports = []
+    failures = []
     with mesh, axis_rules(strategy.rules(), mesh=mesh):
         for policy in policies:
             chunk = 0
@@ -295,25 +341,38 @@ def main(argv=None):
                     kv_block=splan.kv_block, context=context,
                     compact=args.compact, chunk=chunk,
                     kv_quant=args.kv_quant, kv_retain=args.kv_retain)
-                allocator = BlockAllocator(
-                    n_blocks, splan.kv_block,
-                    reservation=("expected"
-                                 if args.admission == "optimistic"
-                                 else "worst"))
+                reservation = ("expected"
+                               if args.admission == "optimistic"
+                               else "worst")
+                if chaos:
+                    allocator = ChaosAllocator(n_blocks, splan.kv_block,
+                                               reservation, plan=plan)
+                else:
+                    allocator = BlockAllocator(n_blocks, splan.kv_block,
+                                               reservation=reservation)
             else:
                 executor = JaxExecutor(params, cfg, n_slots=n_slots,
                                        context=context)
                 allocator = None
-            engine = Engine(executor, n_slots, policy=policy,
+
+            def mk_stats():
+                # EW-updated online stats: reservations track the live
+                # length distribution, and the report carries observed
+                # sigma_k per prompt bucket
+                if args.admission != "optimistic":
+                    return None
+                return OnlineLengthStats(base=length_stats(trace))
+            run_exec = ChaosExecutor(executor, plan) if chaos else executor
+            engine = Engine(run_exec, n_slots, policy=policy,
                             allocator=allocator, chunk_prefill=chunk,
                             prefill_budget=args.prefill_budget,
                             prefix_share=args.prefix_share,
-                            stats=(length_stats(trace)
-                                   if args.admission == "optimistic"
-                                   else None),
-                            sigma_k=args.sigma_k,
+                            stats=mk_stats(), sigma_k=args.sigma_k,
                             kv_retain=(args.kv_retain
-                                       if args.kv == "paged" else 0))
+                                       if args.kv == "paged" else 0),
+                            deadline=args.deadline, faults=plan,
+                            ladder=(LadderConfig() if chaos else None),
+                            audit=args.audit)
             t0 = time.time()
             report = engine.run(trace)
             dt = time.time() - t0
@@ -332,6 +391,32 @@ def main(argv=None):
                 agree = token_agreement(params, cfg, trace, report,
                                         context=context)
                 print(f"  {agree.describe()}")
+            if chaos:
+                # prove the harness didn't corrupt anything: the drained
+                # ledger must be whole, and every request the chaos run
+                # completed must be token-identical to a fault-free
+                # replay (same executor, reset pool, clean allocator)
+                problems = leak_check(allocator)
+                executor.reset()
+                clean = Engine(
+                    executor, n_slots, policy=policy,
+                    allocator=BlockAllocator(n_blocks, splan.kv_block,
+                                             reservation=reservation),
+                    chunk_prefill=chunk,
+                    prefill_budget=args.prefill_budget,
+                    prefix_share=args.prefix_share,
+                    stats=mk_stats(), sigma_k=args.sigma_k,
+                    kv_retain=(args.kv_retain
+                               if args.kv == "paged" else 0)).run(trace)
+                problems += survivor_mismatches(report, clean)
+                if problems:
+                    for p in problems:
+                        print(f"  CHAOS FAILURE: {p}")
+                    failures.extend(problems)
+                else:
+                    print(f"  chaos: ledger clean, "
+                          f"{len(report.completions)} survivors "
+                          f"token-identical to fault-free replay")
             reports.append(report)
 
     if args.policy == "both" and len(reports) == 2:
@@ -339,6 +424,18 @@ def main(argv=None):
         print(f"occupancy: continuous={cont.occupancy():.3f} vs "
               f"static={stat.occupancy():.3f} "
               f"(+{(cont.occupancy() - stat.occupancy()) * 100:.1f} pts)")
+    if failures:
+        print(f"ERROR: {len(failures)} chaos check(s) failed")
+        return 1
+    if chaos or args.deadline:
+        # faults and deadlines may legitimately cancel requests; every
+        # request must still be ACCOUNTED for — completed or cause-tagged
+        done = min(len(r.completions) + len(r.cancellations)
+                   for r in reports)
+        if done != len(trace):
+            print(f"ERROR: {done}/{len(trace)} requests accounted for")
+            return 1
+        return 0
     completed = min(len(r.completions) for r in reports)
     if completed != len(trace):
         print(f"ERROR: {completed}/{len(trace)} requests completed")

@@ -454,6 +454,22 @@ def reset_pool_blocks(pool, ids):
     }
 
 
+def clear_pool(pool):
+    """Re-initialize a live pool wholesale: every int32 validity buffer
+    (paged block `pos`, ring positions) back to -1, every payload leaf to
+    zeros — `init_paged_pool`'s freshly-materialized state without
+    rebuilding the tree. This is the executor-REUSE hook for engine
+    snapshot/restore: `Engine.resume` re-materializes all KV via
+    re-prefill anyway, so a preempted replica hands its existing device
+    buffers to the restored engine instead of paying a fresh allocation."""
+    def f(x):
+        if hasattr(x, "dtype") and x.dtype == jnp.int32:
+            return jnp.full(x.shape, -1, x.dtype)
+        return jnp.zeros(x.shape, x.dtype)
+
+    return jax.tree.map(f, pool)
+
+
 def _sharding_ctx_key():
     """The ambient sharding context shard()/gather_fsdp bake into a trace
     (parallel.axes thread-locals). jax.jit's own cache does not key on it,

@@ -268,6 +268,25 @@ def predicted_agreement(plan: MemoryPlan, max_seq_blocks: int) -> float:
     return a
 
 
+def ladder_priors(plan: "ServingPlan", max_seq_blocks: int,
+                  min_agreement: float = 0.0) -> dict:
+    """The degradation ladder's quality gate, priced by the SAME priors
+    the serving search enforces: the agreement a `bend_retain` of
+    `max_seq_blocks // 2` blocks would cost ON TOP of the plan's already-
+    gated bend, and whether that clears `min_agreement`. The engine's
+    rung-2 kv_bend only engages inside this gate (`LadderConfig(
+    bend_retain=..., bend_agreement=..., min_agreement=...)`), so
+    pressure never trades quality the planner wouldn't have."""
+    base = plan.agreement
+    retain = max(max_seq_blocks // 2, 1)
+    bend = base * (RETAIN_AGREEMENT
+                   if retain + 1 < max_seq_blocks else 1.0)
+    return {"bend_retain": retain,
+            "bend_agreement": bend,
+            "min_agreement": float(min_agreement),
+            "bend_allowed": bend >= float(min_agreement)}
+
+
 def _expected_blocks(seq_lens: Sequence[int], block: int) -> float:
     """Mean paged-block demand per sequence under the trace's length
     distribution: `seq_lens` holds each request's written positions

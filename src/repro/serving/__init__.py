@@ -1,17 +1,25 @@
 """Memory-governed serving: WSMC capacity prediction drives continuous
 batching over a slotted KV pool.
 
-`trace` and `engine` are jax-free (the scheduler is a deterministic state
-machine); the jax-backed executor lives in `repro.serving.executor` and is
-imported lazily so planning/metrics code never touches device state.
+`trace`, `engine` and `faults` are jax-free (the scheduler is a
+deterministic state machine and the chaos harness injects into it); the
+jax-backed executor lives in `repro.serving.executor` and is imported
+lazily so planning/metrics code never touches device state.
 """
 from repro.serving.engine import (  # noqa: F401
-    BlockAllocator, Completion, Engine, POLICIES, PoolExhausted,
-    RESERVATIONS, ScriptedExecutor, ServeReport,
+    AUDIT_MODES, AllocationFault, BlockAllocator, Cancellation, Completion,
+    DoubleFree, Engine, EngineFault, EngineSnapshot, LadderConfig,
+    LedgerCorruption, NegativeRefcount, POLICIES, PoolExhausted,
+    RESERVATIONS, RUNG_NAMES, ScriptedExecutor, ServeReport,
+    TransientExecutorError,
+)
+from repro.serving.faults import (  # noqa: F401
+    ChaosAllocator, ChaosExecutor, FaultPlan, leak_check,
+    survivor_mismatches,
 )
 from repro.serving.trace import (  # noqa: F401
-    LengthStats, Request, describe_trace, length_stats, synthetic_trace,
-    trace_context,
+    LengthStats, OnlineLengthStats, Request, describe_trace, length_stats,
+    synthetic_trace, trace_context,
 )
 
 

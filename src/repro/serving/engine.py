@@ -62,19 +62,58 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+import json
+from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
 
 from repro.serving.trace import LengthStats, Request
 
 POLICIES = ("continuous", "static")
 RESERVATIONS = ("worst", "expected")
+AUDIT_MODES = ("off", "strict", "count")
 
 
 class PoolExhausted(RuntimeError):
     """The free list is empty and no unreferenced cached prefix remains to
-    reclaim. Reachable only under reservation="expected" (worst-case
-    reservations guarantee a free block for every legal alloc) — the
-    engine answers by evicting a victim and retrying."""
+    reclaim. Reachable under reservation="expected" (worst-case
+    reservations guarantee a free block for every legal alloc) or after a
+    mid-run `shrink` retired blocks out from under worst-case
+    reservations — the engine answers by evicting a victim and retrying."""
+
+
+class DoubleFree(RuntimeError):
+    """A block (or a request's whole holding) was returned to the free
+    list twice — the ledger corruption `BlockAllocator.free`/`free_block`
+    refuse to commit silently."""
+
+
+class NegativeRefcount(RuntimeError):
+    """A prefix release would drive its refcount negative (released more
+    times than acquired)."""
+
+
+class AllocationFault(RuntimeError):
+    """A TRANSIENT allocation failure injected by the chaos harness
+    (`serving.faults.ChaosAllocator`): the allocator refused a block it
+    may well have. Unlike `PoolExhausted` this is not a capacity signal —
+    the engine defers the lane (or rolls back the admission) and retries
+    next tick instead of evicting."""
+
+
+class TransientExecutorError(RuntimeError):
+    """One executor call failed transiently (chaos-injected or a real
+    device hiccup). Raised BEFORE the executor mutates any state, so the
+    engine's bounded retry-with-backoff replays the exact same call."""
+
+
+class EngineFault(RuntimeError):
+    """The engine gave up: more consecutive transient executor faults
+    than `max_exec_retries` allows."""
+
+
+class LedgerCorruption(RuntimeError):
+    """The every-tick ledger auditor found a broken invariant (audit
+    mode "strict" — production mode "count" degrades this to a
+    counter in `ServeReport.audit_failures`)."""
 
 
 class BlockAllocator:
@@ -122,6 +161,10 @@ class BlockAllocator:
         # prefix key -> {"blocks": [...], "refs": int}; insertion order is
         # the (deterministic) reclaim order
         self._prefix: Dict[object, Dict] = {}
+        # mid-run budget shrink (`shrink`): permanently retired block ids,
+        # plus the retirement debt collected as live blocks are freed
+        self._retired_ids: set = set()
+        self._shrink_debt = 0
         self.peak_in_use = 0
         self.peak_committed = 0
 
@@ -160,23 +203,37 @@ class BlockAllocator:
         if (self.reservation == "worst"
                 and len(self._owned[rid]) >= self._reserved[rid]):
             raise RuntimeError(f"request {rid} exceeded its reservation")
-        if not self._free and not self._reclaim():
-            raise PoolExhausted(f"no free block for request {rid}: "
-                                f"{self.in_use}/{self.n_blocks} in use, "
-                                "no cached prefix to reclaim")
+        while not self._free:       # a reclaim can be swallowed whole by
+            if not self._reclaim():  # shrink debt, so keep reclaiming
+                raise PoolExhausted(f"no free block for request {rid}: "
+                                    f"{self.in_use}/{self.n_blocks} in use, "
+                                    "no cached prefix to reclaim")
         bid = self._free.popleft()
         self._owned[rid].append(bid)
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         self.peak_committed = max(self.peak_committed, self.committed)
         return bid
 
+    def _absorb(self, ids: Sequence[int]) -> List[int]:
+        """Route freed blocks to outstanding shrink debt first (they
+        retire instead of recirculating); return the survivors."""
+        out: List[int] = []
+        for bid in ids:
+            if self._shrink_debt > 0:
+                self._shrink_debt -= 1
+                self._retired_ids.add(bid)
+                self.n_blocks -= 1
+            else:
+                out.append(bid)
+        return out
+
     def free(self, rid: int) -> List[int]:
         if rid not in self._owned:
-            raise RuntimeError(f"request {rid} owns no blocks "
-                               "(double free, or never reserved)")
+            raise DoubleFree(f"request {rid} owns no blocks "
+                             "(double free, or never reserved)")
         ids = self._owned.pop(rid)
         del self._reserved[rid]
-        self._free.extend(ids)           # FIFO reuse: deterministic
+        self._free.extend(self._absorb(ids))  # FIFO reuse: deterministic
         return ids
 
     def free_block(self, rid: int, bid: int) -> None:
@@ -185,15 +242,92 @@ class BlockAllocator:
         stays — only the physical block is recycled. Shared prefix blocks
         are never in a request's owned list, so retention can't free one
         through here; freeing a block twice (or one the request never
-        owned) raises."""
+        owned) raises `DoubleFree` instead of corrupting the free list."""
         owned = self._owned.get(rid)
         if owned is None:
-            raise RuntimeError(f"request {rid} owns no blocks")
+            raise DoubleFree(f"request {rid} owns no blocks (double free)")
         if bid not in owned:
-            raise RuntimeError(f"request {rid} does not own block {bid} "
-                               "(double free, or a shared prefix block)")
+            raise DoubleFree(f"request {rid} does not own block {bid} "
+                             "(double free, or a shared prefix block)")
         owned.remove(bid)
-        self._free.append(bid)
+        self._free.extend(self._absorb([bid]))
+
+    def shrink(self, n: int) -> int:
+        """Permanently retire up to `n` blocks — the mid-run HBM budget
+        shrink (a co-located tenant claiming memory, or the capacity
+        model having over-promised). Free blocks retire immediately (from
+        the cold end of the free list); the remainder becomes retirement
+        DEBT collected as live blocks are freed, so in-flight lanes are
+        never yanked — pressure surfaces through `committed > n_blocks`
+        and the engine's degradation ladder works it off. At least one
+        block always survives. Returns the count retired immediately."""
+        if n < 0:
+            raise ValueError(f"shrink needs n >= 0, got {n}")
+        n = min(n, self.n_blocks - 1)
+        take = min(n, len(self._free))
+        for _ in range(take):
+            bid = self._free.pop()      # FIFO alloc side is popleft
+            self._retired_ids.add(bid)
+        self.n_blocks -= take
+        self._shrink_debt += n - take
+        return take
+
+    @property
+    def retired_blocks(self) -> int:
+        """Blocks permanently lost to `shrink` so far (debt not yet
+        collected is not counted — those blocks are still live)."""
+        return len(self._retired_ids)
+
+    @property
+    def shrink_debt(self) -> int:
+        return self._shrink_debt
+
+    def audit(self) -> List[str]:
+        """The ledger auditor: every invariant that, when broken, turns
+        into silent KV corruption later. Returns problem strings (empty =
+        clean). O(pool) — cheap enough for the engine's every-tick
+        `audit="strict"` test mode.
+
+          * free + owned + live-prefix blocks partition the pool exactly
+          * no physical id appears in two ledgers (or twice in one)
+          * retired blocks never re-enter circulation
+          * prefix refcounts are never negative
+          * reservations and owned ledgers exist in pairs, and in worst
+            mode every owned holding is covered by its reservation
+        """
+        problems: List[str] = []
+        free = list(self._free)
+        owned = [b for ids in self._owned.values() for b in ids]
+        pfx = [b for p in self._prefix.values() for b in p["blocks"]]
+        every = free + owned + pfx
+        if len(set(every)) != len(every):
+            problems.append("a physical block appears twice across the "
+                            "free/owned/prefix ledgers")
+        if len(every) != self.n_blocks:
+            problems.append(f"ledger partition broken: free({len(free)}) "
+                            f"+ owned({len(owned)}) + prefix({len(pfx)}) "
+                            f"!= pool({self.n_blocks})")
+        back = self._retired_ids.intersection(every)
+        if back:
+            problems.append(f"retired blocks back in circulation: "
+                            f"{sorted(back)}")
+        for key, p in self._prefix.items():
+            if p["refs"] < 0:
+                problems.append(f"prefix {key!r} refcount {p['refs']} < 0")
+        for rid in self._owned:
+            if rid not in self._reserved:
+                problems.append(f"request {rid} owns blocks without a "
+                                "reservation")
+        for rid, n in self._reserved.items():
+            if rid not in self._owned:
+                problems.append(f"request {rid} reserved without an owned "
+                                "ledger")
+            elif (self.reservation == "worst"
+                    and len(self._owned[rid]) > n):
+                problems.append(f"request {rid} owns "
+                                f"{len(self._owned[rid])} blocks past its "
+                                f"worst-case reservation {n}")
+        return problems
 
     # -- shared prefixes ----------------------------------------------------
 
@@ -220,10 +354,18 @@ class BlockAllocator:
         self.peak_committed = max(self.peak_committed, self.committed)
         return list(p["blocks"])
 
-    def release_prefix(self, key) -> None:
+    def release_prefix(self, key, missing_ok: bool = False) -> None:
+        """Drop one reference on a cached prefix. `missing_ok=True` makes
+        the release idempotent — a prefix already reclaimed under
+        pressure, or already fully released (the eviction-requeue /
+        cancellation race), is a no-op instead of a corruption. Without
+        it an unbalanced release raises `NegativeRefcount`."""
         p = self._prefix.get(key)
         if p is None or p["refs"] <= 0:
-            raise RuntimeError(f"prefix {key!r} refcount would go negative")
+            if missing_ok:
+                return
+            raise NegativeRefcount(
+                f"prefix {key!r} refcount would go negative")
         p["refs"] -= 1
 
     def prefix_refs(self, key) -> int:
@@ -233,10 +375,11 @@ class BlockAllocator:
         return -1 if p is None else p["refs"]
 
     def _reclaim(self) -> bool:
-        """Drop the oldest refcount-0 cached prefix back to the free list."""
+        """Drop the oldest refcount-0 cached prefix back to the free list
+        (shrink debt may swallow some or all of its blocks)."""
         for key, p in self._prefix.items():
             if p["refs"] == 0:
-                self._free.extend(p["blocks"])
+                self._free.extend(self._absorb(p["blocks"]))
                 del self._prefix[key]
                 return True
         return False
@@ -301,6 +444,147 @@ class Completion:
         return self.first_token - self.arrival
 
 
+@dataclasses.dataclass(frozen=True)
+class Cancellation:
+    """A request the engine gave up on, with its resources cleanly
+    returned (blocks freed, prefix refs released) and the cause
+    surfaced. Reasons: "deadline" (per-request deadline expired), "shed"
+    (the backpressure rung rejected the arrival), "chaos" (fault-plan
+    injected cancel), "capacity" (after a budget shrink the request can
+    never fit the pool again)."""
+    rid: int
+    tick: int
+    reason: str
+    arrival: int = 0
+    tokens: Tuple[int, ...] = ()     # emitted before the cut (never sent)
+
+
+# Degradation-ladder rungs, mildest first. Rung k being engaged means
+# rungs 1..k are all active.
+RUNG_TIGHTEN_PREFILL = 1
+RUNG_KV_BEND = 2
+RUNG_EVICT = 3
+RUNG_SHED = 4
+RUNG_NAMES = {0: "normal", 1: "tighten_prefill", 2: "kv_bend",
+              3: "evict", 4: "shed"}
+
+
+@dataclasses.dataclass(frozen=True)
+class LadderConfig:
+    """The graceful-degradation ladder: what the engine trades away, in
+    order, when the capacity model turns out wrong (sustained pool
+    pressure — a budget shrink, optimistic admission overshooting, a
+    burst past the plan). Pressure = `committed >= high * pool` held for
+    `patience` consecutive ticks escalates one rung; the same patience
+    without pressure de-escalates. Rungs:
+
+      1 tighten_prefill — halve the prefill token budget (floored at one
+        chunk / `prefill_floor`): TTFT degrades, decode goodput survives.
+      2 kv_bend — engage block retention at `bend_retain` blocks per
+        lane, but ONLY if `bend_agreement` (the plan's prior for that
+        bend) clears `min_agreement`: quality is traded inside the same
+        gate the planner enforces, never blindly.
+      3 evict — proactively evict (SLO order) while commitments overhang
+        the shrunken pool.
+      4 shed — reject new arrivals with an explicit `Cancellation`
+        (reason "shed"): backpressure instead of silent queue growth.
+    """
+    patience: int = 3
+    high: float = 0.95
+    prefill_floor: int = 0
+    bend_retain: int = 0
+    bend_agreement: float = 1.0
+    min_agreement: float = 0.0
+    max_rung: int = RUNG_SHED
+
+
+@dataclasses.dataclass
+class EngineSnapshot:
+    """Drain-and-serialize engine state between two ticks — the
+    preemption / re-mesh hook (ROADMAP item 5). In-flight lanes are
+    serialized as resume records (request + emitted tokens): restore
+    re-enters them through the same chunked re-prefill path eviction
+    uses, so NO physical pool contents cross the snapshot — the
+    suffix-consistent executor regenerates the KV token-identically on
+    any fresh allocator/executor (even a different lane count). JSON
+    round-trips via `to_json`/`from_json`."""
+    tick: int
+    requests: List[Dict]             # serialized unfinished Requests
+    pending: List[int]               # rids not yet arrived, in order
+    queue: List[int]                 # rids queued, in order
+    lanes: List[Optional[Dict]]      # per-slot resume record or None
+    resume: Dict[int, Dict]          # evicted-and-requeued resume records
+    completions: List[Dict]
+    cancellations: List[Dict]
+    counters: Dict[str, int]
+    evictions: int = 0
+    ladder: Optional[Dict] = None    # rung/hot/cool/events/rung_ticks
+    stats: Optional[Dict] = None     # OnlineLengthStats state
+    config: Dict = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "EngineSnapshot":
+        d = json.loads(s)
+        d["resume"] = {int(k): v for k, v in d.get("resume", {}).items()}
+        if d.get("ladder") and d["ladder"].get("rung_ticks"):
+            d["ladder"]["rung_ticks"] = {
+                int(k): v for k, v in d["ladder"]["rung_ticks"].items()}
+        return cls(**d)
+
+
+# counters mirrored between _RunState and EngineSnapshot/ServeReport
+_COUNTER_FIELDS = (
+    "decode_ticks", "useful", "idle", "admit_only", "lane_tokens",
+    "chunk_calls", "block_drops", "peak_queue", "max_concurrent",
+    "prefills", "prefill_calls", "prefill_tokens", "shed", "exec_faults",
+    "backoff_ticks", "alloc_faults", "shrunk", "audits", "audit_failures")
+
+
+@dataclasses.dataclass
+class _RunState:
+    """All mutable state of one trace replay — the unit snapshot/restore
+    serializes and `_step` advances one tick at a time."""
+    pending: Deque[Request]
+    queue: Deque[Request]
+    slots: List[Optional[_Active]]
+    completions: List[Completion]
+    cancellations: List[Cancellation]
+    tick: int = 0
+    decode_ticks: int = 0
+    useful: int = 0
+    idle: int = 0
+    admit_only: int = 0
+    lane_tokens: int = 0
+    chunk_calls: int = 0
+    block_drops: int = 0
+    peak_queue: int = 0
+    max_concurrent: int = 0
+    prefills: int = 0
+    prefill_calls: int = 0
+    prefill_tokens: int = 0
+    # fault handling
+    exec_wait: int = 0               # backoff ticks left before retrying
+    exec_fails: int = 0              # CONSECUTIVE transient exec faults
+    exec_faults: int = 0             # total transient exec faults absorbed
+    backoff_ticks: int = 0           # ticks spent waiting out backoff
+    alloc_faults: int = 0            # transient allocation faults absorbed
+    shed: int = 0                    # arrivals rejected by rung 4
+    shrunk: int = 0                  # blocks retired by budget shrinks
+    audits: int = 0
+    audit_failures: int = 0
+    stalled: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # degradation ladder
+    rung: int = 0
+    max_rung: int = 0
+    hot: int = 0                     # consecutive pressured ticks
+    cool: int = 0                    # consecutive unpressured ticks
+    ladder_events: List[Dict] = dataclasses.field(default_factory=list)
+    rung_ticks: Dict[int, int] = dataclasses.field(default_factory=dict)
+
+
 def _percentile(vals: Sequence[float], q: float) -> float:
     """Nearest-rank percentile (deterministic, no interpolation)."""
     if not vals:
@@ -340,6 +624,22 @@ class ServeReport:
                                  # chunked), so prefill work is visible in
                                  # occupancy accounting instead of folded
                                  # into admit ticks
+    # fault tolerance (all zero / empty on a fault-free run)
+    cancellations: List[Cancellation] = dataclasses.field(
+        default_factory=list)    # deadline / shed / chaos / capacity
+    shed: int = 0                # arrivals rejected by the backpressure rung
+    exec_faults: int = 0         # transient executor faults absorbed
+    backoff_ticks: int = 0       # ticks spent waiting out retry backoff
+    alloc_faults: int = 0        # transient allocation faults absorbed
+    shrunk_blocks: int = 0       # blocks retired by mid-run budget shrinks
+    audits: int = 0              # ledger audits run
+    audit_failures: int = 0      # audits that found a broken invariant
+    degradation: Dict = dataclasses.field(default_factory=dict)
+                                 # ladder engagement: max/final rung,
+                                 # per-rung tick counts, cause-tagged events
+    observed_lengths: Dict = dataclasses.field(default_factory=dict)
+                                 # OnlineLengthStats.summary() — the live
+                                 # sigma_k feedback loop (ROADMAP item 2)
 
     @property
     def generated_tokens(self) -> int:
@@ -405,6 +705,25 @@ class ServeReport:
         if self.prefill_tokens:
             paged += (f" prefill_tokens={self.prefill_tokens} "
                       f"({self.prefill_throughput():.2f} tok/tick)")
+        if self.cancellations:
+            by = {}
+            for c in self.cancellations:
+                by[c.reason] = by.get(c.reason, 0) + 1
+            paged += " cancelled=" + ",".join(
+                f"{k}:{v}" for k, v in sorted(by.items()))
+        if self.exec_faults or self.alloc_faults:
+            paged += (f" faults(exec={self.exec_faults},"
+                      f"alloc={self.alloc_faults})"
+                      f" backoff={self.backoff_ticks}")
+        if self.shrunk_blocks:
+            paged += f" shrunk={self.shrunk_blocks}"
+        if self.degradation.get("max_rung"):
+            paged += (f" rung_max={self.degradation.get('max_rung_name')}"
+                      f"({self.degradation.get('max_rung')})")
+        if self.audit_failures:
+            paged += f" AUDIT_FAILURES={self.audit_failures}"
+        elif self.audits:
+            paged += f" audits={self.audits}:clean"
         lp = self.latency_percentiles()
         tp = self.ttft_percentiles()
         tails = (f"lat_p50/p95/p99={lp['p50']:.0f}/{lp['p95']:.0f}/"
@@ -556,7 +875,10 @@ class Engine:
                  chunk_prefill: int = 0, prefill_budget: int = 0,
                  prefix_share: bool = False,
                  stats: Optional[LengthStats] = None,
-                 sigma_k: float = 1.0, kv_retain: int = 0):
+                 sigma_k: float = 1.0, kv_retain: int = 0,
+                 deadline: int = 0, faults=None,
+                 ladder: Optional[LadderConfig] = None,
+                 audit: str = "off", max_exec_retries: int = 6):
         if n_slots < 1:
             raise ValueError(f"Engine needs n_slots >= 1, got {n_slots} "
                              "(serving_capacity said nothing fits — lower "
@@ -597,6 +919,24 @@ class Engine:
         if kv_retain and allocator is None:
             raise ValueError("kv_retain needs a BlockAllocator (retention "
                              "drops paged blocks back to the free list)")
+        if deadline < 0:
+            raise ValueError(f"deadline must be >= 0 ticks, got {deadline}")
+        if audit not in AUDIT_MODES:
+            raise ValueError(f"unknown audit mode {audit!r}; known: "
+                             f"{AUDIT_MODES}")
+        if audit != "off" and allocator is None:
+            raise ValueError("audit needs a BlockAllocator (the auditor "
+                             "checks the block ledger)")
+        if max_exec_retries < 1:
+            raise ValueError(f"max_exec_retries must be >= 1, got "
+                             f"{max_exec_retries}")
+        if ladder is not None and allocator is None:
+            raise ValueError("the degradation ladder reads pool pressure "
+                             "off a BlockAllocator (committed vs n_blocks)")
+        if (faults is not None and allocator is None
+                and getattr(faults, "shrinks", ())):
+            raise ValueError("fault-plan budget shrinks need a "
+                             "BlockAllocator (they retire pool blocks)")
         self.executor = executor
         self.n_slots = int(n_slots)
         self.policy = policy
@@ -615,11 +955,22 @@ class Engine:
         # keep only the kv_retain most-attended own blocks per lane (plus
         # the tail block being written); 0 = keep everything
         self.kv_retain = int(kv_retain)
+        # fault tolerance: per-request deadline in ticks from arrival
+        # (0 = none), a duck-typed FaultPlan (serving.faults) whose
+        # shrinks/cancels/stalls the engine applies at their ticks, the
+        # degradation ladder, the ledger audit mode, and the consecutive
+        # transient-executor-fault budget before EngineFault
+        self.deadline = int(deadline)
+        self.faults = faults
+        self.ladder = ladder
+        self.audit_mode = audit
+        self.max_exec_retries = int(max_exec_retries)
         # per-run state (reset by run()): rid -> resume record after an
         # eviction; prefix key -> {"ready": bool, "writer": rid|None}
         self._resume: Dict[int, Dict] = {}
         self._prefix_state: Dict[object, Dict] = {}
         self._evictions = 0
+        self._st: Optional[_RunState] = None
 
     # -- admission sizing ---------------------------------------------------
 
@@ -665,6 +1016,13 @@ class Engine:
         avail = alloc.available_blocks if alloc is not None else 0
         picked: List[Tuple] = []   # (slot, req, eff_prompt, meta, seed, key)
         for i in range(self.n_slots):
+            # a mid-run shrink can leave a queued request that no longer
+            # fits the pool at ANY occupancy — cancel it (reason
+            # "capacity") instead of deadlocking the FIFO head
+            while (queue and alloc is not None and self._st is not None
+                    and alloc.blocks_for(queue[0]) > alloc.n_blocks):
+                bad = queue.popleft()
+                self._cancel_queued(self._st, bad, "capacity")
             if not queue:
                 break
             if slots[i] is not None:
@@ -768,21 +1126,48 @@ class Engine:
             return len(picked), 0, 0
         alloc = self.allocator
         calls = tokens = 0
+        failed: List[Request] = []     # rolled-back picks, requeued at head
         for plen in sorted(by_len):
             group = by_len[plen]
-            lanes = [item[0] for item in group]
-            prompts = [item[2] for item in group]
             tables = None
             if alloc is not None:
-                tables = []
-                for i, req, eff, meta, seed, key, writer, _ in group:
+                kept, tables = [], []
+                for item in group:
+                    i, req, eff, meta, seed, key, writer, _ = item
                     nb0 = max(-(-plen // alloc.block_size), 1)
                     tbl = list(seed)
-                    while len(tbl) < nb0:
-                        tbl.append(alloc.alloc(req.rid))
+                    try:
+                        while len(tbl) < nb0:
+                            tbl.append(alloc.alloc(req.rid))
+                    except AllocationFault:
+                        # transient refusal: unwind THIS pick exactly and
+                        # retry it from the queue head next tick
+                        if self._st is not None:
+                            self._st.alloc_faults += 1
+                        self._unadmit(req, meta, key, writer)
+                        failed.append(req)
+                        continue
+                    kept.append(item)
                     tables.append(tbl)
-            firsts = self.executor.prefill_batch(lanes, prompts,
-                                                 tables=tables)
+                group = kept
+                if not group:
+                    continue
+            lanes = [item[0] for item in group]
+            prompts = [item[2] for item in group]
+            try:
+                firsts = self.executor.prefill_batch(lanes, prompts,
+                                                     tables=tables)
+            except TransientExecutorError:
+                # raised before the executor mutated anything: unwind the
+                # whole group, arm backoff, replay the identical calls later
+                for i, req, eff, meta, seed, key, writer, _ in group:
+                    self._unadmit(req, meta, key, writer)
+                    failed.append(req)
+                if self._st is not None:
+                    self._exec_fault(self._st)
+                continue
+            if self._st is not None:
+                self._st.exec_fails = 0
             calls += 1
             tokens += plen * len(group)
             for gi, (i, req, eff, meta, seed, key, writer, _) \
@@ -800,10 +1185,181 @@ class Engine:
                 if key is not None and writer:
                     # whole-prompt prefill wrote the prefix blocks in full
                     self._prefix_state[key]["ready"] = True
-        return len(picked), calls, tokens
+        for req in reversed(failed):
+            queue.appendleft(req)
+        return len(picked) - len(failed), calls, tokens
 
-    def _retain(self, a: _Active, mass: Optional[Sequence[float]]) -> int:
-        """Enforce the retention cap on one lane: keep the `kv_retain`
+    # -- fault handling -----------------------------------------------------
+
+    def _unadmit(self, req: Request, meta: Optional[Dict], key,
+                 writer: bool) -> None:
+        """Unwind one `_admit` pick (transient fault mid-admission): drop
+        the reservation and any blocks it already took, release the prefix
+        reference, restore the resume record — exactly as if the pick
+        never happened. The caller requeues the request at the head."""
+        alloc = self.allocator
+        if alloc is not None:
+            alloc.free(req.rid)
+            if key is not None:
+                alloc.release_prefix(key, missing_ok=True)
+                stp = self._prefix_state.get(key)
+                if (writer and stp is not None
+                        and stp["writer"] == req.rid and not stp["ready"]):
+                    stp["writer"] = None
+        if meta is not None:
+            self._resume[req.rid] = meta
+
+    def _exec_fault(self, st: _RunState) -> None:
+        """One executor call failed transiently. Arm exponential backoff —
+        the engine skips ALL executor work for 2^(k-1) ticks (capped at
+        32) after the k-th consecutive fault — and give up with
+        `EngineFault` past `max_exec_retries` consecutive failures. Any
+        success resets the streak."""
+        st.exec_faults += 1
+        st.exec_fails += 1
+        if st.exec_fails > self.max_exec_retries:
+            raise EngineFault(
+                f"{st.exec_fails} consecutive transient executor faults "
+                f"(max_exec_retries={self.max_exec_retries})")
+        st.exec_wait = min(2 ** (st.exec_fails - 1), 32)
+
+    def _cancel_queued(self, st: _RunState, req: Request,
+                       reason: str) -> None:
+        """Cancel a request that holds no lane (queued, shed at arrival,
+        or evicted-and-requeued — its resume record is dropped too)."""
+        meta = self._resume.pop(req.rid, None)
+        toks = tuple(meta["tokens"]) if meta else ()
+        st.cancellations.append(Cancellation(
+            rid=req.rid, tick=st.tick, reason=reason,
+            arrival=req.arrival, tokens=toks))
+
+    def _cancel_lane(self, st: _RunState, i: int, reason: str) -> None:
+        """Cancel the request on lane `i` cleanly: blocks freed, prefix
+        reference released (idempotently — the prefix may already be
+        reclaimed), writer handoff if it was mid-prefix-prefill."""
+        a = st.slots[i]
+        alloc = self.allocator
+        if alloc is not None:
+            alloc.free(a.req.rid)
+            if a.prefix_key is not None:
+                alloc.release_prefix(a.prefix_key, missing_ok=True)
+                stp = self._prefix_state.get(a.prefix_key)
+                if (stp is not None and stp["writer"] == a.req.rid
+                        and not stp["ready"]):
+                    stp["writer"] = None
+        emitted = tuple(a.tokens) if a.tokens else tuple(a.prior)
+        st.cancellations.append(Cancellation(
+            rid=a.req.rid, tick=st.tick, reason=reason,
+            arrival=a.req.arrival, tokens=emitted))
+        st.slots[i] = None
+
+    def _cancel_rid(self, st: _RunState, rid: int, reason: str) -> bool:
+        """Cancel a request wherever it currently lives (lane, queue, or
+        not-yet-arrived). False if already finished/cancelled/unknown."""
+        for i in range(self.n_slots):
+            a = st.slots[i]
+            if a is not None and a.req.rid == rid:
+                self._cancel_lane(st, i, reason)
+                return True
+        for q in (st.queue, st.pending):
+            for req in q:
+                if req.rid == rid:
+                    q.remove(req)
+                    self._cancel_queued(st, req, reason)
+                    return True
+        return False
+
+    def _sweep_deadlines(self, st: _RunState) -> None:
+        """Cancel every request whose per-request deadline (ticks since
+        arrival) has expired, wherever it lives."""
+        for i in range(self.n_slots):
+            a = st.slots[i]
+            if a is not None and st.tick - a.req.arrival >= self.deadline:
+                self._cancel_lane(st, i, "deadline")
+        expired = [r for r in st.queue
+                   if st.tick - r.arrival >= self.deadline]
+        for r in expired:
+            st.queue.remove(r)
+            self._cancel_queued(st, r, "deadline")
+
+    # -- degradation ladder -------------------------------------------------
+
+    def _ladder_update(self, st: _RunState) -> None:
+        """Escalate/de-escalate the rung on sustained pool pressure
+        (committed >= high * pool for `patience` ticks either way)."""
+        lad = self.ladder
+        alloc = self.allocator
+        if lad is None or alloc is None:
+            return
+        pressured = alloc.committed >= lad.high * alloc.n_blocks
+        if pressured:
+            st.hot += 1
+            st.cool = 0
+            if st.hot >= lad.patience and st.rung < lad.max_rung:
+                st.hot = 0
+                st.rung += 1
+                st.max_rung = max(st.max_rung, st.rung)
+                st.ladder_events.append({
+                    "tick": st.tick, "rung": st.rung,
+                    "name": RUNG_NAMES[st.rung], "cause": "pressure",
+                    "committed": alloc.committed, "pool": alloc.n_blocks})
+        else:
+            st.cool += 1
+            st.hot = 0
+            if st.cool >= lad.patience and st.rung > 0:
+                st.cool = 0
+                st.rung -= 1
+                st.ladder_events.append({
+                    "tick": st.tick, "rung": st.rung,
+                    "name": RUNG_NAMES[st.rung], "cause": "recovered",
+                    "committed": alloc.committed, "pool": alloc.n_blocks})
+        if st.rung:
+            st.rung_ticks[st.rung] = st.rung_ticks.get(st.rung, 0) + 1
+
+    def _eff_retain(self, st: Optional[_RunState]) -> int:
+        """The retention cap in force: the configured `kv_retain`, or the
+        ladder's `bend_retain` once rung 2 is engaged AND its agreement
+        prior clears the `min_agreement` gate (quality is only ever traded
+        inside the gate the planner enforces)."""
+        if self.kv_retain:
+            return self.kv_retain
+        lad = self.ladder
+        if (lad is not None and st is not None
+                and st.rung >= RUNG_KV_BEND and lad.bend_retain > 0
+                and lad.bend_agreement >= lad.min_agreement):
+            return lad.bend_retain
+        return 0
+
+    def _eff_budget(self, st: Optional[_RunState]) -> int:
+        """The prefill token budget in force: halved (floored at one chunk
+        / `prefill_floor`) once rung 1 is engaged. An unbudgeted engine
+        under rung 1 gets 4 chunks halved to 2 — TTFT degrades before
+        decode goodput does."""
+        lad = self.ladder
+        if (lad is None or st is None or st.rung < RUNG_TIGHTEN_PREFILL
+                or not self.chunk_prefill):
+            return self.prefill_budget
+        base = self.prefill_budget or 4 * self.chunk_prefill
+        floor = max(self.chunk_prefill, lad.prefill_floor)
+        return max(floor, base // 2)
+
+    def _audit(self, st: _RunState) -> None:
+        """The every-tick ledger audit: "strict" fails fast (tests),
+        "count" degrades to a `ServeReport.audit_failures` counter
+        (production), "off" skips entirely."""
+        if self.audit_mode == "off" or self.allocator is None:
+            return
+        st.audits += 1
+        problems = self.allocator.audit()
+        if problems:
+            st.audit_failures += 1
+            if self.audit_mode == "strict":
+                raise LedgerCorruption(
+                    f"tick {st.tick}: " + "; ".join(problems))
+
+    def _retain(self, a: _Active, mass: Optional[Sequence[float]],
+                retain: int) -> int:
+        """Enforce the retention cap on one lane: keep the `retain`
         most-attended OWN blocks plus the tail block being written, free
         the rest back to the allocator (their table entries go -1 =
         unassigned, so decode masks them — H2O-style block dropping).
@@ -816,7 +1372,7 @@ class Engine:
         tail = max(a.pos - 1, 0) // alloc.block_size
         live = [j for j in range(len(a.table))
                 if a.table[j] >= 0 and j >= a.shared and j != tail]
-        if len(live) <= self.kv_retain:
+        if len(live) <= retain:
             return 0
 
         def key(j):
@@ -824,7 +1380,7 @@ class Engine:
                  else 0.0)
             return (m, j)
 
-        drop = sorted(live, key=key)[:len(live) - self.kv_retain]
+        drop = sorted(live, key=key)[:len(live) - retain]
         for j in drop:
             alloc.free_block(a.req.rid, a.table[j])
             a.table[j] = -1
@@ -870,34 +1426,42 @@ class Engine:
 
     def _alloc_through(self, slots: List[Optional[_Active]], i: int,
                        last_block: int, queue: Deque[Request],
-                       fresh: List[int]) -> bool:
+                       fresh: List[int]) -> int:
         """Grow lane `i`'s table until it covers logical block
-        `last_block`, evicting on pool exhaustion. Returns False if lane
-        `i` evicted ITSELF (the caller must drop it this tick)."""
+        `last_block`, evicting on pool exhaustion. Returns 1 on success,
+        0 if lane `i` evicted ITSELF (the caller must drop it this tick),
+        -1 if a transient `AllocationFault` DEFERRED the lane to the next
+        tick (its table is left short; nothing was lost — compare against
+        these constants, not truthiness)."""
         a = slots[i]
         alloc = self.allocator
         while last_block >= len(a.table):
             try:
                 bid = alloc.alloc(a.req.rid)
+            except AllocationFault:
+                if self._st is not None:
+                    self._st.alloc_faults += 1
+                return -1
             except PoolExhausted:
                 v = self._pick_victim(slots)
                 self._evict(slots, v, queue)
                 if v == i:
-                    return False
+                    return 0
                 continue
             a.table.append(bid)
             fresh.append(bid)
-        return True
+        return 1
 
     def _schedule_chunks(self, slots: List[Optional[_Active]],
-                         lanes: List[int]) -> List[int]:
+                         lanes: List[int], budget: int) -> List[int]:
         """Pick which mid-prefill lanes advance this tick under the token
-        budget. No budget: all of them. With one: interleave chunks
+        budget (the configured `prefill_budget`, or the ladder-tightened
+        one). No budget: all of them. With one: interleave chunks
         round-robin over SLO classes (tightest class leads each round,
         FIFO by admission within a class) and grant whole chunks in that
         order until the budget is spent — the first grant is unconditional
         so a budget below the chunk size still makes progress."""
-        if not self.prefill_budget:
+        if not budget:
             return lanes
         by_class: Dict[int, List[int]] = {}
         for i in lanes:
@@ -916,7 +1480,7 @@ class Engine:
         spent = 0
         for i in order:
             cost = min(len(slots[i].pending), self.chunk_prefill)
-            if picked and spent + cost > self.prefill_budget:
+            if picked and spent + cost > budget:
                 break
             picked.append(i)
             spent += cost
@@ -930,11 +1494,14 @@ class Engine:
         `prefill_budget`-token fair share picked by _schedule_chunks. A
         lane whose final chunk lands gets its first token and decode
         cursor. Returns (chunk calls made (0/1), chunk tokens issued)."""
+        stalled = self._st.stalled if self._st is not None else {}
         lanes = [i for i in range(self.n_slots)
-                 if slots[i] is not None and slots[i].pending]
+                 if slots[i] is not None and slots[i].pending
+                 and stalled.get(i, 0) <= 0]
         if not lanes:
             return 0, 0
-        lanes = self._schedule_chunks(slots, lanes)
+        lanes = self._schedule_chunks(slots, lanes,
+                                      self._eff_budget(self._st))
         alloc = self.allocator
         chunks, starts, tables, final, live = [], [], [], [], []
         fresh: List[int] = []
@@ -948,10 +1515,11 @@ class Engine:
             c = a.pending[:self.chunk_prefill]
             if alloc is not None:
                 last = start + len(c) - 1
-                if not self._alloc_through(slots, i,
-                                           last // alloc.block_size,
-                                           queue, fresh):
-                    continue             # evicted itself: chunk not issued
+                if self._alloc_through(slots, i, last // alloc.block_size,
+                                       queue, fresh) != 1:
+                    continue             # evicted itself (0) or deferred
+                                         # by a transient fault (-1):
+                                         # chunk not issued this tick
             a.pending = a.pending[self.chunk_prefill:]
             live.append(i)
             chunks.append(c)
@@ -962,9 +1530,22 @@ class Engine:
             return 0, 0
         if fresh:
             self.executor.fresh_blocks(fresh)
-        firsts = self.executor.prefill_chunks(
-            live, chunks, starts,
-            tables=(tables if alloc is not None else None), final=final)
+        try:
+            firsts = self.executor.prefill_chunks(
+                live, chunks, starts,
+                tables=(tables if alloc is not None else None), final=final)
+        except TransientExecutorError:
+            # raised before the executor consumed the chunks: push them
+            # back onto their lanes and arm backoff — the identical call
+            # replays after the wait (blocks already grown stay grown)
+            for j, i in enumerate(live):
+                a = slots[i]
+                a.pending = tuple(chunks[j]) + tuple(a.pending)
+            if self._st is not None:
+                self._exec_fault(self._st)
+            return 0, 0
+        if self._st is not None:
+            self._st.exec_fails = 0
         for j, i in enumerate(live):
             a = slots[i]
             if final[j]:
@@ -977,8 +1558,11 @@ class Engine:
                         st["ready"] = True   # prefix KV fully written
         return 1, sum(len(c) for c in chunks)
 
-    def run(self, trace: Sequence[Request],
-            max_ticks: int = 1_000_000) -> ServeReport:
+    def run(self, trace: Sequence[Request], max_ticks: int = 1_000_000,
+            stop_tick: Optional[int] = None) -> ServeReport:
+        """Replay `trace` to completion. `stop_tick` suspends the run at
+        that tick instead (the partial report is returned and the state
+        stays live for `snapshot()`)."""
         for r in trace:                      # fail fast, not at max_ticks
             if r.max_new < 1 or not r.prompt:
                 raise ValueError(f"request {r.rid}: needs a non-empty "
@@ -992,59 +1576,132 @@ class Engine:
                     f"KV blocks but the pool holds "
                     f"{self.allocator.n_blocks} — it could never be "
                     "admitted (raise the budget or shrink the context)")
+        st = self._start(trace)
+        return self._loop(st, max_ticks, stop_tick)
+
+    def _start(self, trace: Sequence[Request]) -> _RunState:
         pending: Deque[Request] = collections.deque(
             sorted(trace, key=lambda r: (r.arrival, r.rid)))
-        queue: Deque[Request] = collections.deque()
-        slots: List[Optional[_Active]] = [None] * self.n_slots
-        completions: List[Completion] = []
-        tick = decode_ticks = useful = idle = 0
-        admit_only = lane_tokens = chunk_calls = block_drops = 0
-        peak_queue = max_concurrent = prefills = prefill_calls = 0
-        prefill_tokens = 0
-        alloc = self.allocator
+        st = _RunState(pending=pending, queue=collections.deque(),
+                       slots=[None] * self.n_slots, completions=[],
+                       cancellations=[])
         self._resume = {}
         self._prefix_state = {}
         self._evictions = 0
+        self._st = st
+        return st
 
-        def finish(i: int, when: int) -> None:
-            a = slots[i]
-            ft = a.first_token if a.first_token >= 0 else when
-            completions.append(Completion(
-                rid=a.req.rid, tokens=tuple(a.tokens),
-                arrival=a.req.arrival, admitted=a.admitted, finished=when,
-                first_token=ft))
-            if alloc is not None:
-                alloc.free(a.req.rid)
-                if a.prefix_key is not None:
-                    alloc.release_prefix(a.prefix_key)
-            slots[i] = None
-
-        while pending or queue or any(s is not None for s in slots):
-            if tick >= max_ticks:
+    def _loop(self, st: _RunState, max_ticks: int,
+              stop_tick: Optional[int]) -> ServeReport:
+        while st.pending or st.queue or any(s is not None
+                                            for s in st.slots):
+            if stop_tick is not None and st.tick >= stop_tick:
+                break
+            if st.tick >= max_ticks:
                 raise RuntimeError(f"engine exceeded max_ticks={max_ticks}")
-            ev0 = self._evictions
-            while pending and pending[0].arrival <= tick:
-                queue.append(pending.popleft())
-            admitted, calls, ptoks = self._admit(queue, slots, tick)
-            prefills += admitted
-            prefill_calls += calls
-            prefill_tokens += ptoks
-            chunked, ctoks = (self._advance_chunks(slots, queue)
-                              if self.chunk_prefill else (0, 0))
-            chunk_calls += chunked
-            prefill_tokens += ctoks
-            peak_queue = max(peak_queue, len(queue))
-            concurrent = sum(s is not None for s in slots)
-            max_concurrent = max(max_concurrent, concurrent)
+            self._step(st)
+        return self._report(st)
+
+    def _finish(self, st: _RunState, i: int, when: int) -> None:
+        a = st.slots[i]
+        ft = a.first_token if a.first_token >= 0 else when
+        st.completions.append(Completion(
+            rid=a.req.rid, tokens=tuple(a.tokens),
+            arrival=a.req.arrival, admitted=a.admitted, finished=when,
+            first_token=ft))
+        alloc = self.allocator
+        if alloc is not None:
+            alloc.free(a.req.rid)
+            if a.prefix_key is not None:
+                alloc.release_prefix(a.prefix_key)
+        st.slots[i] = None
+        if self.stats is not None and hasattr(self.stats, "observe"):
+            # observed completion lengths feed the optimistic-admission
+            # stats online — the next reservation's E[blocks] + k·sigma
+            # tracks the live workload, not just the profiled trace
+            self.stats.observe(len(a.req.prompt),
+                               len(a.req.prompt) + a.req.max_new - 1)
+
+    def _step(self, st: _RunState) -> None:
+        """One engine tick: fault-plan events → deadline sweep → arrivals
+        (shed under rung 4) → ladder update → proactive eviction →
+        admission / prefill chunks / batched decode (all executor work
+        skipped while retry backoff is armed) → retention → audit."""
+        alloc = self.allocator
+        ev0 = self._evictions
+        canc0 = len(st.cancellations)
+        af0 = st.alloc_faults
+        event = False
+        fp = self.faults
+        if fp is not None:
+            for t, frac in (getattr(fp, "shrinks", ()) or ()):
+                if t == st.tick and alloc is not None:
+                    n = min(int(frac * alloc.n_blocks), alloc.n_blocks - 1)
+                    if n > 0:
+                        alloc.shrink(n)
+                        st.shrunk += n
+                        event = True
+            for t, rid in (getattr(fp, "cancels", ()) or ()):
+                if t == st.tick and self._cancel_rid(st, rid, "chaos"):
+                    event = True
+            for t, lane, dur in (getattr(fp, "stalls", ()) or ()):
+                if t == st.tick and 0 <= lane < self.n_slots and dur > 0:
+                    st.stalled[lane] = max(st.stalled.get(lane, 0), dur)
+                    event = True
+        if self.deadline:
+            self._sweep_deadlines(st)
+        while st.pending and st.pending[0].arrival <= st.tick:
+            req = st.pending.popleft()
+            if st.rung >= RUNG_SHED:
+                st.shed += 1
+                self._cancel_queued(st, req, "shed")
+            else:
+                st.queue.append(req)
+        self._ladder_update(st)
+        if (self.ladder is not None and st.rung >= RUNG_EVICT
+                and alloc is not None
+                and alloc.committed > alloc.n_blocks):
+            # rung 3: commitments overhang the (shrunken) pool — evict one
+            # victim per tick proactively instead of waiting for the free
+            # list to run dry mid-decode
+            occ = sum(s is not None for s in st.slots)
+            if occ >= 2:         # never thrash the only lane in and out
+                self._evict(st.slots, self._pick_victim(st.slots),
+                            st.queue)
+        admitted = chunked = 0
+        decoded = False
+        waiting = st.exec_wait > 0
+        if waiting:
+            st.exec_wait -= 1
+            st.backoff_ticks += 1
+            st.peak_queue = max(st.peak_queue, len(st.queue))
+        else:
+            admitted, calls, ptoks = self._admit(st.queue, st.slots,
+                                                 st.tick)
+            st.prefills += admitted
+            st.prefill_calls += calls
+            st.prefill_tokens += ptoks
+            if self.chunk_prefill and not st.exec_wait:
+                chunked, ctoks = self._advance_chunks(st.slots, st.queue)
+                st.chunk_calls += chunked
+                st.prefill_tokens += ctoks
+            st.peak_queue = max(st.peak_queue, len(st.queue))
+            st.max_concurrent = max(st.max_concurrent,
+                                    sum(s is not None for s in st.slots))
             # single-token requests complete at admission (prefill emitted
             # their only token)
             for i in range(self.n_slots):
-                if (slots[i] is not None and not slots[i].pending
-                        and slots[i].remaining == 0):
-                    finish(i, tick)
-            # mid-prefill lanes hold a slot but have no decode cursor yet
+                if (st.slots[i] is not None and not st.slots[i].pending
+                        and st.slots[i].remaining == 0):
+                    self._finish(st, i, st.tick)
+            # mid-prefill lanes hold a slot but have no decode cursor yet;
+            # stalled lanes sit out the tick (their streams just pause)
             active = [i for i in range(self.n_slots)
-                      if slots[i] is not None and not slots[i].pending]
+                      if st.slots[i] is not None
+                      and not st.slots[i].pending
+                      and st.stalled.get(i, 0) <= 0]
+            if st.exec_wait:     # a fault mid-tick armed backoff
+                active = []
             if alloc is not None and active:
                 # allocate-on-decode-tick: a lane crossing into a new
                 # logical block gets a physical block from the free list
@@ -1053,78 +1710,236 @@ class Engine:
                 # re-linked blocks are invalidated first so a previous
                 # owner's positions can't leak through the mask
                 fresh: List[int] = []
+                kept: List[int] = []
                 for i in active:
-                    a = slots[i]
-                    if a is None or slots[i] is not a:
+                    a = st.slots[i]
+                    if a is None or st.slots[i] is not a:
                         continue         # evicted earlier this tick
-                    self._alloc_through(slots, i,
-                                        a.pos // alloc.block_size,
-                                        queue, fresh)
+                    if self._alloc_through(st.slots, i,
+                                           a.pos // alloc.block_size,
+                                           st.queue, fresh) == 1:
+                        kept.append(i)
                 if fresh:
                     self.executor.fresh_blocks(fresh)
-                active = [i for i in active if slots[i] is not None]
+                active = [i for i in kept if st.slots[i] is not None]
             if active:
-                tokens = [slots[i].tokens[-1]
-                          if slots[i] is not None and slots[i].tokens else 0
-                          for i in range(self.n_slots)]
-                positions = [slots[i].pos if slots[i] is not None else 0
-                             for i in range(self.n_slots)]
-                if alloc is not None:
-                    tables = [slots[i].table if slots[i] is not None else []
-                              for i in range(self.n_slots)]
-                    nxt = self.executor.decode(tokens, positions,
-                                               tables=tables, lanes=active)
-                else:
-                    nxt = self.executor.decode(tokens, positions,
-                                               lanes=active)
-                decode_ticks += 1
-                useful += len(active)
-                width_fn = getattr(self.executor, "decode_width", None)
-                width = width_fn(len(active)) if width_fn else None
-                lane_tokens += width if width is not None else self.n_slots
-                for i in active:
-                    a = slots[i]
-                    if a.first_token < 0:
-                        a.first_token = tick
-                    a.tokens.append(int(nxt[i]))
-                    a.pos += 1
-                    a.remaining -= 1
-                    if a.remaining == 0:
-                        finish(i, tick)
-                if alloc is not None and self.kv_retain:
-                    mass_fn = getattr(self.executor, "block_masses", None)
-                    masses = mass_fn() if mass_fn is not None else {}
+                tokens = [st.slots[i].tokens[-1]
+                          if st.slots[i] is not None and st.slots[i].tokens
+                          else 0 for i in range(self.n_slots)]
+                positions = [st.slots[i].pos if st.slots[i] is not None
+                             else 0 for i in range(self.n_slots)]
+                nxt = None
+                try:
+                    if alloc is not None:
+                        tables = [st.slots[i].table
+                                  if st.slots[i] is not None else []
+                                  for i in range(self.n_slots)]
+                        nxt = self.executor.decode(tokens, positions,
+                                                   tables=tables,
+                                                   lanes=active)
+                    else:
+                        nxt = self.executor.decode(tokens, positions,
+                                                   lanes=active)
+                except TransientExecutorError:
+                    self._exec_fault(st)  # nothing mutated: replay later
+                if nxt is not None:
+                    st.exec_fails = 0
+                    decoded = True
+                    st.decode_ticks += 1
+                    st.useful += len(active)
+                    width_fn = getattr(self.executor, "decode_width",
+                                       None)
+                    width = width_fn(len(active)) if width_fn else None
+                    st.lane_tokens += (width if width is not None
+                                       else self.n_slots)
                     for i in active:
-                        if slots[i] is not None:
-                            block_drops += self._retain(slots[i],
-                                                        masses.get(i))
-            elif admitted or chunked or self._evictions > ev0:
-                # at-admission completions / prompt chunks / evictions did
-                # real work this tick even though no decode ran — the
-                # taxonomy invariant is ticks == decode + admit + idle
-                admit_only += 1
-            else:
-                idle += 1        # pure waiting on arrivals
-            # first tokens emitted by prefill this tick
-            for i in range(self.n_slots):
-                a = slots[i]
-                if a is not None and a.tokens and a.first_token < 0:
-                    a.first_token = tick
-            tick += 1
+                        a = st.slots[i]
+                        if a.first_token < 0:
+                            a.first_token = st.tick
+                        a.tokens.append(int(nxt[i]))
+                        a.pos += 1
+                        a.remaining -= 1
+                        if a.remaining == 0:
+                            self._finish(st, i, st.tick)
+                    retain = self._eff_retain(st)
+                    if alloc is not None and retain:
+                        mass_fn = getattr(self.executor, "block_masses",
+                                          None)
+                        masses = mass_fn() if mass_fn is not None else {}
+                        for i in active:
+                            if st.slots[i] is not None:
+                                st.block_drops += self._retain(
+                                    st.slots[i], masses.get(i), retain)
+        if decoded:
+            pass
+        elif (waiting or event or admitted or chunked
+                or self._evictions > ev0 or len(st.cancellations) > canc0
+                or st.alloc_faults > af0 or st.exec_wait > 0
+                or st.stalled):
+            # admissions / chunks / evictions / cancellations / fault
+            # events / backoff waits did real work this tick even though
+            # no decode ran — the taxonomy invariant is
+            # ticks == decode + admit + idle
+            st.admit_only += 1
+        else:
+            st.idle += 1         # pure waiting on arrivals
+        for i in list(st.stalled):
+            st.stalled[i] -= 1
+            if st.stalled[i] <= 0:
+                del st.stalled[i]
+        # first tokens emitted by prefill this tick
+        for i in range(self.n_slots):
+            a = st.slots[i]
+            if a is not None and a.tokens and a.first_token < 0:
+                a.first_token = st.tick
+        self._audit(st)
+        st.tick += 1
 
-        completions.sort(key=lambda c: c.rid)
-        return ServeReport(policy=self.policy, n_slots=self.n_slots,
-                           completions=completions, ticks=tick,
-                           decode_ticks=decode_ticks,
-                           useful_slot_tokens=useful, idle_ticks=idle,
-                           peak_queue=peak_queue,
-                           max_concurrent=max_concurrent, prefills=prefills,
-                           prefill_calls=prefill_calls,
-                           n_blocks=(alloc.n_blocks if alloc else 0),
-                           peak_blocks=(alloc.peak_in_use if alloc else 0),
-                           admit_ticks=admit_only,
-                           decode_lane_tokens=lane_tokens,
-                           chunk_calls=chunk_calls,
-                           evictions=self._evictions,
-                           block_drops=block_drops,
-                           prefill_tokens=prefill_tokens)
+    def _report(self, st: _RunState) -> ServeReport:
+        alloc = self.allocator
+        st.completions.sort(key=lambda c: c.rid)
+        degradation: Dict = {}
+        if self.ladder is not None:
+            degradation = {
+                "max_rung": st.max_rung,
+                "max_rung_name": RUNG_NAMES.get(st.max_rung, "?"),
+                "final_rung": st.rung,
+                "rung_ticks": {RUNG_NAMES[k]: v
+                               for k, v in sorted(st.rung_ticks.items())},
+                "events": list(st.ladder_events)}
+        observed: Dict = {}
+        if self.stats is not None and hasattr(self.stats, "summary"):
+            observed = self.stats.summary()
+        return ServeReport(
+            policy=self.policy, n_slots=self.n_slots,
+            completions=list(st.completions), ticks=st.tick,
+            decode_ticks=st.decode_ticks, useful_slot_tokens=st.useful,
+            idle_ticks=st.idle, peak_queue=st.peak_queue,
+            max_concurrent=st.max_concurrent, prefills=st.prefills,
+            prefill_calls=st.prefill_calls,
+            n_blocks=(alloc.n_blocks if alloc else 0),
+            peak_blocks=(alloc.peak_in_use if alloc else 0),
+            admit_ticks=st.admit_only, decode_lane_tokens=st.lane_tokens,
+            chunk_calls=st.chunk_calls, evictions=self._evictions,
+            block_drops=st.block_drops, prefill_tokens=st.prefill_tokens,
+            cancellations=sorted(st.cancellations, key=lambda c: c.rid),
+            shed=st.shed, exec_faults=st.exec_faults,
+            backoff_ticks=st.backoff_ticks, alloc_faults=st.alloc_faults,
+            shrunk_blocks=st.shrunk, audits=st.audits,
+            audit_failures=st.audit_failures, degradation=degradation,
+            observed_lengths=observed)
+
+    # -- snapshot / restore -------------------------------------------------
+
+    def snapshot(self) -> EngineSnapshot:
+        """Serialize a suspended run (`run(..., stop_tick=...)`) so a
+        FRESH engine — new allocator, new executor, even a different lane
+        count — can `resume` it token-identically. In-flight lanes become
+        resume records (request + emitted tokens) that re-enter through
+        the eviction re-prefill path: the physical pool is
+        re-materialized on restore, never serialized."""
+        st = self._st
+        if st is None:
+            raise RuntimeError("no run to snapshot — suspend one first "
+                               "with run(trace, stop_tick=...)")
+        reqs: Dict[int, Request] = {}
+        for r in list(st.pending) + list(st.queue):
+            reqs[r.rid] = r
+        lanes: List[Optional[Dict]] = []
+        for a in st.slots:
+            if a is None:
+                lanes.append(None)
+                continue
+            reqs[a.req.rid] = a.req
+            emitted = list(a.tokens) if a.tokens else list(a.prior)
+            lanes.append({"rid": a.req.rid, "tokens": emitted,
+                          "admitted": a.admitted,
+                          "first_token": a.first_token})
+        resume = {int(rid): {"tokens": list(m["tokens"]),
+                             "admitted": m["admitted"],
+                             "first_token": m["first_token"]}
+                  for rid, m in self._resume.items()}
+        ladder = None
+        if self.ladder is not None:
+            ladder = {"rung": st.rung, "max_rung": st.max_rung,
+                      "hot": st.hot, "cool": st.cool,
+                      "events": list(st.ladder_events),
+                      "rung_ticks": dict(st.rung_ticks)}
+        stats_state = None
+        if self.stats is not None and hasattr(self.stats, "state_dict"):
+            stats_state = self.stats.state_dict()
+        return EngineSnapshot(
+            tick=st.tick,
+            requests=[dataclasses.asdict(reqs[k]) for k in sorted(reqs)],
+            pending=[r.rid for r in st.pending],
+            queue=[r.rid for r in st.queue],
+            lanes=lanes,
+            resume=resume,
+            completions=[dataclasses.asdict(c) for c in st.completions],
+            cancellations=[dataclasses.asdict(c)
+                           for c in st.cancellations],
+            counters={f: getattr(st, f) for f in _COUNTER_FIELDS},
+            evictions=self._evictions,
+            ladder=ladder,
+            stats=stats_state,
+            config={"n_slots": self.n_slots, "policy": self.policy,
+                    "chunk_prefill": self.chunk_prefill})
+
+    def resume(self, snap: EngineSnapshot, max_ticks: int = 1_000_000,
+               stop_tick: Optional[int] = None) -> ServeReport:
+        """Restore a snapshot onto THIS engine (built with a FRESH
+        allocator/executor) and run it to completion (or `stop_tick`).
+        Snapshot lanes re-enter via re-prefill of prompt + emitted
+        tokens, in slot order, ahead of the snapshot queue —
+        suffix-consistent executors make the continuation token-identical
+        to the uninterrupted run. Requests that no longer fit a smaller
+        restore pool are cancelled (reason "capacity"), not deadlocked."""
+        alloc = self.allocator
+        if alloc is not None and (alloc.in_use or alloc._reserved):
+            raise ValueError("resume needs a FRESH allocator: the "
+                             "snapshot re-materializes every lane's "
+                             "blocks via re-prefill")
+        by_rid = {d["rid"]: Request(**{**d, "prompt": tuple(d["prompt"])})
+                  for d in snap.requests}
+        st = _RunState(
+            pending=collections.deque(by_rid[r] for r in snap.pending),
+            queue=collections.deque(),
+            slots=[None] * self.n_slots,
+            completions=[Completion(**{**d, "tokens": tuple(d["tokens"])})
+                         for d in snap.completions],
+            cancellations=[Cancellation(
+                **{**d, "tokens": tuple(d["tokens"])})
+                for d in snap.cancellations])
+        st.tick = int(snap.tick)
+        for f in _COUNTER_FIELDS:
+            setattr(st, f, snap.counters.get(f, 0))
+        self._resume = {int(rid): {"tokens": list(m["tokens"]),
+                                   "admitted": m["admitted"],
+                                   "first_token": m["first_token"]}
+                        for rid, m in snap.resume.items()}
+        self._prefix_state = {}
+        self._evictions = int(snap.evictions)
+        for rec in snap.lanes:
+            if rec is None:
+                continue
+            self._resume[rec["rid"]] = {
+                "tokens": list(rec["tokens"]),
+                "admitted": rec["admitted"],
+                "first_token": rec["first_token"]}
+            st.queue.append(by_rid[rec["rid"]])
+        for rid in snap.queue:
+            st.queue.append(by_rid[rid])
+        if snap.ladder and self.ladder is not None:
+            st.rung = snap.ladder.get("rung", 0)
+            st.max_rung = snap.ladder.get("max_rung", st.rung)
+            st.hot = snap.ladder.get("hot", 0)
+            st.cool = snap.ladder.get("cool", 0)
+            st.ladder_events = list(snap.ladder.get("events", []))
+            st.rung_ticks = {
+                int(k): v for k, v in
+                (snap.ladder.get("rung_ticks") or {}).items()}
+        if (snap.stats and self.stats is not None
+                and hasattr(self.stats, "load_state")):
+            self.stats.load_state(snap.stats)
+        self._st = st
+        return self._loop(st, max_ticks, stop_tick)

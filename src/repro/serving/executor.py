@@ -203,7 +203,7 @@ class PagedJaxExecutor:
                  compact: bool = False,
                  lane_buckets: Optional[Sequence[int]] = None,
                  chunk: int = 0, kv_quant: str = "none",
-                 kv_retain: int = 0):
+                 kv_retain: int = 0, track_mass: bool = False):
         if kv_block < 1:
             raise ValueError(f"kv_block must be >= 1, got {kv_block}")
         if kv_retain < 0:
@@ -212,9 +212,12 @@ class PagedJaxExecutor:
         self.cfg = cfg
         self.kv_quant = str(kv_quant)
         self.kv_retain = int(kv_retain)
-        if self.kv_retain:
+        if self.kv_retain or track_mass:
             # retention ranks blocks by attention mass — decode steps must
-            # account it, so bake track_mass into the jitted settings
+            # account it, so bake track_mass into the jitted settings.
+            # `track_mass=True` alone pays the accounting without a
+            # standing retention cap, for engines whose degradation
+            # ladder may engage `bend_retain` mid-run.
             base = settings or M.ModelSettings()
             settings = dataclasses.replace(
                 base, attn=dataclasses.replace(base.attn, track_mass=True))
@@ -253,7 +256,8 @@ class PagedJaxExecutor:
         self.decodes = 0
         self.chunk_calls = 0
         # lane -> per-logical-block attention mass from the LAST decode
-        # tick (only populated when kv_retain forces track_mass)
+        # tick (only populated when kv_retain or track_mass enables the
+        # accounting)
         self._last_mass: Dict[int, np.ndarray] = {}
 
     def _steps(self):
@@ -295,6 +299,16 @@ class PagedJaxExecutor:
         arr = np.zeros((w,), np.int32)                  # pad -> scratch
         arr[:len(ids)] = list(ids)
         self.pool = reset_step(self.pool, jnp.asarray(arr))
+
+    def reset(self) -> None:
+        """Return this executor to as-fresh state WITHOUT rebuilding its
+        device buffers: the whole pool's validity metadata is invalidated
+        (`serve_step.clear_pool`) and the per-lane chunk/mass bookkeeping
+        dropped. `Engine.resume` re-materializes every lane's KV via
+        re-prefill, so a reset executor is exactly as good as a new one
+        for restoring a snapshot — minus the allocation cost."""
+        self.pool = SS.clear_pool(self.pool)
+        self._last_mass = {}
 
     def decode_width(self, n_active: int) -> int:
         """The batch width a decode tick with `n_active` lanes computes at:

@@ -121,6 +121,90 @@ class LengthStats:
         return max(1.0, min(m + max(k, 0.0) * s, float(mx)))
 
 
+class OnlineLengthStats:
+    """Exponentially-weighted online written-length stats — the live
+    feedback loop closing the gap between the PROFILED distribution and
+    the traffic actually served. Seeded from a static `LengthStats`
+    (`base`), it is a drop-in for the engine's `stats=` parameter:
+    `expected_written` answers from the EW estimate once a bucket has
+    been observed and falls back to the profile until then, and the
+    engine calls `observe` on every completion, so optimistic
+    admission's `E[blocks] + k·sigma` reservation tracks the workload as
+    it drifts. `state_dict`/`load_state` ride the engine snapshot so a
+    restored engine keeps its learned distribution."""
+
+    def __init__(self, base: Optional[LengthStats] = None,
+                 alpha: float = 0.25):
+        if not (0.0 < alpha <= 1.0):
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.base = base
+        self.alpha = float(alpha)
+        # prompt bucket -> [ew_mean, ew_var, max_seen, n_observed]
+        self._ew: Dict[int, List[float]] = {}
+
+    def observe(self, prompt_len: int, written: int) -> None:
+        """Fold one completed request's written length into its bucket.
+        The first observation seeds the EW state from the profile's
+        bucket (so one outlier can't whipsaw the reservation), then each
+        update is a standard EW mean/variance step."""
+        p = int(prompt_len)
+        w = float(written)
+        cell = self._ew.get(p)
+        if cell is None:
+            if self.base is not None:
+                m0, s0, mx0 = self.base.by_prompt.get(
+                    p, (self.base.mean, self.base.std, self.base.max))
+                cell = [float(m0), float(s0) ** 2, float(mx0), 0.0]
+            else:
+                cell = [w, 0.0, w, 0.0]
+            self._ew[p] = cell
+        a = self.alpha
+        d = w - cell[0]
+        cell[0] += a * d
+        cell[1] = (1.0 - a) * (cell[1] + a * d * d)
+        cell[2] = max(cell[2], w)
+        cell[3] += 1.0
+
+    def expected_written(self, prompt_len: int, k: float = 0.0) -> float:
+        """`E[written | bucket] + k·sigma` from the EW estimate (profile
+        fallback for never-observed buckets), clamped to [1, max seen]."""
+        cell = self._ew.get(int(prompt_len))
+        if cell is None or cell[3] < 1:
+            if self.base is not None:
+                return self.base.expected_written(prompt_len, k)
+            return 1.0
+        m, var, mx = cell[0], cell[1], cell[2]
+        return max(1.0, min(m + max(k, 0.0) * (var ** 0.5), mx))
+
+    def sigma(self, prompt_len: int) -> float:
+        """The live per-bucket sigma (0 for unobserved buckets)."""
+        cell = self._ew.get(int(prompt_len))
+        return (cell[1] ** 0.5) if cell and cell[3] >= 1 else 0.0
+
+    def summary(self) -> Dict:
+        """What `ServeReport.observed_lengths` carries: observation count
+        plus the observation-weighted mean/sigma and per-bucket state."""
+        obs = sum(c[3] for c in self._ew.values())
+        if not obs:
+            return {"observations": 0}
+        mean = sum(c[0] * c[3] for c in self._ew.values()) / obs
+        sig = (sum(c[1] * c[3] for c in self._ew.values()) / obs) ** 0.5
+        return {"observations": int(obs),
+                "mean_written": round(mean, 3),
+                "sigma_written": round(sig, 3),
+                "by_prompt": {p: {"mean": round(c[0], 3),
+                                  "sigma": round(c[1] ** 0.5, 3),
+                                  "max": int(c[2]), "n": int(c[3])}
+                              for p, c in sorted(self._ew.items())}}
+
+    def state_dict(self) -> Dict:
+        return {str(p): list(c) for p, c in self._ew.items()}
+
+    def load_state(self, state: Dict) -> None:
+        self._ew = {int(p): [float(x) for x in c]
+                    for p, c in state.items()}
+
+
 def length_stats(trace: Sequence[Request]) -> LengthStats:
     """Per-prompt-bucket (mean, std, max) of written positions."""
     if not trace:

@@ -464,3 +464,151 @@ def test_scripted_executor_is_suffix_consistent():
     prompt = [5, 9, 2, 44]
     assert ex.prefill(0, prompt) == ex.decode([prompt[-1]],
                                               [len(prompt) - 1])[0]
+
+
+# --- named ledger errors and idempotent release ------------------------------
+
+def test_double_free_and_negative_refcount_are_named_errors():
+    from repro.serving import DoubleFree, NegativeRefcount
+    a = BlockAllocator(4, 2)
+    a.reserve(0, 2)
+    a.alloc(0)
+    a.free(0)
+    with pytest.raises(DoubleFree):
+        a.free(0)
+    a.create_prefix("sys", 1)
+    a.acquire_prefix("sys")
+    a.release_prefix("sys")
+    with pytest.raises(NegativeRefcount):
+        a.release_prefix("sys")
+
+
+def test_free_block_rejects_foreign_and_repeated_blocks():
+    from repro.serving import DoubleFree
+    a = BlockAllocator(4, 2)
+    a.reserve(0, 2)
+    bid = a.alloc(0)
+    a.free_block(0, bid)
+    with pytest.raises(DoubleFree):
+        a.free_block(0, bid)            # already returned
+    with pytest.raises(DoubleFree):
+        a.free_block(7, bid)            # rid never reserved
+
+
+def test_release_prefix_missing_ok_is_idempotent():
+    from repro.serving import NegativeRefcount
+    a = BlockAllocator(4, 2)
+    a.release_prefix("never-created", missing_ok=True)   # no-op
+    a.create_prefix("sys", 1)
+    a.acquire_prefix("sys")
+    a.release_prefix("sys", missing_ok=True)
+    a.release_prefix("sys", missing_ok=True)             # still a no-op
+    with pytest.raises(NegativeRefcount):
+        a.release_prefix("sys")
+    assert a.audit() == []
+
+
+# --- mid-run pool shrinks ----------------------------------------------------
+
+def test_shrink_retires_free_blocks_immediately():
+    a = BlockAllocator(8, 2)
+    assert a.shrink(3) == 3
+    assert a.n_blocks == 5 and a.retired_blocks == 3
+    assert a.shrink_debt == 0 and a.audit() == []
+
+
+def test_shrink_on_busy_pool_becomes_debt_collected_on_free():
+    """Live blocks are never yanked: shrinking a fully-owned pool books
+    DEBT, and the blocks retire as the lanes naturally free them."""
+    a = BlockAllocator(4, 2, reservation="expected")
+    a.reserve(0, 4)
+    for _ in range(4):
+        a.alloc(0)
+    assert a.shrink(2) == 0
+    assert a.shrink_debt == 2 and a.n_blocks == 4
+    assert a.committed > 0                # pressure visible to the ladder
+    a.free(0)
+    assert a.shrink_debt == 0 and a.n_blocks == 2
+    assert a.free_blocks == 2 and a.retired_blocks == 2
+    assert a.audit() == []
+
+
+def test_shrink_always_leaves_one_block():
+    a = BlockAllocator(4, 2)
+    a.shrink(99)
+    assert a.n_blocks == 1 and a.audit() == []
+
+
+# --- the ledger auditor ------------------------------------------------------
+
+def test_audit_clean_on_fresh_and_busy_pools():
+    a = BlockAllocator(6, 2)
+    assert a.audit() == []
+    a.reserve(0, 2)
+    a.alloc(0)
+    a.create_prefix("sys", 1)
+    assert a.audit() == []
+
+
+def test_audit_detects_vanished_and_duplicated_blocks():
+    a = BlockAllocator(4, 2)
+    a._free.popleft()                     # a block vanishes
+    assert a.audit() != []
+    b = BlockAllocator(4, 2)
+    b._free.append(b._free[0])            # a block exists twice
+    assert b.audit() != []
+
+
+def test_audit_detects_retired_block_back_in_circulation():
+    a = BlockAllocator(4, 2)
+    a.shrink(1)
+    zombie = next(iter(a._retired_ids))
+    a._free.append(zombie)
+    assert any("retired" in p for p in a.audit())
+
+
+# --- hypothesis: engine survives random fault interleavings ------------------
+
+def test_engine_property_random_fault_interleavings():
+    """Whatever seeded fault mix lands — transient executor/allocator
+    faults, pool shrinks, chaos cancels, lane stalls, deadlines — the
+    engine must drain with every request accounted for, a whole ledger
+    (strict every-tick audit + post-run leak check), and every
+    completion token-identical to the fault-free run."""
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="hypothesis not installed (optional test dep)")
+    from repro.serving import (ChaosAllocator, ChaosExecutor, Engine,
+                               FaultPlan, LadderConfig, leak_check,
+                               survivor_mismatches)
+    given = hypothesis.given
+    st = hypothesis.strategies
+
+    trace = [_req(i, prompt_len=4 + (i % 2) * 4, max_new=4 + (i % 3) * 4,
+                  arrival=i) for i in range(8)]
+    stats = length_stats(trace)
+    clean = Engine(ScriptedExecutor(VOCAB), 4,
+                   allocator=BlockAllocator(16, 4, reservation="expected"),
+                   chunk_prefill=4, stats=stats).run(trace)
+
+    @hypothesis.settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 10_000), st.floats(0, 0.2), st.floats(0, 0.2),
+           st.integers(0, 2), st.integers(0, 2), st.booleans())
+    def run(seed, exec_rate, alloc_rate, n_shrinks, n_stalls, deadline):
+        plan = FaultPlan.generate(seed, ticks=64, n_requests=len(trace),
+                                  n_lanes=4, exec_rate=exec_rate,
+                                  alloc_rate=alloc_rate,
+                                  n_shrinks=n_shrinks, shrink_frac=0.25,
+                                  n_cancels=1, n_stalls=n_stalls)
+        alloc = ChaosAllocator(16, 4, "expected", plan=plan)
+        eng = Engine(ChaosExecutor(ScriptedExecutor(VOCAB), plan), 4,
+                     allocator=alloc, chunk_prefill=4, stats=stats,
+                     faults=plan, deadline=(40 if deadline else 0),
+                     ladder=LadderConfig(patience=1, high=0.9),
+                     audit="strict", max_exec_retries=10)
+        rep = eng.run(trace, max_ticks=20_000)
+        assert len(rep.completions) + len(rep.cancellations) == len(trace)
+        assert rep.audit_failures == 0
+        assert leak_check(alloc) == []
+        assert survivor_mismatches(rep, clean) == []
+
+    run()
